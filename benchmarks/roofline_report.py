@@ -1,0 +1,48 @@
+"""Roofline report: aggregates results/dryrun/*.json into the §Roofline
+table (one row per arch x shape x mesh: the three terms, the dominant
+bottleneck, and MODEL_FLOPS/HLO_FLOPS)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(tag: str = ""):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") != tag:
+            continue
+        cells.append(r)
+    return cells
+
+
+def roofline_rows():
+    rows = []
+    for r in load_cells():
+        if not r.get("ok"):
+            rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                         0.0, f"FAILED={r.get('error', '?')[:60]}"))
+            continue
+        rf = r["roofline"]
+        dom_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / dom_s if dom_s else 0.0
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            dom_s * 1e6,
+            f"compute_s={rf['compute_s']:.4g};memory_s={rf['memory_s']:.4g};"
+            f"collective_s={rf['collective_s']:.4g};"
+            f"bottleneck={rf['bottleneck']};"
+            f"roofline_frac={frac:.3f};"
+            f"model_vs_hlo={rf.get('model_vs_hlo_flops', 0):.3f}"))
+    if not rows:
+        rows.append(("roofline/none", 0.0,
+                     "run `python -m repro.launch.dryrun --all` first"))
+    return rows
+
+
+ALL = [roofline_rows]

@@ -1,0 +1,54 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  * paper_figs      — the paper's evaluation via the cycle/energy model
+                      (Figs. 4/7/13/14/15/16, Table I)
+  * system_bench    — measured JAX system at smoke scale (Figs. 4/5) +
+                      the PPU traffic ledger
+  * roofline_report — §Roofline terms from the dry-run artifacts
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--section all|paper|system|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(rows) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "paper", "system", "roofline"])
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    if args.section in ("all", "paper"):
+        from benchmarks import paper_figs
+        for fn in paper_figs.ALL:
+            t0 = time.perf_counter()
+            rows = fn()
+            _emit(rows)
+            print(f"_meta/{fn.__name__},"
+                  f"{(time.perf_counter() - t0) * 1e6:.3f},bench_runtime")
+    if args.section in ("all", "system"):
+        from benchmarks import system_bench
+        for fn in system_bench.ALL:
+            t0 = time.perf_counter()
+            rows = fn()
+            _emit(rows)
+            print(f"_meta/{fn.__name__},"
+                  f"{(time.perf_counter() - t0) * 1e6:.3f},bench_runtime")
+    if args.section in ("all", "roofline"):
+        from benchmarks import roofline_report
+        for fn in roofline_report.ALL:
+            _emit(fn())
+
+
+if __name__ == "__main__":
+    main()

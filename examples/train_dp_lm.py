@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-parameter-class LM with DP-SGD(R),
+checkpointing, preemption handling, and privacy accounting.
+
+    PYTHONPATH=src python examples/train_dp_lm.py                  # ~20M, fast
+    PYTHONPATH=src python examples/train_dp_lm.py --preset 100m    # full-size
+
+The 100m preset is the paper-shaped run (a few hundred steps); the default
+preset is the same system at a size a CPU container iterates quickly.
+Interrupt with Ctrl-C / SIGTERM: the run checkpoints and resumes exactly.
+"""
+import argparse
+from dataclasses import replace
+
+import jax
+
+from repro.configs import ARCHS
+from repro.configs.base import (DPConfig, OptimConfig, ShapeConfig,
+                                TrainConfig)
+from repro.models.transformer import build_model
+from repro.train import Trainer
+
+PRESETS = {
+    # name: (n_layers, d_model, n_heads, d_ff, vocab, seq, batch, steps)
+    "20m": (6, 384, 6, 1024, 4096, 128, 8, 120),
+    "100m": (12, 768, 12, 2048, 32064, 256, 16, 300),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="20m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--noise", type=float, default=0.8)
+    ap.add_argument("--clip", type=float, default=1.0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_dp_lm")
+    args = ap.parse_args()
+
+    L, d, H, ff, vocab, seq, batch, steps = PRESETS[args.preset]
+    steps = args.steps or steps
+    arch = replace(ARCHS["phi3-mini-3.8b"], name=f"dp-lm-{args.preset}",
+                   n_layers=L, d_model=d, n_heads=H, n_kv_heads=H,
+                   head_dim=d // H, d_ff=ff, vocab=vocab)
+    model = build_model(arch, param_dtype="float32", compute_dtype="float32")
+    n = arch.param_count()
+    print(f"[dp_lm] {arch.name}: {n/1e6:.1f}M params, seq {seq}, batch {batch}")
+
+    shape = ShapeConfig("dp_lm", seq_len=seq, global_batch=batch, kind="train")
+    cfg = TrainConfig(
+        arch=arch.name, steps=steps, log_every=10, ckpt_every=50,
+        ckpt_dir=args.ckpt_dir, ckpt_keep=2,
+        dp=DPConfig(algo="dpsgd_r", clip_norm=args.clip,
+                    noise_multiplier=args.noise),
+        optim=OptimConfig(name="adamw", lr=3e-4, warmup_steps=20,
+                          total_steps=steps, weight_decay=0.01),
+    )
+    trainer = Trainer(model, cfg, shape)
+    state = trainer.restore_or_init(jax.random.PRNGKey(0))
+    state = trainer.run(state)   # SIGTERM-safe
+    eps = trainer.accountant.epsilon_at(int(state.step))
+    print(f"[dp_lm] step {int(state.step)}: "
+          f"loss {trainer.history[-1]['loss']:.4f}, eps={eps:.2f}")
+    print(f"[dp_lm] clipped_frac last: "
+          f"{trainer.history[-1]['clipped_frac']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Architecture registry: ``get_arch(id)``, ``list_archs()``, ``reduced(arch)``."""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Dict, List
+
+from repro.configs.base import (ATTN, MAMBA, ArchConfig, DPConfig, MambaConfig,
+                                MeshConfig, MoEConfig, OptimConfig, SHAPES,
+                                ShapeConfig, TrainConfig, apply_overrides,
+                                parse_set_args, shape_applicable)
+
+from repro.configs.phi3_mini_3_8b import ARCH as _phi3
+from repro.configs.stablelm_3b import ARCH as _stablelm
+from repro.configs.starcoder2_7b import ARCH as _starcoder2
+from repro.configs.chatglm3_6b import ARCH as _chatglm3
+from repro.configs.musicgen_medium import ARCH as _musicgen
+from repro.configs.mamba2_1_3b import ARCH as _mamba2
+from repro.configs.chameleon_34b import ARCH as _chameleon
+from repro.configs.grok_1_314b import ARCH as _grok1
+from repro.configs.deepseek_moe_16b import ARCH as _dsmoe
+from repro.configs.jamba_1_5_large_398b import ARCH as _jamba
+
+ARCHS: Dict[str, ArchConfig] = {
+    a.name: a
+    for a in (_phi3, _stablelm, _starcoder2, _chatglm3, _musicgen,
+              _mamba2, _chameleon, _grok1, _dsmoe, _jamba)
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCHS)
+
+
+def reduced(arch: ArchConfig) -> ArchConfig:
+    """Tiny same-family variant for CPU smoke tests: same layer pattern /
+    feature set, small dims. Preserves GQA ratio, MoE topology, hybrid
+    interleave (one pattern period)."""
+    n_layers = len(arch.layer_pattern) if arch.layer_pattern else 2
+    n_heads = 4 if arch.n_heads else 0
+    ratio = max(arch.n_heads // max(arch.n_kv_heads, 1), 1) if arch.n_heads else 1
+    n_kv = max(n_heads // min(ratio, n_heads), 1) if n_heads else 0
+    moe = arch.moe
+    if moe.enabled:
+        moe = replace(moe, num_experts=4, top_k=min(moe.top_k, 2),
+                      d_expert=64,
+                      d_shared=32 * moe.num_shared_experts,
+                      d_ff_dense=128 if moe.d_ff_dense else 0,
+                      moe_skip_first=min(moe.moe_skip_first, 1))
+    mamba = replace(arch.mamba, d_state=16, head_dim=16, chunk=16)
+    return replace(
+        arch,
+        name=arch.name + "-reduced",
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=16 if arch.n_heads else 0,
+        d_ff=128 if arch.d_ff else 0,
+        vocab=256,
+        moe=moe,
+        mamba=mamba,
+        use_fsdp=False,
+    )
+
+
+__all__ = [
+    "ARCHS", "get_arch", "list_archs", "reduced", "shape_applicable",
+    "ArchConfig", "ShapeConfig", "MeshConfig", "DPConfig", "TrainConfig",
+    "OptimConfig", "MoEConfig", "MambaConfig", "SHAPES", "ATTN", "MAMBA",
+    "apply_overrides", "parse_set_args",
+]

@@ -1,0 +1,279 @@
+"""Config system: architecture / shape / mesh / DP / train configs.
+
+Every assigned architecture is an ``ArchConfig`` in its own module under
+``repro.configs``; the registry maps ``--arch <id>`` to it.  ``reduced()``
+produces the CPU-smoke-test variant of any config (same family / layer
+pattern, tiny dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+# Layer kinds used in ``layer_pattern``.
+ATTN = "attn"
+MAMBA = "mamba"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0            # routed experts (0 = dense FFN)
+    top_k: int = 2
+    num_shared_experts: int = 0     # DeepSeek-style always-on experts
+    capacity_factor: float = 1.25
+    d_expert: int = 0               # per-expert FFN hidden dim
+    d_shared: int = 0               # shared-expert FFN hidden dim (total)
+    # which layers are MoE: every `moe_period` layers, starting at `moe_offset`
+    moe_period: int = 1
+    moe_offset: int = 0
+    moe_skip_first: int = 0         # first N layers stay dense (deepseek-moe)
+    d_ff_dense: int = 0             # dense-FFN width for non-MoE layers (0 -> d_ff)
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256                # SSD chunk length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | ssm | moe | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                    # query heads (0 for attn-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    # attention details
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0         # partial rotary (stablelm 0.25, chatglm 0.5)
+    qk_norm: bool = False           # chameleon-style qk layernorm
+    mlp_act: str = "swiglu"         # swiglu | gelu
+    tie_embeddings: bool = False
+    # hybrid layer pattern: e.g. jamba = [MAMBA]*3+[ATTN]+[MAMBA]*4 per period.
+    # None -> all ATTN (or all MAMBA for family=="ssm").
+    layer_pattern: Optional[Tuple[str, ...]] = None
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mamba: MambaConfig = field(default_factory=MambaConfig)
+    # modality frontend stub: inputs are precomputed embeddings, not token ids
+    embed_stub: bool = False
+    # memory plan: shard params/opt-state over data axis too (FSDP/ZeRO-3-lite)
+    use_fsdp: bool = False
+    norm_eps: float = 1e-5
+    source: str = ""                # provenance note
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    def pattern(self) -> Tuple[str, ...]:
+        if self.layer_pattern is not None:
+            per = self.layer_pattern
+            assert self.n_layers % len(per) == 0, (self.name, self.n_layers, len(per))
+            return per * (self.n_layers // len(per))
+        if self.family == "ssm":
+            return (MAMBA,) * self.n_layers
+        return (ATTN,) * self.n_layers
+
+    def is_moe_layer(self, i: int) -> bool:
+        m = self.moe
+        return (m.enabled and i >= m.moe_skip_first
+                and (i % m.moe_period == m.moe_offset))
+
+    def ff_dense(self) -> int:
+        return self.moe.d_ff_dense or self.d_ff
+
+    def param_count(self) -> int:
+        """Total parameter count (exact, matches init)."""
+        from repro.models.transformer import abstract_params  # lazy, avoids cycle
+        import jax
+        tree = abstract_params(self)
+        return sum(_size(p.shape) for p in jax.tree.leaves(tree))
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params: MoE counts top_k + shared experts only."""
+        total = self.param_count()
+        if not self.moe.enabled:
+            return total
+        # subtract inactive routed experts
+        m = self.moe
+        n_moe_layers = sum(self.is_moe_layer(i) for i in range(self.n_layers))
+        per_expert = 3 * self.d_model * m.d_expert  # swiglu w1,w3,w2
+        inactive = n_moe_layers * (m.num_experts - m.top_k) * per_expert
+        return total - inactive
+
+
+def _size(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned): train / prefill / decode / long-context decode
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k requires sub-quadratic sequence mixing: only ssm/hybrid run it.
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k":
+        return arch.family in LONG_OK_FAMILIES
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Mesh / DP / optim / train configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class DPConfig:
+    enabled: bool = True
+    algo: str = "dpsgd_r"          # sgd | dpsgd | dpsgd_r
+    clip_norm: float = 1.0         # C
+    noise_multiplier: float = 1.0  # sigma
+    delta: float = 1e-5
+    microbatch: int = 0            # vanilla dpsgd: vmap chunk (0 = whole batch)
+    norm_strategy: str = "auto"    # auto | materialize | gram
+    use_kernels: bool = False      # route norm rules through Pallas kernels
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    name: str = "adamw"            # sgd | adamw | adam8bit
+    lr: float = 1e-3
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "warmup_cosine"  # constant | warmup_cosine
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    momentum: float = 0.9
+    block_size: int = 256          # adam8bit quantization block
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    arch: str = "phi3-mini-3.8b"
+    shape: str = "train_4k"
+    seed: int = 0
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    remat: str = "block"           # none | block  (activation checkpointing)
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    grad_accum: int = 1
+    compress_pod_grads: bool = False  # int8 + error-feedback on pod axis
+    zero1: bool = True             # shard opt state over data axis
+    dp: DPConfig = field(default_factory=DPConfig)
+    optim: OptimConfig = field(default_factory=OptimConfig)
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    data_source: str = "synthetic"  # synthetic | memmap:<path>
+    watchdog_factor: float = 3.0    # straggler logging threshold
+
+
+# ---------------------------------------------------------------------------
+# --set a.b=c overrides (tiny but real config-override system)
+# ---------------------------------------------------------------------------
+
+def _coerce(old: Any, s: str) -> Any:
+    if isinstance(old, bool):
+        return s.lower() in ("1", "true", "yes")
+    if isinstance(old, int):
+        return int(s)
+    if isinstance(old, float):
+        return float(s)
+    if isinstance(old, tuple):
+        parts = [p for p in s.strip("()").split(",") if p]
+        elt = old[0] if old else ""
+        return tuple(_coerce(elt, p.strip()) for p in parts)
+    return s
+
+
+def apply_overrides(cfg: Any, overrides: Dict[str, str]) -> Any:
+    """Apply {'dp.clip_norm': '0.5', 'optim.lr': '3e-4'} style overrides to a
+    (possibly nested) frozen dataclass."""
+    for key, val in overrides.items():
+        parts = key.split(".")
+        cfg = _apply_one(cfg, parts, val)
+    return cfg
+
+
+def _apply_one(cfg: Any, parts, val: str) -> Any:
+    name = parts[0]
+    if not dataclasses.is_dataclass(cfg) or not hasattr(cfg, name):
+        raise KeyError(f"unknown config key {'.'.join(parts)} on {type(cfg).__name__}")
+    cur = getattr(cfg, name)
+    if len(parts) == 1:
+        return replace(cfg, **{name: _coerce(cur, val)})
+    return replace(cfg, **{name: _apply_one(cur, parts[1:], val)})
+
+
+def parse_set_args(pairs) -> Dict[str, str]:
+    out = {}
+    for p in pairs or []:
+        k, _, v = p.partition("=")
+        if not _ or not k:
+            raise ValueError(f"--set expects key=value, got {p!r}")
+        out[k] = v
+    return out

@@ -1,0 +1,13 @@
+"""DP-SGD core: the paper's contribution as a composable JAX module."""
+from repro.core.accountant import PrivacyAccountant, compute_epsilon
+from repro.core.algo import make_clipped_sum_fn, make_noisy_grad_fn
+from repro.core.clipping import clip_and_sum, clip_factors, tree_per_example_norm_sq
+from repro.core.context import DPContext
+from repro.core.noise import add_noise
+
+__all__ = [
+    "PrivacyAccountant", "compute_epsilon", "make_noisy_grad_fn",
+    "make_clipped_sum_fn",
+    "clip_and_sum", "clip_factors", "tree_per_example_norm_sq",
+    "DPContext", "add_noise",
+]

@@ -1,0 +1,215 @@
+"""Algorithm 1 of the paper, as composable JAX gradient transformations.
+
+``make_noisy_grad_fn(loss_fn, dp, grad_accum)`` returns
+
+    fn(params, batch, key) -> (grads, metrics)
+
+for ``dp.algo`` in:
+
+* ``"sgd"``      — non-private baseline (paper §II-B): mean-loss gradient.
+* ``"dpsgd"``    — vanilla DP-SGD (lines 15–25): per-example grads via
+                   vmap(grad) under a scan over microbatches, explicit
+                   norm/clip/reduce post-processing, Gaussian noise.
+* ``"dpsgd_r"``  — reweighted DP-SGD(R) (lines 27–42, the paper's baseline):
+                   pass 1 = per-example norms via the DPContext side-channel
+                   (no per-example grad materialization); pass 2 = backprop
+                   of the clip-reweighted loss; noise.
+
+``grad_accum > 1`` scans the per-algorithm *clipped-sum* over microbatches
+(per-example clipping is self-contained per microbatch, so accumulation is
+exact); noise is added once per step, after the full-batch reduction —
+identical privacy accounting and identical update to grad_accum=1.
+
+All three produce gradients in the same tree/dtype (f32), so the optimizer
+is agnostic.  ``dpsgd`` and ``dpsgd_r`` produce *identical* updates for the
+same (params, batch, key) — property-tested in tests/test_dp_core.py.
+
+loss_fn contract: ``loss_fn(params, batch, ctx) -> (per_example_losses, ctx)``
+with ``per_example_losses: (B,) float32``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DPConfig
+from repro.core import clipping, noise
+from repro.core.context import DPContext
+
+
+def _batch_size(batch) -> int:
+    return jax.tree.leaves(batch)[0].shape[0]
+
+
+def _metrics(losses, nsq, clip_norm):
+    n = jnp.sqrt(jnp.maximum(nsq, 0.0))
+    return {
+        "loss": jnp.mean(losses),
+        "grad_norm_mean": jnp.mean(n),
+        "grad_norm_max": jnp.max(n),
+        "clipped_frac": jnp.mean((n > clip_norm).astype(jnp.float32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-algorithm clipped-sum kernels:  (params, microbatch) ->
+#   (Σ_i c_i g_i  [f32 tree],  (losses (b,), nsq (b,)))
+# ---------------------------------------------------------------------------
+
+def _sgd_sum(loss_fn):
+    def fn(params, batch):
+        b = _batch_size(batch)
+        def sum_loss(p):
+            losses, _ = loss_fn(p, batch, DPContext.off())
+            return jnp.sum(losses), losses
+        (_, losses), grads = jax.value_and_grad(sum_loss, has_aux=True)(params)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return grads, (losses, jnp.zeros((b,), jnp.float32))
+    return fn
+
+
+def _dpsgd_sum(loss_fn, dp: DPConfig):
+    def fn(params, batch):
+        B = _batch_size(batch)
+        mb = dp.microbatch or B
+        assert B % mb == 0, (B, mb)
+
+        def one_example_grad(p, ex):
+            def l(p_):
+                ex1 = jax.tree.map(lambda a: a[None], ex)
+                losses, _ = loss_fn(p_, ex1, DPContext.off())
+                return losses[0]
+            return jax.value_and_grad(l)(p)
+
+        def microbatch_step(acc, chunk):
+            losses, gb = jax.vmap(lambda ex: one_example_grad(params, ex))(chunk)
+            summed, nsq = clipping.clip_and_sum(gb, dp.clip_norm)
+            acc = jax.tree.map(lambda a, s: a + s.astype(jnp.float32),
+                               acc, summed)
+            return acc, (losses, nsq)
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        chunks = jax.tree.map(lambda a: a.reshape((B // mb, mb) + a.shape[1:]),
+                              batch)
+        summed, (losses, nsq) = jax.lax.scan(microbatch_step, zeros, chunks)
+        return summed, (losses.reshape(-1), nsq.reshape(-1))
+    return fn
+
+
+def _dpsgd_r_sum(loss_fn, dp: DPConfig):
+    def fn(params, batch):
+        B = _batch_size(batch)
+
+        # ---- pass 1: per-example grad norms via the side-channel --------
+        def pass1(p, acc0):
+            ctx = DPContext(acc=acc0, mode="norm", strategy=dp.norm_strategy,
+                            use_kernels=dp.use_kernels)
+            losses, ctx = loss_fn(p, batch, ctx)
+            return (jnp.sum(losses), ctx.acc), losses
+
+        acc0 = jnp.zeros((B,), jnp.float32)
+        _, pull, losses = jax.vjp(pass1, params, acc0, has_aux=True)
+        # params cotangent is discarded -> its weight-grad GEMMs are DCE'd.
+        _, nsq = pull((jnp.ones(()), jnp.zeros((B,), jnp.float32)))
+
+        c = clipping.clip_factors(nsq, dp.clip_norm)           # line 35
+
+        # ---- pass 2: backprop of the reweighted loss --------------------
+        def reweighted_loss(p):
+            ls, _ = loss_fn(p, batch, DPContext.off())
+            return jnp.sum(jax.lax.stop_gradient(c) * ls)      # line 36
+
+        grads = jax.grad(reweighted_loss)(params)              # line 39
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return grads, (losses, nsq)
+    return fn
+
+
+def _dpsgd_r1f_sum(loss_fn, dp: DPConfig):
+    """Single-forward DP-SGD(R) (beyond-paper, EXPERIMENTS.md §Perf).
+
+    The paper's DP-SGD(R) runs backpropagation twice, each with its own
+    forward pass.  But pass 2's forward is bit-identical to pass 1's, so we
+    take ONE ``jax.vjp`` and pull back twice through the shared residuals:
+
+      pullback(1_B, 0)  -> norm-channel cotangent  = per-example norms²
+                           (param cotangents discarded -> wgrad GEMMs DCE'd)
+      pullback(c,   0)  -> param cotangents of Σ cᵢ Lᵢ = clipped grad sum
+                           (norm-channel cotangent discarded -> norm-rule
+                            einsums DCE'd)
+
+    One forward (+ remat recompute inside each pullback) instead of two —
+    identical update to ``dpsgd_r``/``dpsgd`` (tested to equality).
+    """
+    def fn(params, batch):
+        B = _batch_size(batch)
+
+        def both(p, acc0):
+            ctx = DPContext(acc=acc0, mode="norm", strategy=dp.norm_strategy,
+                            use_kernels=dp.use_kernels)
+            losses, ctx = loss_fn(p, batch, ctx)
+            return (losses, ctx.acc), losses
+
+        acc0 = jnp.zeros((B,), jnp.float32)
+        _, pull, losses = jax.vjp(both, params, acc0, has_aux=True)
+        zero_acc = jnp.zeros((B,), jnp.float32)
+        _, nsq = pull((jnp.ones((B,), jnp.float32), zero_acc))
+        c = clipping.clip_factors(nsq, dp.clip_norm)
+        grads, _ = pull((jax.lax.stop_gradient(c), zero_acc))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return grads, (losses, nsq)
+    return fn
+
+
+def make_clipped_sum_fn(loss_fn: Callable, dp: DPConfig) -> Callable:
+    if dp.algo == "sgd" or not dp.enabled:
+        return _sgd_sum(loss_fn)
+    if dp.algo == "dpsgd":
+        return _dpsgd_sum(loss_fn, dp)
+    if dp.algo == "dpsgd_r":
+        return _dpsgd_r_sum(loss_fn, dp)
+    if dp.algo == "dpsgd_r1f":
+        return _dpsgd_r1f_sum(loss_fn, dp)
+    raise ValueError(f"unknown dp.algo {dp.algo!r}")
+
+
+# ---------------------------------------------------------------------------
+# top level: accumulate -> noise -> scale
+# ---------------------------------------------------------------------------
+
+def make_noisy_grad_fn(loss_fn: Callable, dp: DPConfig,
+                       grad_accum: int = 1) -> Callable:
+    csum = make_clipped_sum_fn(loss_fn, dp)
+    private = dp.enabled and dp.algo != "sgd"
+
+    def fn(params, batch, key):
+        B = _batch_size(batch)
+        if grad_accum == 1:
+            summed, (losses, nsq) = csum(params, batch)
+        else:
+            assert B % grad_accum == 0, (B, grad_accum)
+            chunks = jax.tree.map(
+                lambda a: a.reshape((grad_accum, B // grad_accum)
+                                    + a.shape[1:]), batch)
+
+            def body(acc, chunk):
+                s, (l, n) = csum(params, chunk)
+                return jax.tree.map(jnp.add, acc, s), (l, n)
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            summed, (losses, nsq) = jax.lax.scan(body, zeros, chunks)
+            losses, nsq = losses.reshape(-1), nsq.reshape(-1)
+
+        if private:
+            grads = noise.add_noise(summed, key, dp.noise_multiplier,
+                                    dp.clip_norm, B)           # lines 24/41
+            metrics = _metrics(losses, nsq, dp.clip_norm)
+        else:
+            grads = jax.tree.map(lambda g: g / B, summed)
+            metrics = {"loss": jnp.mean(losses)}
+        return grads, metrics
+
+    return fn

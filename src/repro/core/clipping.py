@@ -1,0 +1,32 @@
+"""Per-example gradient clipping (Algorithm 1 lines 22–23 / 35)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_factors(norm_sq: jax.Array, clip_norm: float) -> jax.Array:
+    """c_i = min(1, C / n_i), computed as C / max(n_i, C) (no div-by-zero)."""
+    n = jnp.sqrt(jnp.maximum(norm_sq, 0.0))
+    return clip_norm / jnp.maximum(n, clip_norm)
+
+
+def tree_per_example_norm_sq(grads_b) -> jax.Array:
+    """Per-example squared L2 norm over a tree of (B, ...) per-example grads."""
+    leaves = jax.tree.leaves(grads_b)
+    return sum(jnp.sum(jnp.square(g.astype(jnp.float32)),
+                       axis=tuple(range(1, g.ndim))) for g in leaves)
+
+
+def clip_and_sum(grads_b, clip_norm: float):
+    """Vanilla DP-SGD post-processing: per-example norms -> clip -> reduce.
+
+    grads_b: tree of (B, ...) per-example grads.
+    Returns (summed clipped grads tree, per-example norm_sq (B,)).
+    """
+    nsq = tree_per_example_norm_sq(grads_b)
+    c = clip_factors(nsq, clip_norm)
+    def _one(g):
+        cb = c.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+        return jnp.sum(g * cb, axis=0)
+    return jax.tree.map(_one, grads_b), nsq

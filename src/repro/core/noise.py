@@ -1,0 +1,26 @@
+"""Gaussian noise addition (Algorithm 1 line 24 / 41).
+
+Noise is keyed by (seed, step) and parameter path, so a restarted/retried
+step regenerates bit-identical noise — retries do not change the privacy
+accounting.  Under pjit the partitionable threefry PRNG generates each shard
+of the (globally-shaped) noise tensor locally without communication.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def add_noise(grads, key: jax.Array, noise_multiplier: float, clip_norm: float,
+              batch_size: int):
+    """(Σ clipped grads + N(0, σ²C²I)) / B, in f32."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    std = noise_multiplier * clip_norm
+    out = []
+    for g, k in zip(leaves, keys):
+        g = g.astype(jnp.float32)
+        if std > 0.0:
+            g = g + std * jax.random.normal(k, g.shape, jnp.float32)
+        out.append(g / batch_size)
+    return jax.tree.unflatten(treedef, out)

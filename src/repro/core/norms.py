@@ -1,0 +1,179 @@
+"""Per-example squared-gradient-norm rules.
+
+This is the TPU-native adaptation of DiVa's PPU insight: the per-example
+weight-gradient norm is computed *without ever materializing the per-example
+weight gradients in HBM*.  Two exact strategies exist for a dense site
+``y = x @ w`` with ``x: (B, G, T, d_in)``, ``gy: (B, G, T, d_out)``
+(G = group dims, e.g. experts; T = contraction/time dim):
+
+* ``materialize``: ``n_b² = Σ_g ‖x_{bg}ᵀ gy_{bg}‖²`` — a batched outer-product
+  GEMM whose (d_in, d_out) output tile is reduced to a scalar on the fly
+  (DiVa's outer-product engine + adder-tree PPU).  FLOPs ≈ 2·B·G·T·d_in·d_out.
+* ``gram`` (ghost norm): ``n_b² = Σ_g Σ_{t,t'} (x_t·x_{t'})(gy_t·gy_{t'})`` —
+  never forms the weight-shaped object at all.
+  FLOPs ≈ 2·B·G·T²·(d_in+d_out).
+
+``auto`` picks the cheaper one per call site (the Book-Keeping trick).
+
+The pure-XLA implementations below are **internally chunked** (lax.scan over
+tiles) so the transient intermediate stays under ``MAX_CHUNK_ELEMS`` global
+elements no matter the model scale — the same blocking the Pallas kernels
+do in VMEM, expressed at the XLA level.  Embedding norms use an exact
+O(B·T·d) sort+segment-sum rule instead of the O(B·T²·d) masked Gram.
+
+All accumulation is in float32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+# global-elements budget for any transient in the norm rules (f32)
+MAX_CHUNK_ELEMS = 2 ** 31
+
+
+def canon4(x: jax.Array) -> jax.Array:
+    """Canonicalize a dense-site operand to (B, G, T, d)."""
+    if x.ndim == 2:          # (B, d)
+        return x[:, None, None, :]
+    if x.ndim == 3:          # (B, T, d)
+        return x[:, None, :, :]
+    if x.ndim == 4:          # (B, G, T, d)
+        return x
+    raise ValueError(f"dense site operand must be 2/3/4-D, got {x.shape}")
+
+
+def flops_materialize(xs, gys) -> int:
+    b, g, t, di = xs
+    do = gys[-1]
+    return 2 * b * g * t * di * do
+
+
+def flops_gram(xs, gys) -> int:
+    b, g, t, di = xs
+    do = gys[-1]
+    return 2 * b * g * t * t * (di + do)
+
+
+def pick_strategy(strategy: str, x_shape, gy_shape) -> str:
+    if strategy != "auto":
+        return strategy
+    return ("materialize"
+            if flops_materialize(x_shape, gy_shape) <= flops_gram(x_shape, gy_shape)
+            else "gram")
+
+
+def _divisor_chunk(dim: int, budget_rows: int) -> int:
+    """Largest divisor of ``dim`` that is <= budget_rows (>=1)."""
+    budget_rows = max(1, min(dim, budget_rows))
+    for c in range(budget_rows, 0, -1):
+        if dim % c == 0:
+            return c
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# dense rules (chunked jnp; Pallas kernels mirror these in VMEM)
+# ---------------------------------------------------------------------------
+
+def dense_nsq_materialize(x: jax.Array, gy: jax.Array) -> jax.Array:
+    """(B,G,T,di),(B,G,T,do) -> (B,) squared per-example grad norms.
+    Chunked over d_in so the (B,G,bi,do) transient stays bounded."""
+    B, G, T, di = x.shape
+    do = gy.shape[-1]
+    bi = _divisor_chunk(di, max(8, MAX_CHUNK_ELEMS // max(B * G * do, 1)))
+    if bi == di:
+        g = jnp.einsum("bgti,bgto->bgio", x, gy, preferred_element_type=F32)
+        return jnp.sum(g * g, axis=(1, 2, 3))
+
+    def body(acc, i):
+        xs = jax.lax.dynamic_slice_in_dim(x, i * bi, bi, axis=3)
+        g = jnp.einsum("bgti,bgto->bgio", xs, gy, preferred_element_type=F32)
+        return acc + jnp.sum(g * g, axis=(1, 2, 3)), None
+
+    acc0 = jnp.zeros((B,), F32)
+    acc, _ = jax.lax.scan(body, acc0, jnp.arange(di // bi))
+    return acc
+
+
+def dense_nsq_gram(x: jax.Array, gy: jax.Array) -> jax.Array:
+    """Ghost norm, chunked over T so the (B,G,bt,T) Grams stay bounded."""
+    B, G, T, di = x.shape
+    do = gy.shape[-1]
+    bt = _divisor_chunk(T, max(8, MAX_CHUNK_ELEMS // max(2 * B * G * T, 1)))
+    if bt == T:
+        a = jnp.einsum("bgti,bgsi->bgts", x, x, preferred_element_type=F32)
+        c = jnp.einsum("bgto,bgso->bgts", gy, gy, preferred_element_type=F32)
+        return jnp.sum(a * c, axis=(1, 2, 3))
+
+    def body(acc, i):
+        xt = jax.lax.dynamic_slice_in_dim(x, i * bt, bt, axis=2)
+        gt = jax.lax.dynamic_slice_in_dim(gy, i * bt, bt, axis=2)
+        a = jnp.einsum("bgti,bgsi->bgts", xt, x, preferred_element_type=F32)
+        c = jnp.einsum("bgto,bgso->bgts", gt, gy, preferred_element_type=F32)
+        return acc + jnp.sum(a * c, axis=(1, 2, 3)), None
+
+    acc0 = jnp.zeros((B,), F32)
+    acc, _ = jax.lax.scan(body, acc0, jnp.arange(T // bt))
+    return acc
+
+
+def dense_nsq(x: jax.Array, gy: jax.Array, strategy: str = "auto",
+              use_kernels: bool = False) -> jax.Array:
+    x4, gy4 = canon4(x), canon4(gy)
+    strat = pick_strategy(strategy, x4.shape, gy4.shape)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        if strat == "materialize":
+            return kops.pegrad_norm(x4, gy4)
+        return kops.gram_norm(x4, gy4)
+    if strat == "materialize":
+        return dense_nsq_materialize(x4, gy4)
+    return dense_nsq_gram(x4, gy4)
+
+
+# ---------------------------------------------------------------------------
+# embedding rule
+# ---------------------------------------------------------------------------
+
+def embed_nsq(ids: jax.Array, gy: jax.Array, use_kernels: bool = False) -> jax.Array:
+    """Per-example sq-norm of the embedding-table gradient, exact under
+    repeated tokens.
+
+    Sort+segment-sum formulation, O(B·T·d):  rows of the per-example table
+    gradient are Σ_{t: id_t = v} gy_t, so n² = Σ_v ‖Σ_{t: id_t=v} gy_t‖².
+    (The O(B·T²·d) masked-Gram form lives in kernels/ref.py and the Pallas
+    kernel; this is the cheaper exact path for XLA.)
+    """
+    if use_kernels:
+        from repro.kernels import ops as kops
+        return kops.gram_norm(gy[:, None], gy[:, None],
+                              mask_ids=ids, square=False)
+    # batch-local under shard_map when distributed (the segment-sum scatter
+    # would otherwise be replicated by SPMD -> full-tensor all-reduce)
+    from repro.dist import runtime
+    return runtime.batch_local(_embed_nsq_sorted, 2)(ids, gy)
+
+
+def _embed_nsq_sorted(ids: jax.Array, gy: jax.Array) -> jax.Array:
+    B, T = ids.shape
+    d = gy.shape[-1]
+    order = jnp.argsort(ids, axis=1)
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    gy_s = jnp.take_along_axis(gy.astype(F32), order[..., None], axis=1)
+    new_seg = jnp.concatenate(
+        [jnp.ones((B, 1), jnp.int32),
+         (ids_s[:, 1:] != ids_s[:, :-1]).astype(jnp.int32)], axis=1)
+    seg = jnp.cumsum(new_seg, axis=1) - 1                      # (B,T) in [0,T)
+    sums = jnp.zeros((B, T, d), F32)
+    b_idx = jnp.arange(B)[:, None]
+    sums = sums.at[b_idx, seg].add(gy_s)
+    return jnp.sum(sums * sums, axis=(1, 2))
+
+
+def tap_nsq(gp_b: jax.Array) -> jax.Array:
+    """(B, *param_shape) per-example grads -> (B,) squared norms."""
+    g = gp_b.astype(F32)
+    return jnp.sum(g * g, axis=tuple(range(1, g.ndim)))

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (MemmapSource, SyntheticSource, batch_for,
+                                 make_source)
+
+__all__ = ["SyntheticSource", "MemmapSource", "make_source", "batch_for"]

@@ -1,0 +1,58 @@
+"""Fused clip-scale + batch-reduce kernel (vanilla DP-SGD post-processing,
+Algorithm 1 lines 23–24).
+
+Computes  out = Σ_b c_b · g_b  over per-example gradients g: (B, N) without
+materializing the clipped copies ḡ_b in HBM — each (bb, bn) tile is scaled
+by its clip factors and accumulated into the output tile in VMEM.  This is
+the kernel DiVa's PPU datapath performs between the GEMM engine drain and
+the DRAM writeback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _kernel(g_ref, c_ref, out_ref, *, n_b: int):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(F32)           # (bb, bn)
+    c = c_ref[...].astype(F32)           # (bb,)
+    out_ref[...] += jnp.sum(g * c[:, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bn", "interpret"))
+def clip_reduce(g: jax.Array, c: jax.Array, *, bb: int = 8, bn: int = 1024,
+                interpret: bool = True) -> jax.Array:
+    """g: (B, N) per-example grads, c: (B,) clip factors -> (N,) f32."""
+    B, N = g.shape
+    bb = min(bb, _rup(B, 8))
+    bn = min(bn, _rup(N, 128))
+    Bp, Np = _rup(B, bb), _rup(N, bn)
+    gp = jnp.pad(g, ((0, Bp - B), (0, Np - N)))
+    cp = jnp.pad(c, (0, Bp - B))
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_b=Bp // bb),
+        grid=(Np // bn, Bp // bb),
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda n, b: (b, n)),
+            pl.BlockSpec((bb,), lambda n, b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda n, b: (n,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), F32),
+        interpret=interpret,
+    )(gp, cp)
+    return out[:N]
+
+
+def _rup(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m

@@ -1,0 +1,133 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``INTERPRET`` defaults to True because this container is CPU-only; on a
+real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or the
+REPRO_PALLAS_INTERPRET=0 env var) and the same kernels compile to Mosaic.
+The DP core routes through these via ``DPConfig.use_kernels``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import clip_reduce as _cr
+from repro.kernels import gram_norm as _gn
+from repro.kernels import pegrad_norm as _pn
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def pegrad_norm(x4: jax.Array, gy4: jax.Array) -> jax.Array:
+    """(B,G,T,di),(B,G,T,do) -> (B,) fused per-example grad norms²."""
+    B, G, T, di = x4.shape
+    do = gy4.shape[-1]
+    out = _pn.pegrad_norm(x4.reshape(B * G, T, di), gy4.reshape(B * G, T, do),
+                          interpret=INTERPRET)
+    return out.reshape(B, G).sum(axis=1)
+
+
+def gram_norm(x4: jax.Array, gy4: jax.Array,
+              mask_ids: jax.Array | None = None,
+              square: bool = True) -> jax.Array:
+    """(B,G,T,di),(B,G,T,do)[, ids (B,T)] -> (B,) ghost norms²."""
+    B, G, T, di = x4.shape
+    do = gy4.shape[-1]
+    ids = None
+    if mask_ids is not None:
+        assert G == 1, "id mask only used for embeddings (G == 1)"
+        ids = mask_ids.reshape(B, T)
+    out = _gn.gram_norm(x4.reshape(B * G, T, di), gy4.reshape(B * G, T, do),
+                        ids, interpret=INTERPRET, square=square)
+    return out.reshape(B, G).sum(axis=1)
+
+
+def clip_reduce(g: jax.Array, c: jax.Array) -> jax.Array:
+    """(B, N), (B,) -> (N,) Σ_b c_b g_b."""
+    return _cr.clip_reduce(g, c, interpret=INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# flash attention: Pallas forward + blocked-jnp backward (custom_vjp)
+# ---------------------------------------------------------------------------
+
+# model layers route attention through the flash kernel when True (set by
+# launchers / REPRO_USE_FLASH=1); default off so the paper-faithful XLA
+# baseline stays measurable.
+USE_FLASH = os.environ.get("REPRO_USE_FLASH", "0") == "1"
+
+from functools import partial as _partial
+
+from repro.kernels import flash_attn as _fa
+
+F32 = jnp.float32
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, bwd_block: int = 512):
+    """q: (B,T,KV,rep,hd); k/v: (B,S,KV,hd) -> o: (B,T,KV,rep,hd)."""
+    o, _ = _flash_fwd_impl(q, k, v, causal)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, causal):
+    B, T, KV, rep, hd = q.shape
+    S = k.shape[1]
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * KV * rep, T, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    o, lse = _fa.flash_attn_fwd(qf, kf, vf, causal=causal, rep=rep,
+                                interpret=INTERPRET)
+    o = o.reshape(B, KV, rep, T, hd).transpose(0, 3, 1, 2, 4)
+    lse = lse.reshape(B, KV, rep, T)
+    return o, lse
+
+
+def _flash_vjp_fwd(q, k, v, causal, bwd_block):
+    o, lse = _flash_fwd_impl(q, k, v, causal)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_vjp_bwd(causal, bwd_block, res, do):
+    """Standard flash-attention backward, blocked over query chunks in pure
+    jnp (exact recompute from the saved row logsumexp)."""
+    q, k, v, o, lse = res
+    B, T, KV, rep, hd = q.shape
+    S = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    bq = _fa._rup(min(bwd_block, T), 1)
+    while T % bq:
+        bq -= 1
+    nq = T // bq
+    delta = jnp.sum(do.astype(F32) * o.astype(F32), axis=-1)  # (B,T,KV,rep)
+
+    kpos = jnp.arange(S)
+
+    def one_chunk(carry, i):
+        dk_acc, dv_acc = carry
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * bq, bq, axis=1)
+        qi, doi = sl(q), sl(do)
+        lsei, deltai = sl(lse.transpose(0, 3, 1, 2)), sl(delta)
+        qpos = i * bq + jnp.arange(bq)
+        s = jnp.einsum("btkrh,bskh->bkrts", qi, k,
+                       preferred_element_type=F32) * scale
+        if causal:
+            m = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(m[None, None, None], s, -1e30)
+        p = jnp.exp(s - lsei.transpose(0, 2, 3, 1)[..., None])   # (B,KV,rep,bq,S)
+        dv = jnp.einsum("bkrts,btkrh->bskh", p, doi.astype(F32))
+        dp = jnp.einsum("btkrh,bskh->bkrts", doi.astype(F32), v.astype(F32))
+        ds = p * (dp - deltai.transpose(0, 2, 3, 1)[..., None]) * scale
+        dq = jnp.einsum("bkrts,bskh->btkrh", ds, k.astype(F32))
+        dk = jnp.einsum("bkrts,btkrh->bskh", ds, qi.astype(F32))
+        return (dk_acc + dk, dv_acc + dv), dq
+
+    zeros_kv = jnp.zeros((B, S, KV, hd), F32)
+    (dk, dv), dqs = jax.lax.scan(
+        jax.checkpoint(one_chunk), (zeros_kv, zeros_kv), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, KV, rep, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)

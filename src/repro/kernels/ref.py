@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are allclose-tested against across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def pegrad_norm_ref(x: jax.Array, gy: jax.Array) -> jax.Array:
+    """x: (BG, T, di), gy: (BG, T, do) -> (BG,) ‖xᵀgy‖²_F per row."""
+    g = jnp.einsum("bti,bto->bio", x, gy, preferred_element_type=F32)
+    return jnp.sum(g * g, axis=(1, 2))
+
+
+def gram_norm_ref(x: jax.Array, gy: jax.Array,
+                  mask_ids: jax.Array | None = None,
+                  square: bool = True) -> jax.Array:
+    """x: (BG, T, di), gy: (BG, T, do) -> (BG,) Σ_{t,s} (x_t·x_s)(gy_t·gy_s).
+    square=False drops the x Gram (embedding rule: Σ gy_t·gy_s).
+    With mask_ids (BG, T): only pairs with equal ids contribute."""
+    c = jnp.einsum("bto,bso->bts", gy, gy, preferred_element_type=F32)
+    if square:
+        a = jnp.einsum("bti,bsi->bts", x, x, preferred_element_type=F32)
+        prod = a * c
+    else:
+        prod = c
+    if mask_ids is not None:
+        m = mask_ids[:, :, None] == mask_ids[:, None, :]
+        prod = jnp.where(m, prod, 0.0)
+    return jnp.sum(prod, axis=(1, 2))
+
+
+def clip_reduce_ref(g: jax.Array, c: jax.Array) -> jax.Array:
+    """g: (B, N) per-example grads, c: (B,) clip factors -> (N,) Σ_b c_b g_b."""
+    return jnp.einsum("bn,b->n", g.astype(F32), c.astype(F32))
+
+
+def flash_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool = True) -> jax.Array:
+    """Plain softmax attention oracle. q: (B,T,KV,rep,hd); k/v: (B,S,KV,hd)."""
+    B, T, KV, rep, hd = q.shape
+    S = k.shape[1]
+    s = jnp.einsum("btkrh,bskh->bkrts", q, k,
+                   preferred_element_type=F32) / jnp.sqrt(float(hd))
+    if causal:
+        mask = jnp.arange(S)[None, :] <= jnp.arange(T)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrts,bskh->btkrh", p.astype(v.dtype), v)
+    return o

@@ -1,0 +1,324 @@
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.
+
+NOTE: the first two executable lines below set XLA_FLAGS *before any other
+import* (jax locks the device count on first init) — per the brief.
+
+For every (architecture x applicable input shape) cell, on the single-pod
+(16,16) and multi-pod (2,16,16) production meshes:
+
+  * build the jitted step (train_step for train shapes, prefill/serve_step
+    for inference shapes) with full in/out shardings,
+  * ``.lower(**ShapeDtypeStruct inputs).compile()`` — no allocation,
+  * record ``memory_analysis`` / ``cost_analysis`` / parsed collective
+    bytes into a JSON artifact per cell (EXPERIMENTS.md §Dry-run reads
+    these; §Roofline derives its three terms from them).
+
+Usage:
+  python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --all --out results/dryrun
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST run before ANY other import, including `from repro...` — jax locks
+#   the device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
+from repro.configs.base import DPConfig, OptimConfig, TrainConfig
+from repro.core import make_noisy_grad_fn
+from repro.dist import (batch_shardings, cache_shardings, param_shardings,
+                        state_shardings)
+from repro.launch.costs import hlo_collective_bytes, jaxpr_costs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (collective_bytes, model_flops,
+                                   roofline_terms)
+from repro.models.transformer import build_model
+from repro.optim import make_optimizer
+from repro.train.state import TrainState
+
+DEFAULT_OUT = "results/dryrun"
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch, shape):
+    """Abstract model inputs for a given cell."""
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if arch.embed_stub:
+            batch = {"embeds": jax.ShapeDtypeStruct((B, T, arch.d_model),
+                                                    jnp.bfloat16),
+                     "labels": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+        else:
+            extra = 1 if shape.kind == "train" else 0
+            batch = {"tokens": jax.ShapeDtypeStruct((B, T + extra), jnp.int32)}
+        return batch
+    # decode: one new token against a full cache
+    if arch.embed_stub:
+        batch = {"embeds": jax.ShapeDtypeStruct((B, 1, arch.d_model),
+                                                jnp.bfloat16)}
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    return batch
+
+
+def _abstract_cache(model, B, S):
+    return jax.eval_shape(lambda: model.init_cache(B, S))
+
+
+def make_grad_accum(arch, shape, mesh) -> int:
+    """Keep per-device live batch at <= 4 sequences for 4k-token training."""
+    if shape.kind != "train":
+        return 1
+    from repro.dist.sharding import batch_pspec, _axis_size
+    bax = batch_pspec(mesh, shape.global_batch)
+    dp = 1
+    for a in (bax or ()):
+        dp *= _axis_size(mesh, a)
+    per_dev = max(shape.global_batch // dp, 1)
+    accum = max(1, per_dev // 4)
+    while shape.global_batch % accum or (shape.global_batch // accum) % dp:
+        accum -= 1
+    return accum
+
+
+# ---------------------------------------------------------------------------
+# cell runners
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_name: str, shape_name: str, mesh, dp_algo: str = "dpsgd_r",
+               norm_strategy: str = "auto", serve_fsdp: bool = True):
+    """Returns (jitted_fn, abstract_args dict) for one cell.
+
+    serve_fsdp=True keeps the paper-faithful baseline behavior (arch FSDP
+    flag leaks into serving); hillclimbed runs pass False (§Perf C1)."""
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    model = build_model(arch)
+    batch_abs = input_specs(arch, shape)
+
+    if shape.kind == "train":
+        opt_name = "adam8bit" if arch.use_fsdp else "adamw"
+        dp = DPConfig(algo=dp_algo, norm_strategy=norm_strategy)
+        accum = make_grad_accum(arch, shape, mesh)
+        grad_fn = make_noisy_grad_fn(model.loss_fn, dp, grad_accum=accum)
+        opt = make_optimizer(OptimConfig(name=opt_name))
+
+        def train_step(state, batch, key):
+            grads, metrics = grad_fn(state.params, batch, key)
+            new_p, new_o = opt.apply(grads, state.opt_state, state.params,
+                                     state.step)
+            return TrainState(step=state.step + 1, params=new_p,
+                              opt_state=new_o), metrics
+
+        params_abs = model.abstract_params()
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        state_abs = TrainState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                               params=params_abs, opt_state=opt_abs)
+        state_sh = state_shardings(mesh, model, state_abs)
+        batch_sh = batch_shardings(mesh, batch_abs, shape.global_batch)
+        key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        fn = jax.jit(train_step,
+                     in_shardings=(state_sh, batch_sh,
+                                   NamedSharding(mesh, P())),
+                     out_shardings=(state_sh, None))
+        args = (state_abs, batch_abs, key_abs)
+        extra = {"grad_accum": accum, "optimizer": opt_name, "dp_algo": dp_algo}
+        return fn, args, model, extra
+
+    params_abs = model.abstract_params()
+    params_sh = param_shardings(mesh, model,
+                                fsdp=None if serve_fsdp else False)
+    if shape.kind == "prefill":
+        def prefill(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+        batch_sh = batch_shardings(mesh, batch_abs, shape.global_batch)
+        fn = jax.jit(prefill, in_shardings=(params_sh, batch_sh))
+        return fn, (params_abs, batch_abs), model, {}
+
+    # decode
+    cache_abs = _abstract_cache(model, shape.global_batch, shape.seq_len)
+    cache_sh = cache_shardings(arch, mesh, shape.global_batch)
+    pos_abs = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    batch_sh = batch_shardings(mesh, batch_abs, shape.global_batch)
+    pos_sh = batch_shardings(mesh, pos_abs, shape.global_batch)
+    fn = jax.jit(model.decode_step,
+                 in_shardings=(params_sh, cache_sh, batch_sh, pos_sh),
+                 out_shardings=(None, cache_sh))
+    return fn, (params_abs, cache_abs, batch_abs, pos_abs), model, {}
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             out_dir: str, dp_algo: str = "dpsgd_r",
+             norm_strategy: str = "auto", tag: str = "",
+             mesh_shape: str = "", mesh_axes: str = "",
+             local_ops: bool = False, serve_fsdp: bool = True) -> dict:
+    if mesh_shape:
+        from repro.launch.mesh import make_mesh
+        shape_t = tuple(int(s) for s in mesh_shape.split(","))
+        axes_t = tuple(mesh_axes.split(",")) if mesh_axes else \
+            (("pod", "data", "model") if len(shape_t) == 3
+             else ("data", "model"))
+        mesh = make_mesh(shape_t, axes_t)
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+           "n_devices": int(n_dev), "dp_algo": dp_algo,
+           "norm_strategy": norm_strategy, "tag": tag,
+           "mesh_shape": mesh_shape or
+           ("2,16,16" if mesh_kind == "multi" else "16,16")}
+    t0 = time.time()
+    try:
+        import contextlib
+        from repro.dist import runtime
+        from repro.dist.sharding import batch_pspec
+        bax = batch_pspec(mesh, SHAPES[shape_name].global_batch)
+        lo = (runtime.layout(mesh, bax) if local_ops
+              else contextlib.nullcontext())
+        with mesh, lo:
+            fn, args, model, extra = build_cell(arch_name, shape_name, mesh,
+                                                dp_algo, norm_strategy,
+                                                serve_fsdp)
+            rec.update(extra)
+            analytic = jaxpr_costs(fn, *args)     # global, scan-aware
+            lowered = fn.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+            coll, coll_top = hlo_collective_bytes(hlo, n_dev)  # per-device
+            rec.update({
+                "ok": True,
+                "lower_s": round(t1 - t0, 2),
+                "compile_s": round(t2 - t1, 2),
+                "analytic": analytic,
+                # raw XLA numbers (per-device; NOTE: scan bodies counted
+                # once by XLA — kept for diagnostics only)
+                "xla_flops_per_device": float(ca.get("flops", 0.0)),
+                "xla_bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+                "collective_bytes_per_device": coll,
+                "collective_top": coll_top,
+                "memory_analysis": _mem_dict(mem),
+                "hlo_bytes": len(hlo),
+                "n_params": arch.param_count(),
+                "n_active_params": arch.active_param_count(),
+            })
+            rec["model_flops_global"] = model_flops(
+                arch, shape, rec["n_active_params"])
+            rec["roofline"] = roofline_terms(
+                analytic["total_flops"],
+                analytic["total_bytes"] + analytic["io_bytes"],
+                coll.get("total", 0.0) * n_dev, n_dev)
+            rec["roofline"]["model_vs_hlo_flops"] = (
+                rec["model_flops_global"]
+                / max(analytic["total_flops"], 1.0))
+    except Exception as e:  # noqa: BLE001 — record the failure, don't die
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    rec["total_s"] = round(time.time() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"-{tag}" if tag else ""
+    path = os.path.join(out_dir,
+                        f"{arch_name}--{shape_name}--{mesh_kind}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = "OK" if rec.get("ok") else "FAIL"
+    print(f"[dryrun] {status} {arch_name} x {shape_name} x {mesh_kind} "
+          f"({rec['total_s']}s) -> {path}", flush=True)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes", "host_temp_size_in_bytes",
+              "peak_memory_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def all_cells():
+    for arch_name in sorted(ARCHS):
+        for shape_name, shape in SHAPES.items():
+            if shape_applicable(ARCHS[arch_name], shape):
+                yield arch_name, shape_name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--dp-algo", default="dpsgd_r")
+    ap.add_argument("--norm-strategy", default="auto")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mesh-shape", default="",
+                    help="override, e.g. 256,1 (hillclimb layout exps)")
+    ap.add_argument("--mesh-axes", default="")
+    ap.add_argument("--use-flash", action="store_true",
+                    help="route attention through the Pallas flash kernel")
+    ap.add_argument("--local-ops", action="store_true",
+                    help="shard_map batch-local dispatch/segment ops (§Perf)")
+    ap.add_argument("--no-serve-fsdp", action="store_true",
+                    help="serving params without FSDP sharding (§Perf C1)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.use_flash:
+        from repro.kernels import ops as kops
+        kops.USE_FLASH = True
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = (list(all_cells()) if args.all
+             else [(args.arch, args.shape)])
+    n_fail = 0
+    for arch_name, shape_name in cells:
+        for mk in meshes:
+            suffix = f"-{args.tag}" if args.tag else ""
+            path = os.path.join(
+                args.out, f"{arch_name}--{shape_name}--{mk}{suffix}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("ok"):
+                        print(f"[dryrun] skip existing {path}", flush=True)
+                        continue
+            rec = run_cell(arch_name, shape_name, mk, args.out,
+                           args.dp_algo, args.norm_strategy, args.tag,
+                           args.mesh_shape, args.mesh_axes,
+                           local_ops=args.local_ops,
+                           serve_fsdp=not args.no_serve_fsdp)
+            n_fail += 0 if rec.get("ok") else 1
+    print(f"[dryrun] done; {n_fail} failures", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Roofline-term extraction from a lowered/compiled XLA artifact.
+
+Three terms per (arch, shape, mesh), per the brief:
+
+    compute    = HLO_FLOPs / (chips x 197e12 FLOP/s)        [bf16 peak]
+    memory     = HLO_bytes / (chips x 819e9 B/s)             [HBM]
+    collective = collective_wire_bytes / (chips x 50e9 B/s)  [ICI link]
+
+``cost_analysis`` provides FLOPs and bytes-accessed; collective bytes are
+parsed from the optimized HLO text: every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute op's result shape is
+converted to wire bytes with the standard ring factors (all-reduce
+2(n-1)/n, gather/scatter (n-1)/n, permute 1).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (per the brief)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (1-link assumption per brief)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\()?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind (one step)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind, suffix = m.group(1), m.group(2).lower(), m.group(3)
+        if suffix == "-done":
+            continue  # async pair: count the -start only
+        size = _shape_bytes(shape_txt)
+        n = max(_group_size(line, n_devices), 1)
+        if kind == "all-reduce":
+            wire = 2 * size * (n - 1) / n
+        elif kind in ("all-gather", "all-to-all"):
+            wire = size * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = size * (n - 1) / n
+        else:  # collective-permute
+            wire = size
+        out[kind] = out.get(kind, 0.0) + wire
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def roofline_terms(flops: Optional[float], bytes_accessed: Optional[float],
+                   coll_bytes: float, n_devices: int) -> Dict[str, float]:
+    terms = {}
+    terms["compute_s"] = (flops or 0.0) / (n_devices * PEAK_FLOPS)
+    terms["memory_s"] = (bytes_accessed or 0.0) / (n_devices * HBM_BW)
+    terms["collective_s"] = coll_bytes / (n_devices * ICI_BW)
+    dom = max(terms, key=lambda k: terms[k])
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms
+
+
+def model_flops(arch, shape, active_params: int) -> float:
+    """6·N·D for training (fwd+bwd); 2·N·D for inference passes."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active_params * tokens
+    tokens = shape.global_batch          # one new token per example
+    return 2.0 * active_params * tokens

@@ -1,0 +1,5 @@
+"""Model zoo: composable pure-JAX layers + the 10 assigned architectures."""
+from repro.models.transformer import (Model, abstract_params, build_model,
+                                      logical_axes)
+
+__all__ = ["Model", "build_model", "abstract_params", "logical_axes"]

@@ -1,0 +1,239 @@
+"""Core layers: RMSNorm, RoPE (full/partial), GQA attention (blocked causal
+train/prefill + cached decode), MLPs.  All parameterized ops go through the
+DPContext so DP-SGD(R)'s norm pass sees every site.
+
+Conventions: activations (B, T, d); attention heads kept as (B, T, H, hd);
+all softmax/normalization math in float32; outputs cast back to the compute
+dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import DPContext
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Param spec (single source of truth for shape / logical axes / init)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names (len == ndim)
+    init: str = "fan_in"              # fan_in | embed | zeros | ones | mamba_dt | mamba_alog
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, ctx: DPContext, eps: float = 1e-5):
+    """x: (B, T, d); scale: (d,).  Scale is tapped for per-example norms."""
+    s, ctx = ctx.tap(scale, 1, x.shape[0])
+    xf = x.astype(F32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * s.astype(F32)).astype(x.dtype), ctx
+
+
+def rmsnorm_nd(x, scale, ctx: DPContext, eps: float = 1e-5):
+    """RMSNorm over the last dim of an arbitrary-rank x (batch dim 0)."""
+    nexp = x.ndim - 1 - scale.ndim
+    s, ctx = ctx.tap(scale, nexp, x.shape[0])
+    xf = x.astype(F32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * s.astype(F32)).astype(x.dtype), ctx
+
+
+def gated_rmsnorm(y, z, scale, ctx: DPContext, eps: float = 1e-5):
+    """Mamba2 output norm: rmsnorm(y * silu(z)) * scale."""
+    g = (y.astype(F32) * jax.nn.silu(z.astype(F32)))
+    s, ctx = ctx.tap(scale, 1, y.shape[0])
+    out = g * jax.lax.rsqrt(jnp.mean(g * g, axis=-1, keepdims=True) + eps)
+    return (out * s.astype(F32)).astype(y.dtype), ctx
+
+
+# ---------------------------------------------------------------------------
+# RoPE (half-split / NeoX style; partial via rotary_pct)
+# ---------------------------------------------------------------------------
+
+def rope(x, pos, theta: float, pct: float):
+    """x: (B, T, H, hd); pos: (B, T) int32 absolute positions."""
+    hd = x.shape[-1]
+    r = int(hd * pct)
+    r -= r % 2
+    if r == 0:
+        return x
+    xr, xp = x[..., :r], x[..., r:]
+    half = r // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)       # (half,)
+    ang = pos.astype(F32)[:, :, None, None] * freqs                 # (B,T,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half].astype(F32), xr[..., half:].astype(F32)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rot.astype(x.dtype), xp], axis=-1)
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    for b in range(min(cap, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+class AttnParams(NamedTuple):
+    pass  # (params are plain dicts; kept for reference)
+
+
+def attn_spec(cfg) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    spec = {
+        "wq": P((d, H * hd), ("embed", "heads")),
+        "wk": P((d, KV * hd), ("embed", "kv")),
+        "wv": P((d, KV * hd), ("embed", "kv")),
+        "wo": P((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = P((hd,), (None,), "ones")
+        spec["k_norm"] = P((hd,), (None,), "ones")
+    return spec
+
+
+def _causal_blocked_attention(q, k, v, block_q: int):
+    """Exact causal attention, scanned over query blocks to bound memory.
+
+    q: (B, T, KV, rep, hd); k/v: (B, S, KV, hd).  Returns (B, T, KV, rep, hd).
+    FLOP note: off-diagonal future blocks are masked, not skipped (2x causal
+    waste); the Pallas flash kernel removes this on TPU (§Perf).
+    """
+    B, T, KV, rep, hd = q.shape
+    S = k.shape[1]
+    bq = largest_divisor_leq(T, block_q)
+    nq = T // bq
+    qb = q.reshape(B, nq, bq, KV, rep, hd)
+    kpos = jnp.arange(S)
+
+    def one_block(i, qi):
+        # qi: (B, bq, KV, rep, hd)
+        qpos = i * bq + jnp.arange(bq)
+        s = jnp.einsum("bqkrh,bskh->bkrqs", qi, k,
+                       preferred_element_type=F32) / jnp.sqrt(float(hd))
+        mask = kpos[None, :] <= qpos[:, None]                    # (bq, S)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkrqs,bskh->bqkrh", p.astype(v.dtype), v)
+        return o
+
+    def body(carry, inp):
+        i, qi = inp
+        return carry, jax.checkpoint(one_block)(i, qi)
+
+    _, ob = jax.lax.scan(body, (), (jnp.arange(nq), qb.swapaxes(0, 1)))
+    return ob.swapaxes(0, 1).reshape(B, T, KV, rep, hd)
+
+
+def attn_apply(p, x, ctx: DPContext, cfg, pos, block_q: int = 512):
+    """Training/prefill attention. x: (B,T,d); pos: (B,T). Returns y, ctx, kv."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, ctx = ctx.dense(x, p["wq"])
+    k, ctx = ctx.dense(x, p["wk"])
+    v, ctx = ctx.dense(x, p["wv"])
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, KV, hd)
+    v = v.reshape(B, T, KV, hd)
+    if cfg.qk_norm:
+        q, ctx = rmsnorm_nd(q, p["q_norm"], ctx, cfg.norm_eps)
+        k, ctx = rmsnorm_nd(k, p["k_norm"], ctx, cfg.norm_eps)
+    if cfg.rotary_pct > 0:
+        q = rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
+        k = rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
+    qg = q.reshape(B, T, KV, H // KV, hd)
+    from repro.kernels import ops as kops
+    if kops.USE_FLASH:
+        from repro.dist import runtime
+        flash = runtime.attn_local(
+            lambda qq, kk, vv: kops.flash_attention(qq, kk, vv, True), KV)
+        o = flash(qg, k, v)
+    else:
+        o = _causal_blocked_attention(qg, k, v, block_q)
+    o = o.reshape(B, T, H * hd)
+    y, ctx = ctx.dense(o, p["wo"])
+    return y, ctx, (k, v)
+
+
+def attn_decode(p, x, cache_kv, pos, cfg):
+    """Single-token decode. x: (B,1,d); cache_kv: (k,v) each (B,S,KV,hd);
+    pos: (B,) current write position.  Returns (y, new_cache)."""
+    B, _, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ctx = DPContext.off()
+    q, _ = ctx.dense(x, p["wq"])
+    k, _ = ctx.dense(x, p["wk"])
+    v, _ = ctx.dense(x, p["wv"])
+    q = q.reshape(B, 1, H, hd)
+    k = k.reshape(B, 1, KV, hd)
+    v = v.reshape(B, 1, KV, hd)
+    if cfg.qk_norm:
+        q, _ = rmsnorm_nd(q, p["q_norm"], ctx, cfg.norm_eps)
+        k, _ = rmsnorm_nd(k, p["k_norm"], ctx, cfg.norm_eps)
+    if cfg.rotary_pct > 0:
+        q = rope(q, pos[:, None], cfg.rope_theta, cfg.rotary_pct)
+        k = rope(k, pos[:, None], cfg.rope_theta, cfg.rotary_pct)
+    ck, cv = cache_kv
+    b_idx = jnp.arange(B)
+    ck = ck.at[b_idx, pos].set(k[:, 0].astype(ck.dtype))
+    cv = cv.at[b_idx, pos].set(v[:, 0].astype(cv.dtype))
+    qg = q.reshape(B, KV, H // KV, hd)
+    s = jnp.einsum("bkrh,bskh->bkrs", qg, ck,
+                   preferred_element_type=F32) / jnp.sqrt(float(hd))
+    mask = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]        # (B,S)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrs,bskh->bkrh", pattn.astype(cv.dtype), cv)
+    o = o.reshape(B, 1, H * hd)
+    y, _ = ctx.dense(o, p["wo"])
+    return y, (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+def mlp_spec(cfg, d_ff: int) -> dict:
+    d = cfg.d_model
+    if cfg.mlp_act == "swiglu":
+        return {
+            "w1": P((d, d_ff), ("embed", "mlp")),
+            "w3": P((d, d_ff), ("embed", "mlp")),
+            "w2": P((d_ff, d), ("mlp", "embed")),
+        }
+    return {
+        "w1": P((d, d_ff), ("embed", "mlp")),
+        "w2": P((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x, ctx: DPContext, cfg):
+    if cfg.mlp_act == "swiglu":
+        h1, ctx = ctx.dense(x, p["w1"])
+        h3, ctx = ctx.dense(x, p["w3"])
+        h = jax.nn.silu(h1.astype(F32)).astype(x.dtype) * h3
+    else:
+        h1, ctx = ctx.dense(x, p["w1"])
+        h = jax.nn.gelu(h1.astype(F32)).astype(x.dtype)
+    y, ctx = ctx.dense(h, p["w2"])
+    return y, ctx

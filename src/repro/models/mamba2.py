@@ -1,0 +1,192 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Training/prefill uses the chunked SSD algorithm: block-diagonal
+"attention-like" intra-chunk term + a cross-chunk recurrent state carried by
+``lax.scan`` — O(T·Q) work with chunk length Q, sub-quadratic in T.  Decode
+carries an O(1) per-layer state (conv window + SSM state), which is what
+makes the ``long_500k`` shape runnable for ssm/hybrid archs.
+
+DP integration: in/out projections are dense sites; A_log, dt_bias, D,
+conv weights and the gated-norm scale are tapped small params — per-example
+grad norms stay exact through the scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import DPContext
+from repro.models.layers import P, gated_rmsnorm
+
+F32 = jnp.float32
+
+
+def mamba_dims(cfg):
+    m = cfg.mamba
+    d_in = m.d_inner(cfg.d_model)
+    H = m.n_heads(cfg.d_model)
+    return d_in, H, m.n_groups, m.d_state, m.d_conv, m.head_dim
+
+
+def mamba_spec(cfg) -> dict:
+    d = cfg.d_model
+    d_in, H, G, N, K, Pdim = mamba_dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    return {
+        "in_proj": P((d, 2 * d_in + 2 * G * N + H), ("embed", "mlp")),
+        "conv_w": P((K, conv_ch), (None, "mlp"), "fan_in"),
+        "dt_bias": P((H,), (None,), "mamba_dt"),
+        "A_log": P((H,), (None,), "mamba_alog"),
+        "D": P((H,), (None,), "ones"),
+        "norm": P((d_in,), (None,), "ones"),
+        "out_proj": P((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(zxbcdt, d_in, G, N, H):
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in:2 * d_in]
+    Bm = zxbcdt[..., 2 * d_in:2 * d_in + G * N]
+    Cm = zxbcdt[..., 2 * d_in + G * N:2 * d_in + 2 * G * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * G * N:]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_depthwise_conv(u, w, ctx: DPContext, init_state=None):
+    """u: (B, T, C); w: (K, C) depthwise causal conv, silu activation.
+    init_state: (B, K-1, C) left-context (decode prefill chaining).
+    Returns (y, ctx, final_state)."""
+    B, T, C = u.shape
+    K = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((B, K - 1, C), u.dtype)
+    up = jnp.concatenate([init_state, u], axis=1)                  # (B,T+K-1,C)
+    # windows: (B, T, K, C)
+    xs = jnp.stack([up[:, i:i + T] for i in range(K)], axis=2)
+    wb, ctx = ctx.tap(w, 0, B)     # norm mode: (B,K,C); off: (K,C)
+    if wb.ndim == 2:
+        y = jnp.einsum("btkc,kc->btc", xs, wb)
+    else:
+        y = jnp.einsum("btkc,bkc->btc", xs, wb)
+    y = jax.nn.silu(y.astype(F32)).astype(u.dtype)
+    return y, ctx, up[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, C), u.dtype)
+
+
+def _segsum(loga):
+    """loga: (..., Q) -> (..., Q, Q) lower-tri cumulative sums:
+    out[t, s] = sum_{s < u <= t} loga_u  (=-inf above diagonal)."""
+    Q = loga.shape[-1]
+    cs = jnp.cumsum(loga, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]                     # t, s
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """SSD scan, sequential over chunks (bounded memory: one chunk's
+    (B,H,Q,Q) score block alive at a time; remat recomputes it in bwd).
+
+    xh: (B,T,H,P) inputs; dt: (B,T,H) (post-softplus); A: (H,) or (B,1,H)
+    negative decay rates; Bm/Cm: (B,T,G,N).  Returns (y (B,T,H,P),
+    final_state (B,H,P,N))."""
+    from repro.models.layers import largest_divisor_leq
+    B, T, H, Pd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = largest_divisor_leq(T, chunk)
+    nC = T // Q
+
+    dtA = dt.astype(F32) * A.astype(F32)                           # (B,T,H)
+    xc = xh.reshape(B, nC, Q, H, Pd).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B, nC, Q, H).astype(F32).transpose(1, 0, 2, 3)
+    dac = dtA.reshape(B, nC, Q, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(B, nC, Q, G, N).transpose(1, 0, 2, 3, 4)
+    Cc = Cm.reshape(B, nC, Q, G, N).transpose(1, 0, 2, 3, 4)
+
+    def one_chunk(S, inp):
+        x_c, dt_c, da_c, B_c, C_c = inp       # (B,Q,H,P),(B,Q,H),(B,Q,H),(B,Q,G,N)x2
+        Bh = jnp.repeat(B_c, rep, axis=2).astype(F32)              # (B,Q,H,N)
+        Ch = jnp.repeat(C_c, rep, axis=2).astype(F32)
+        xf = x_c.astype(F32)
+        cums = jnp.cumsum(da_c, axis=1)                            # (B,Q,H)
+        # intra-chunk
+        L = jnp.exp(_segsum(da_c.transpose(0, 2, 1)))              # (B,H,Q,Q)
+        scores = jnp.einsum("bqhn,bshn->bhqs", Ch, Bh)
+        M = scores * L * dt_c.transpose(0, 2, 1)[:, :, None, :]
+        y = jnp.einsum("bhqs,bshp->bqhp", M, xf)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cums)                                   # (B,Q,H)
+        y = y + jnp.einsum("bqhn,bhpn,bqh->bqhp", Ch, S, decay_in)
+        # state update
+        decay_to_end = jnp.exp(cums[:, -1:, :] - cums)             # (B,Q,H)
+        Sc = jnp.einsum("bqh,bqhn,bqhp->bhpn", decay_to_end * dt_c, Bh, xf)
+        S_new = S * jnp.exp(cums[:, -1, :])[:, :, None, None] + Sc
+        return S_new, y
+
+    S0 = (jnp.zeros((B, H, Pd, N), F32) if init_state is None
+          else init_state.astype(F32))
+    S_final, ys = jax.lax.scan(jax.checkpoint(one_chunk), S0,
+                               (xc, dtc, dac, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, Pd)
+    return y, S_final
+
+
+def mamba_apply(p, x, ctx: DPContext, cfg,
+                conv_state=None, ssm_state=None, want_cache: bool = False):
+    """Full-sequence Mamba2 mixer. x: (B,T,d). Returns (y, ctx, cache)."""
+    B, T, d = x.shape
+    d_in, H, G, N, K, Pd = mamba_dims(cfg)
+    zxbcdt, ctx = ctx.dense(x, p["in_proj"])
+    z, xin, Bm, Cm, dt = _split_proj(zxbcdt, d_in, G, N, H)
+    u = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    u, ctx, conv_final = _causal_depthwise_conv(u, p["conv_w"], ctx, conv_state)
+    xin, Bm, Cm = (u[..., :d_in], u[..., d_in:d_in + G * N],
+                   u[..., d_in + G * N:])
+    dtb, ctx = ctx.tap(p["dt_bias"], 1, B)                         # (B,1,H)|(H,)
+    dt = jax.nn.softplus(dt.astype(F32) + dtb.astype(F32))         # (B,T,H)
+    Alog, ctx = ctx.tap(p["A_log"], 1, B)
+    A = -jnp.exp(Alog.astype(F32))                                 # (B,1,H)|(H,)
+    xh = xin.reshape(B, T, H, Pd)
+    y, S_final = ssd_chunked(xh, dt, A,
+                             Bm.reshape(B, T, G, N), Cm.reshape(B, T, G, N),
+                             cfg.mamba.chunk, init_state=ssm_state)
+    Dp, ctx = ctx.tap(p["D"], 1, B)                                # (B,1,H)|(H,)
+    y = y + Dp[..., None].astype(F32) * xh.astype(F32)
+    y = y.reshape(B, T, d_in).astype(x.dtype)
+    y, ctx = gated_rmsnorm(y, z, p["norm"], ctx, cfg.norm_eps)
+    out, ctx = ctx.dense(y, p["out_proj"])
+    cache = (conv_final, S_final.astype(F32)) if want_cache else None
+    return out, ctx, cache
+
+
+def mamba_decode(p, x, conv_state, ssm_state, cfg):
+    """Single-token decode. x: (B,1,d); conv_state: (B,K-1,CH);
+    ssm_state: (B,H,P,N) f32.  Returns (y, (conv_state, ssm_state))."""
+    B = x.shape[0]
+    d_in, H, G, N, K, Pd = mamba_dims(cfg)
+    ctx = DPContext.off()
+    zxbcdt, _ = ctx.dense(x, p["in_proj"])
+    z, xin, Bm, Cm, dt = _split_proj(zxbcdt, d_in, G, N, H)
+    u = jnp.concatenate([xin, Bm, Cm], axis=-1)                    # (B,1,CH)
+    window = jnp.concatenate([conv_state, u], axis=1)              # (B,K,CH)
+    yconv = jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+    yconv = jax.nn.silu(yconv.astype(F32)).astype(x.dtype)[:, None]
+    new_conv = window[:, 1:]
+    xin, Bm, Cm = (yconv[..., :d_in], yconv[..., d_in:d_in + G * N],
+                   yconv[..., d_in + G * N:])
+    dt = jax.nn.softplus(dt[:, 0].astype(F32) + p["dt_bias"].astype(F32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(F32))                           # (H,)
+    a = jnp.exp(dt * A)                                            # (B,H)
+    xh = xin.reshape(B, H, Pd).astype(F32)
+    Bh = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1).astype(F32)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1).astype(F32)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, xh)
+    S = ssm_state * a[:, :, None, None] + dBx                      # (B,H,P,N)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, S)
+    y = y + p["D"].astype(F32)[None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y, _ = gated_rmsnorm(y, z, p["norm"], ctx, cfg.norm_eps)
+    out, _ = ctx.dense(y, p["out_proj"])
+    return out, (new_conv, S)

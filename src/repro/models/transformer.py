@@ -1,0 +1,417 @@
+"""Model assembly: layer stacking (prelude + scanned repeated block),
+abstract params, init, train loss, prefill and decode.
+
+One ``Model`` serves all 10 assigned architectures: the per-layer kind
+(attn | mamba) and FFN flavor (dense | MoE) are derived from the
+``ArchConfig`` layer pattern.  Uniform runs of layers are stacked and
+executed with ``lax.scan`` so the lowered HLO is O(1) in depth (critical for
+the 512-device dry-run compiles) and remat has a natural block boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import replace as dc_replace
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, MAMBA, ArchConfig
+from repro.core.context import DPContext
+from repro.models import layers as L
+from repro.models import mamba2, moe as moe_lib
+from repro.models.layers import P
+
+F32 = jnp.float32
+AUX_LOSS_WEIGHT = 0.01
+VOCAB_PAD = 256
+
+
+def padded_vocab(v: int) -> int:
+    return ((v + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+# ---------------------------------------------------------------------------
+# Layer signatures & grouping
+# ---------------------------------------------------------------------------
+
+def layer_sig(arch: ArchConfig, i: int) -> Tuple[str, bool]:
+    return (arch.pattern()[i], arch.is_moe_layer(i))
+
+
+def group_layers(arch: ArchConfig) -> Tuple[int, int, int]:
+    """Return (n_prelude, period, n_reps): layers [n_prelude:] are a
+    ``period``-layer signature repeated ``n_reps`` times."""
+    sigs = [layer_sig(arch, i) for i in range(arch.n_layers)]
+    for pre in range(0, 3):
+        rest = sigs[pre:]
+        if not rest:
+            continue
+        for p in range(1, min(len(rest), 16) + 1):
+            if len(rest) % p == 0 and rest == rest[:p] * (len(rest) // p):
+                return pre, p, len(rest) // p
+    return arch.n_layers, 1, 0  # fully unrolled fallback
+
+
+# ---------------------------------------------------------------------------
+# Per-layer spec / apply
+# ---------------------------------------------------------------------------
+
+def layer_spec(arch: ArchConfig, sig: Tuple[str, bool]) -> Dict[str, Any]:
+    kind, is_moe = sig
+    d = arch.d_model
+    spec: Dict[str, Any] = {"ln1": P((d,), (None,), "ones")}
+    if kind == ATTN:
+        spec["attn"] = L.attn_spec(arch)
+    else:
+        spec["mamba"] = mamba2.mamba_spec(arch)
+    if arch.d_ff > 0:
+        spec["ln2"] = P((d,), (None,), "ones")
+        if is_moe:
+            spec["moe"] = moe_lib.moe_spec(arch)
+        else:
+            spec["mlp"] = L.mlp_spec(arch, arch.ff_dense())
+    return spec
+
+
+def apply_layer(sig, p, x, ctx: DPContext, arch: ArchConfig, pos,
+                cache=None, want_cache: bool = False):
+    """Full-sequence layer (train / prefill).  Returns (x, ctx, aux, cache)."""
+    kind, is_moe = sig
+    aux = None
+    h, ctx = L.rmsnorm(x, p["ln1"], ctx, arch.norm_eps)
+    if kind == ATTN:
+        y, ctx, kv = L.attn_apply(p["attn"], h, ctx, arch, pos)
+        new_cache = kv if want_cache else None
+    else:
+        y, ctx, new_cache = mamba2.mamba_apply(
+            p["mamba"], h, ctx, arch, want_cache=want_cache)
+    x = x + y
+    if arch.d_ff > 0:
+        h, ctx = L.rmsnorm(x, p["ln2"], ctx, arch.norm_eps)
+        if is_moe:
+            y, ctx, aux = moe_lib.moe_apply(p["moe"], h, ctx, arch)
+        else:
+            y, ctx = L.mlp_apply(p["mlp"], h, ctx, arch)
+        x = x + y
+    return x, ctx, aux, new_cache
+
+
+def apply_layer_decode(sig, p, x, cache, pos, arch: ArchConfig):
+    """Single-token layer. cache: (k,v) for attn, (conv,ssm) for mamba."""
+    kind, is_moe = sig
+    ctx = DPContext.off()
+    h, _ = L.rmsnorm(x, p["ln1"], ctx, arch.norm_eps)
+    if kind == ATTN:
+        y, new_cache = L.attn_decode(p["attn"], h, cache, pos, arch)
+    else:
+        y, new_cache = mamba2.mamba_decode(p["mamba"], h, cache[0], cache[1], arch)
+    x = x + y
+    if arch.d_ff > 0:
+        h, _ = L.rmsnorm(x, p["ln2"], ctx, arch.norm_eps)
+        if is_moe:
+            y, _, _ = moe_lib.moe_apply(p["moe"], h, ctx, arch)
+        else:
+            y, _ = L.mlp_apply(p["mlp"], h, ctx, arch)
+        x = x + y
+    return x, new_cache
+
+
+def init_layer_cache(sig, arch: ArchConfig, B: int, S: int, dtype):
+    kind, _ = sig
+    if kind == ATTN:
+        KV, hd = arch.n_kv_heads, arch.hd
+        return (jnp.zeros((B, S, KV, hd), dtype),
+                jnp.zeros((B, S, KV, hd), dtype))
+    d_in, H, G, N, K, Pd = mamba2.mamba_dims(arch)
+    conv_ch = d_in + 2 * G * N
+    return (jnp.zeros((B, K - 1, conv_ch), dtype),
+            jnp.zeros((B, H, Pd, N), F32))
+
+
+# ---------------------------------------------------------------------------
+# Whole-model spec
+# ---------------------------------------------------------------------------
+
+def model_spec(arch: ArchConfig) -> Dict[str, Any]:
+    pre, period, reps = group_layers(arch)
+    spec: Dict[str, Any] = {}
+    if not arch.embed_stub:
+        spec["embed"] = P((padded_vocab(arch.vocab), arch.d_model),
+                          ("vocab", "embed"), "embed")
+    spec["prelude"] = [layer_spec(arch, layer_sig(arch, i)) for i in range(pre)]
+    if reps > 0:
+        spec["blocks"] = tuple(layer_spec(arch, layer_sig(arch, pre + j))
+                               for j in range(period))
+    spec["final_norm"] = P((arch.d_model,), (None,), "ones")
+    spec["head"] = P((arch.d_model, padded_vocab(arch.vocab)),
+                     ("embed", "vocab"))
+    return spec
+
+
+def _is_small(p: P) -> bool:
+    return p.init in ("ones", "zeros", "mamba_dt", "mamba_alog")
+
+
+def _map_spec(spec, fn, path=()):
+    """Map fn(P, path) over a spec tree (dicts/lists/tuples of P)."""
+    if isinstance(spec, P):
+        return fn(spec, path)
+    if isinstance(spec, dict):
+        return {k: _map_spec(v, fn, path + (k,)) for k, v in spec.items()}
+    if isinstance(spec, (list, tuple)):
+        t = type(spec)
+        out = [_map_spec(v, fn, path + (str(i),)) for i, v in enumerate(spec)]
+        return t(out) if t is tuple else out
+    raise TypeError(type(spec))
+
+
+def abstract_params(arch: ArchConfig, param_dtype: str = "bfloat16"):
+    """ShapeDtypeStruct tree (no allocation) — used by the dry-run."""
+    pre, period, reps = group_layers(arch)
+    pd = jnp.dtype(param_dtype)
+
+    def mk(p: P, path):
+        dtype = jnp.dtype(jnp.float32) if _is_small(p) else pd
+        shape = p.shape
+        if path and path[0] == "blocks":
+            shape = (reps,) + shape
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    return _map_spec(model_spec(arch), mk)
+
+
+def logical_axes(arch: ArchConfig):
+    """Tree of logical-axis tuples parallel to abstract_params."""
+    def mk(p: P, path):
+        axes = p.axes
+        if path and path[0] == "blocks":
+            axes = ("layers",) + axes
+        return axes
+    return _map_spec(model_spec(arch), mk)
+
+
+def _init_leaf(key, p: P, shape, dtype):
+    if p.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(shape, dtype)
+    if p.init == "embed":
+        return 0.02 * jax.random.normal(key, shape, F32).astype(dtype)
+    if p.init == "mamba_dt":
+        dt = jnp.exp(jax.random.uniform(key, shape, F32,
+                                        np.log(1e-3), np.log(1e-1)))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)  # inv softplus
+    if p.init == "mamba_alog":
+        return jnp.log(jax.random.uniform(key, shape, F32, 1.0, 16.0)).astype(dtype)
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+    std = 1.0 / np.sqrt(fan_in)
+    return (std * jax.random.normal(key, shape, F32)).astype(dtype)
+
+
+def init_params(arch: ArchConfig, key, param_dtype: str = "bfloat16"):
+    pre, period, reps = group_layers(arch)
+    pd = jnp.dtype(param_dtype)
+
+    def mk(p: P, path):
+        dtype = jnp.dtype(jnp.float32) if _is_small(p) else pd
+        shape = p.shape
+        if path and path[0] == "blocks":
+            shape = (reps,) + shape
+        k = jax.random.fold_in(key, hash(path) % (2 ** 31))
+        return _init_leaf(k, p, shape, dtype)
+
+    return _map_spec(model_spec(arch), mk)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    arch: ArchConfig
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "block"
+
+    # -- params ----------------------------------------------------------
+    def abstract_params(self):
+        return abstract_params(self.arch, self.param_dtype)
+
+    def logical_axes(self):
+        return logical_axes(self.arch)
+
+    def init(self, key):
+        return init_params(self.arch, key, self.param_dtype)
+
+    # -- shared forward ---------------------------------------------------
+    def _embed_in(self, params, batch, ctx: DPContext):
+        if self.arch.embed_stub:
+            x = batch["embeds"].astype(jnp.dtype(self.compute_dtype))
+        else:
+            x, ctx = ctx.embed(batch["tokens"], params["embed"])
+            x = x.astype(jnp.dtype(self.compute_dtype))
+        return x, ctx
+
+    def _stack(self, params, x, ctx: DPContext, pos, want_cache: bool = False):
+        arch = self.arch
+        pre, period, reps = group_layers(arch)
+        aux_total = jnp.zeros((x.shape[0],), F32)
+        pre_caches = []
+        for i in range(pre):
+            x, ctx, aux, c = apply_layer(layer_sig(arch, i), params["prelude"][i],
+                                         x, ctx, arch, pos, want_cache=want_cache)
+            if aux is not None:
+                aux_total = aux_total + aux
+            pre_caches.append(c)
+
+        blocks_cache = None
+        if reps > 0:
+            sigs = [layer_sig(arch, pre + j) for j in range(period)]
+            ctx_template = ctx
+
+            def block_fn(carry, bp):
+                xx, acc, aux_t = carry
+                c_l = dc_replace(ctx_template, acc=acc)
+                caches = []
+                for j in range(period):
+                    xx, c_l, aux, cc = apply_layer(sigs[j], bp[j], xx, c_l,
+                                                   arch, pos,
+                                                   want_cache=want_cache)
+                    if aux is not None:
+                        aux_t = aux_t + aux
+                    caches.append(cc)
+                return (xx, c_l.acc, aux_t), tuple(caches)
+
+            fn = jax.checkpoint(block_fn) if self.remat == "block" else block_fn
+            (x, acc, aux_total), blocks_cache = jax.lax.scan(
+                fn, (x, ctx.acc, aux_total), params["blocks"])
+            ctx = dc_replace(ctx, acc=acc)
+
+        return x, ctx, aux_total, {"prelude": pre_caches, "blocks": blocks_cache}
+
+    def _head(self, params, x, ctx: DPContext):
+        x, ctx = L.rmsnorm(x, params["final_norm"], ctx, self.arch.norm_eps)
+        logits, ctx = ctx.dense(x, params["head"])
+        return logits, ctx
+
+    # -- training loss ----------------------------------------------------
+    def loss_fn(self, params, batch, ctx: DPContext):
+        """Returns ((B,) per-example losses, ctx).  batch: tokens (B,T+1)
+        or embeds (B,T,d) + labels (B,T)."""
+        arch = self.arch
+        if arch.embed_stub:
+            labels = batch["labels"]
+            inputs = batch
+        else:
+            toks = batch["tokens"]
+            inputs = {"tokens": toks[:, :-1]}
+            labels = toks[:, 1:]
+        B = labels.shape[0]
+        T = labels.shape[1]
+        x, ctx = self._embed_in(params, inputs, ctx)
+        pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        x, ctx, aux, _ = self._stack(params, x, ctx, pos)
+        logits, ctx = self._head(params, x, ctx)
+        losses = per_example_xent(logits, labels, arch.vocab)
+        return losses + AUX_LOSS_WEIGHT * aux, ctx
+
+    # -- serving ----------------------------------------------------------
+    def init_cache(self, B: int, S: int):
+        arch = self.arch
+        pre, period, reps = group_layers(arch)
+        dtype = jnp.dtype(self.compute_dtype)
+        pre_c = [init_layer_cache(layer_sig(arch, i), arch, B, S, dtype)
+                 for i in range(pre)]
+        blocks_c = None
+        if reps > 0:
+            one = tuple(init_layer_cache(layer_sig(arch, pre + j), arch, B, S,
+                                         dtype)
+                        for j in range(period))
+            blocks_c = jax.tree.map(
+                lambda l: jnp.zeros((reps,) + l.shape, l.dtype), one)
+        return {"prelude": pre_c, "blocks": blocks_c}
+
+    def prefill(self, params, batch, cache_len: int):
+        """Full-prompt forward; returns (last-position logits, cache padded to
+        cache_len).  batch: tokens (B,T) or embeds (B,T,d)."""
+        arch = self.arch
+        ctx = DPContext.off()
+        x, ctx = self._embed_in(params, batch, ctx)
+        B, T = x.shape[0], x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        x, ctx, _, cache = self._stack(params, x, ctx, pos, want_cache=True)
+        logits, _ = self._head(params, x[:, -1:], ctx)
+
+        # pad attention KV caches (..., T, KV, hd) -> (..., cache_len, KV, hd)
+        def pad_leafed(cc, sig):
+            kind, _ = sig
+            if cc is None:
+                return None
+            if kind == ATTN:
+                def pad_one(a):
+                    padw = [(0, 0)] * a.ndim
+                    padw[-3] = (0, cache_len - T)
+                    return jnp.pad(a, padw)
+                return (pad_one(cc[0]), pad_one(cc[1]))
+            return cc
+
+        pre, period, reps = group_layers(arch)
+        cache = {
+            "prelude": [pad_leafed(cache["prelude"][i], layer_sig(arch, i))
+                        for i in range(pre)],
+            "blocks": (None if cache["blocks"] is None else tuple(
+                pad_leafed(cache["blocks"][j], layer_sig(arch, pre + j))
+                for j in range(period))),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, batch, pos):
+        """One-token decode. batch: tokens (B,1) or embeds (B,1,d);
+        pos: (B,) write positions. Returns (logits (B,1,Vpad), new cache)."""
+        arch = self.arch
+        ctx = DPContext.off()
+        x, _ = self._embed_in(params, batch, ctx)
+        pre, period, reps = group_layers(arch)
+        new_pre = []
+        for i in range(pre):
+            x, c = apply_layer_decode(layer_sig(arch, i), params["prelude"][i],
+                                      x, cache["prelude"][i], pos, arch)
+            new_pre.append(c)
+        new_blocks = None
+        if reps > 0:
+            sigs = [layer_sig(arch, pre + j) for j in range(period)]
+
+            def block_fn(xx, inp):
+                bp, bc = inp
+                new_c = []
+                for j in range(period):
+                    xx, cc = apply_layer_decode(sigs[j], bp[j], xx, bc[j],
+                                                pos, arch)
+                    new_c.append(cc)
+                return xx, tuple(new_c)
+
+            x, new_blocks = jax.lax.scan(block_fn, x,
+                                         (params["blocks"], cache["blocks"]))
+        logits, _ = self._head(params, x, DPContext.off())
+        return logits, {"prelude": new_pre, "blocks": new_blocks}
+
+
+def per_example_xent(logits, labels, vocab: int):
+    """(B,T,Vpad) logits, (B,T) labels -> (B,) mean CE; padded vocab masked."""
+    Vpad = logits.shape[-1]
+    lf = logits.astype(F32)
+    if Vpad != vocab:
+        col = jnp.arange(Vpad)
+        lf = jnp.where(col[None, None, :] < vocab, lf, -1e30)
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll, axis=-1)
+
+
+def build_model(arch: ArchConfig, param_dtype: str = "bfloat16",
+                compute_dtype: str = "bfloat16", remat: str = "block") -> Model:
+    return Model(arch, param_dtype, compute_dtype, remat)

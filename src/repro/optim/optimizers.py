@@ -1,0 +1,174 @@
+"""Optimizers built from scratch (no optax in this environment):
+
+* ``sgd``      — SGD with momentum.
+* ``adamw``    — AdamW with f32 master weights + f32 m/v.
+* ``adam8bit`` — AdamW with **blockwise int8-quantized m/v** and no f32
+  master (params updated in-place with f32 math then cast back).  State is
+  ~4 bytes/param instead of 12 — what lets grok-1/jamba-scale optimizer
+  state fit v5e HBM (DESIGN.md §5).
+
+All optimizers share: ``init(params) -> state``;
+``apply(grads, state, params, step) -> (new_params, new_state)``.
+Gradients arrive already noised/averaged from the DP core (f32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimConfig
+
+F32 = jnp.float32
+
+
+def lr_at(cfg: OptimConfig, step) -> jax.Array:
+    s = jnp.asarray(step, F32)
+    if cfg.schedule == "constant":
+        return jnp.asarray(cfg.lr, F32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    cfg: OptimConfig
+    init: Callable
+    apply: Callable            # (grads, state, params, step) -> (params, state)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def _make_sgd(cfg: OptimConfig) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)}
+
+    def apply(grads, state, params, step):
+        lr = lr_at(cfg, step)
+        mom = jax.tree.map(lambda m, g: cfg.momentum * m + g,
+                           state["mom"], grads)
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(F32) - lr * m).astype(p.dtype), params, mom)
+        return new_p, {"mom": mom}
+
+    return Optimizer(cfg, init, apply)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (f32 master + f32 moments)
+# ---------------------------------------------------------------------------
+
+def _make_adamw(cfg: OptimConfig) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, F32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                # copy=True: must not alias params (donation safety)
+                "master": jax.tree.map(
+                    lambda p: jnp.array(p, dtype=F32, copy=True), params)}
+
+    def apply(grads, state, params, step):
+        lr = lr_at(cfg, step)
+        t = jnp.asarray(step + 1, F32)
+        bc1 = 1 - cfg.b1 ** t
+        bc2 = 1 - cfg.b2 ** t
+        m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g,
+                         state["v"], grads)
+        def upd(w, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+            return w - lr * (u + cfg.weight_decay * w)
+        master = jax.tree.map(upd, state["master"], m, v)
+        new_p = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+        return new_p, {"m": m, "v": v, "master": master}
+
+    return Optimizer(cfg, init, apply)
+
+
+# ---------------------------------------------------------------------------
+# 8-bit AdamW (blockwise absmax int8 moments, no master)
+# ---------------------------------------------------------------------------
+
+def _q_shape(p, bs: int):
+    n = p.size
+    nb = -(-n // bs)
+    return n, nb
+
+
+def _quantize(x: jax.Array, bs: int) -> Tuple[jax.Array, jax.Array]:
+    n = x.size
+    nb = -(-n // bs)
+    flat = jnp.pad(x.reshape(-1), (0, nb * bs - n)).reshape(nb, bs)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    q = jnp.round(flat / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = q.astype(F32) * scale[:, None]
+    n = 1
+    for s in shape:
+        n *= s
+    return flat.reshape(-1)[:n].reshape(shape)
+
+
+def _make_adam8bit(cfg: OptimConfig) -> Optimizer:
+    bs = cfg.block_size
+
+    def init(params):
+        def zq(p):
+            n, nb = _q_shape(p, bs)
+            return {"q": jnp.zeros((nb, bs), jnp.int8),
+                    "s": jnp.zeros((nb,), F32)}
+        return {"m": jax.tree.map(zq, params, is_leaf=_is_arr),
+                "v": jax.tree.map(zq, params, is_leaf=_is_arr)}
+
+    def apply(grads, state, params, step):
+        lr = lr_at(cfg, step)
+        t = jnp.asarray(step + 1, F32)
+        bc1 = 1 - cfg.b1 ** t
+        bc2 = 1 - cfg.b2 ** t
+
+        def upd(p, g, mq, vq):
+            m = cfg.b1 * _dequantize(mq["q"], mq["s"], g.shape) + (1 - cfg.b1) * g
+            v = cfg.b2 * _dequantize(vq["q"], vq["s"], g.shape) + (1 - cfg.b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(jnp.maximum(v, 0.0) / bc2) + cfg.eps)
+            w = p.astype(F32) - lr * (u + cfg.weight_decay * p.astype(F32))
+            qm, sm = _quantize(m, bs)
+            qv, sv = _quantize(v, bs)
+            return w.astype(p.dtype), {"q": qm, "s": sm}, {"q": qv, "s": sv}
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m_, v_) for p, g, m_, v_
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(cfg, init, apply)
+
+
+def _is_arr(x):
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def make_optimizer(cfg: OptimConfig) -> Optimizer:
+    if cfg.name == "sgd":
+        return _make_sgd(cfg)
+    if cfg.name == "adamw":
+        return _make_adamw(cfg)
+    if cfg.name == "adam8bit":
+        return _make_adam8bit(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

@@ -1,0 +1,5 @@
+from repro.sim.dataflow import (DIVA, OS, WS, Accel, gemm_cycles, gemm_time,
+                                dp_training_time, util)
+
+__all__ = ["WS", "OS", "DIVA", "Accel", "gemm_cycles", "gemm_time", "util",
+           "dp_training_time"]

@@ -1,0 +1,5 @@
+from repro.train.checkpoint import CheckpointManager
+from repro.train.state import TrainState
+from repro.train.trainer import Trainer, make_train_step
+
+__all__ = ["CheckpointManager", "TrainState", "Trainer", "make_train_step"]

@@ -1,0 +1,21 @@
+"""TrainState: the complete checkpointable training state (a pytree)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array          # i32 scalar
+    params: Any
+    opt_state: Any
+
+    @staticmethod
+    def create(params, opt_state) -> "TrainState":
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt_state=opt_state)

@@ -1,0 +1,179 @@
+"""Training runtime: jitted DP train step + fault-tolerant loop.
+
+Fault-tolerance model (1000+-node design, DESIGN.md §5):
+* SIGTERM/SIGINT (preemption notice) -> finish current step, checkpoint,
+  exit cleanly; resume is exact because data + noise are (seed, step)-keyed.
+* Transient step failure -> retry the step (bit-identical update).
+* Straggler watchdog: any step slower than ``watchdog_factor`` x the median
+  is logged with its step index (on real fleets this feeds the scheduler).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core import PrivacyAccountant, make_noisy_grad_fn
+from repro.data import batch_for, make_source
+from repro.optim import make_optimizer
+from repro.train.checkpoint import CheckpointManager
+from repro.train.state import TrainState
+
+
+def make_train_step(model, train_cfg: TrainConfig) -> Callable:
+    """Build fn(state, batch, key) -> (state, metrics).  Pure; jit outside.
+
+    With ``compress_pod_grads``: the DP-noised gradient sum is int8+error-
+    feedback compressed before the cross-pod reduction (dist/compress.py);
+    the error residual rides in the optimizer state so it is checkpointed.
+    """
+    grad_fn = make_noisy_grad_fn(model.loss_fn, train_cfg.dp,
+                                 grad_accum=train_cfg.grad_accum)
+    opt = make_optimizer(train_cfg.optim)
+    compress = train_cfg.compress_pod_grads
+
+    def step_fn(state: TrainState, batch, key):
+        grads, metrics = grad_fn(state.params, batch, key)
+        if compress:
+            from repro.dist.compress import compress_grads
+            grads, new_err = compress_grads(grads,
+                                            state.opt_state["grad_err"])
+            new_params, new_opt = opt.apply(grads, state.opt_state["opt"],
+                                            state.params, state.step)
+            new_opt = {"opt": new_opt, "grad_err": new_err}
+        else:
+            new_params, new_opt = opt.apply(grads, state.opt_state,
+                                            state.params, state.step)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                          for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics, update_norm=gn)
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt_state=new_opt), metrics
+
+    return step_fn
+
+
+def make_opt_init(train_cfg: TrainConfig, opt) -> Callable:
+    def init(params):
+        st = opt.init(params)
+        if train_cfg.compress_pod_grads:
+            from repro.dist.compress import init_error_state
+            return {"opt": st, "grad_err": init_error_state(params)}
+        return st
+    return init
+
+
+class Trainer:
+    """Single-controller training loop (the multi-pod launcher wires the
+    same loop through pjit + jax.distributed, launch/train.py)."""
+
+    def __init__(self, model, train_cfg: TrainConfig, shape,
+                 jit_step: bool = True, shard_batch=None,
+                 inject_failure_at: Optional[int] = None):
+        self.model = model
+        self.cfg = train_cfg
+        self.shape = shape
+        self.source = make_source(train_cfg.data_source, model.arch.vocab,
+                                  train_cfg.seed)
+        self.step_fn = make_train_step(model, train_cfg)
+        if jit_step:
+            self.step_fn = jax.jit(self.step_fn, donate_argnums=(0,))
+        self.opt = make_optimizer(train_cfg.optim)
+        self.ckpt = CheckpointManager(train_cfg.ckpt_dir,
+                                      keep=train_cfg.ckpt_keep,
+                                      use_async=train_cfg.ckpt_async)
+        self.accountant = PrivacyAccountant(
+            batch_size=shape.global_batch,
+            dataset_size=getattr(self.source, "dataset_size", 1_000_000),
+            noise_multiplier=train_cfg.dp.noise_multiplier,
+            delta=train_cfg.dp.delta)
+        self.shard_batch = shard_batch or (lambda b: jax.tree.map(jnp.asarray, b))
+        self._preempted = False
+        self._step_times: list = []
+        self.inject_failure_at = inject_failure_at
+        self._injected = False
+        self.history: list = []
+
+    # -- lifecycle ---------------------------------------------------------
+    def init_state(self, key) -> TrainState:
+        params = self.model.init(key)
+        init = make_opt_init(self.cfg, self.opt)
+        return TrainState.create(params, init(params))
+
+    def restore_or_init(self, key) -> TrainState:
+        if self.ckpt.latest_step() is not None:
+            like = jax.eval_shape(lambda: self.init_state(key))
+            state = self.ckpt.restore(like)
+            print(f"[trainer] restored step {int(state.step)} "
+                  f"from {self.cfg.ckpt_dir}")
+            return state
+        return self.init_state(key)
+
+    def _handle_preempt(self, signum, frame):
+        self._preempted = True
+
+    # -- loop ---------------------------------------------------------------
+    def run(self, state: TrainState, steps: Optional[int] = None,
+            install_signals: bool = True) -> TrainState:
+        cfg = self.cfg
+        steps = steps if steps is not None else cfg.steps
+        old_handlers = {}
+        if install_signals:
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                old_handlers[sig] = signal.signal(sig, self._handle_preempt)
+        try:
+            start = int(state.step)
+            for step in range(start, steps):
+                batch = self.shard_batch(
+                    batch_for(self.source, self.model.arch, self.shape, step))
+                key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+                t0 = time.perf_counter()
+                for attempt in range(3):   # transient-failure retry
+                    try:
+                        if (self.inject_failure_at == step
+                                and not self._injected):
+                            self._injected = True
+                            raise RuntimeError("injected transient failure")
+                        state, metrics = self.step_fn(state, batch, key)
+                        break
+                    except RuntimeError as e:
+                        print(f"[trainer] step {step} attempt {attempt} "
+                              f"failed: {e}; retrying")
+                        if attempt == 2:
+                            raise
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self._watchdog(step, dt)
+                if (step + 1) % cfg.log_every == 0 or step == steps - 1:
+                    eps = self.accountant.epsilon_at(step + 1)
+                    rec = {k: float(v) for k, v in metrics.items()}
+                    rec.update(step=step, sec=dt, epsilon=eps)
+                    self.history.append(rec)
+                    print(f"[trainer] step {step:5d} "
+                          f"loss {rec['loss']:.4f} eps {eps:.3f} "
+                          f"({dt*1e3:.0f} ms)")
+                if (step + 1) % cfg.ckpt_every == 0 or step == steps - 1 \
+                        or self._preempted:
+                    self.ckpt.save(state, step + 1)
+                if self._preempted:
+                    print(f"[trainer] preempted at step {step}; "
+                          f"checkpoint saved, exiting")
+                    break
+            self.ckpt.wait()
+            return state
+        finally:
+            for sig, h in old_handlers.items():
+                signal.signal(sig, h)
+
+    def _watchdog(self, step: int, dt: float) -> None:
+        self._step_times.append(dt)
+        hist = self._step_times[-50:]
+        med = float(np.median(hist))
+        if len(hist) >= 5 and dt > self.cfg.watchdog_factor * med:
+            print(f"[trainer] WATCHDOG straggler: step {step} took "
+                  f"{dt:.2f}s (median {med:.2f}s)")

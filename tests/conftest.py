@@ -1,0 +1,12 @@
+import jax
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", deadline=None, max_examples=20,
+                          derandomize=True)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,57 @@
+"""Shared test utilities."""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.core.context import DPContext
+from repro.models.transformer import build_model
+
+
+def tiny_model(name: str, dropless: bool = False):
+    arch = reduced(ARCHS[name])
+    if dropless and arch.moe.enabled:
+        cf = arch.moe.num_experts / arch.moe.top_k
+        arch = replace(arch, moe=replace(arch.moe, capacity_factor=cf))
+    return arch, build_model(arch, param_dtype="float32",
+                             compute_dtype="float32")
+
+
+def make_batch(arch, key, B=4, T=32):
+    if arch.embed_stub:
+        k1, k2 = jax.random.split(key)
+        return {"embeds": 0.5 * jax.random.normal(k1, (B, T, arch.d_model)),
+                "labels": jax.random.randint(k2, (B, T), 0, arch.vocab)}
+    return {"tokens": jax.random.randint(key, (B, T + 1), 0, arch.vocab)}
+
+
+def oracle_per_example_norms_sq(model, params, batch) -> np.ndarray:
+    """Ground truth: per-example grad sq-norms via vmap(grad)."""
+    B = jax.tree.leaves(batch)[0].shape[0]
+
+    def one_loss(p, ex):
+        l, _ = model.loss_fn(p, jax.tree.map(lambda a: a[None], ex),
+                             DPContext.off())
+        return l[0]
+
+    gb = jax.vmap(lambda ex: jax.grad(one_loss)(params, ex))(batch)
+    return sum(np.sum(np.asarray(g, np.float64).reshape(B, -1) ** 2, -1)
+               for g in jax.tree.leaves(gb))
+
+
+def side_channel_norms_sq(model, params, batch, strategy="auto",
+                          use_kernels=False) -> np.ndarray:
+    B = jax.tree.leaves(batch)[0].shape[0]
+
+    def pass1(p, acc0):
+        ctx = DPContext(acc=acc0, mode="norm", strategy=strategy,
+                        use_kernels=use_kernels)
+        losses, ctx = model.loss_fn(p, batch, ctx)
+        return (jnp.sum(losses), ctx.acc), losses
+
+    acc0 = jnp.zeros((B,), jnp.float32)
+    _, pull, _ = jax.vjp(pass1, params, acc0, has_aux=True)
+    _, nsq = pull((jnp.ones(()), jnp.zeros((B,), jnp.float32)))
+    return np.asarray(nsq)

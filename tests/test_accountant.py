@@ -1,0 +1,72 @@
+"""RDP accountant: analytic anchors + hypothesis invariants."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.accountant import (compute_epsilon, rdp_subsampled_gaussian,
+                                   rdp_to_eps)
+
+
+def test_full_batch_matches_gaussian_rdp():
+    # q=1: subsampled Gaussian degenerates to the Gaussian mechanism,
+    # RDP(a) = a / (2 sigma^2)
+    for a in (2, 4, 16, 64):
+        for sigma in (0.8, 1.0, 2.0):
+            assert rdp_subsampled_gaussian(1.0, sigma, a) == pytest.approx(
+                a / (2 * sigma ** 2))
+
+
+def test_zero_sampling_rate_is_free():
+    assert rdp_subsampled_gaussian(0.0, 1.0, 8) == 0.0
+
+
+def test_small_q_quadratic_regime():
+    # for small q, RDP(2) ~= 2 q^2 (e^{1/sigma^2} - 1)-ish; sanity: RDP
+    # shrinks ~quadratically with q
+    r1 = rdp_subsampled_gaussian(1e-3, 1.0, 2)
+    r2 = rdp_subsampled_gaussian(2e-3, 1.0, 2)
+    assert 3.0 < r2 / r1 < 4.5
+
+
+@given(st.integers(1, 2000), st.floats(0.5, 4.0))
+def test_epsilon_monotone_in_steps(steps, sigma):
+    e1, _ = compute_epsilon(steps, 64, 50_000, sigma, 1e-5)
+    e2, _ = compute_epsilon(steps + 100, 64, 50_000, sigma, 1e-5)
+    assert e2 >= e1 - 1e-9
+
+
+@given(st.floats(0.5, 2.0), st.floats(2.05, 6.0))
+def test_epsilon_decreasing_in_sigma(s1, ratio):
+    s2 = s1 * ratio / 2.0
+    lo, hi = min(s1, s2), max(s1, s2)
+    e_lo, _ = compute_epsilon(500, 64, 50_000, lo, 1e-5)
+    e_hi, _ = compute_epsilon(500, 64, 50_000, hi, 1e-5)
+    assert e_hi <= e_lo + 1e-9
+
+
+@given(st.integers(2, 256), st.floats(1e-7, 1e-3))
+def test_rdp_to_eps_nonnegative(order, delta):
+    assert rdp_to_eps(0.5, order, delta) >= 0.0
+
+
+def test_known_magnitude():
+    """MNIST-scale anchor (Abadi-style setting): q=256/60000, sigma=1.1,
+    ~15000 steps -> eps in the low single digits."""
+    eps, order = compute_epsilon(15000, 256, 60_000, 1.1, 1e-5)
+    assert 1.0 < eps < 5.0, eps
+
+
+def test_no_noise_is_infinite():
+    eps, _ = compute_epsilon(10, 64, 1000, 0.0, 1e-5)
+    assert math.isinf(eps)
+
+
+def test_accountant_state_is_step_count_only():
+    from repro.core.accountant import PrivacyAccountant
+    acc = PrivacyAccountant(64, 50_000, 1.0, 1e-5)
+    assert acc.epsilon_at(0) == 0.0
+    # idempotent / order-free: epsilon depends only on the step index
+    e100 = acc.epsilon_at(100)
+    _ = acc.epsilon_at(7)
+    assert acc.epsilon_at(100) == e100

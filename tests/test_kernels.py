@@ -1,0 +1,153 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps
++ hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.clip_reduce import clip_reduce
+from repro.kernels.gram_norm import gram_norm
+from repro.kernels.pegrad_norm import pegrad_norm
+
+SHAPES_PE = [(1, 8, 8, 8), (2, 32, 16, 24), (2, 130, 128, 256),
+             (3, 7, 5, 200), (1, 256, 130, 64), (2, 16, 384, 96)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES_PE)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pegrad_norm_sweep(shape, dtype, key):
+    BG, T, di, do = shape
+    x = _rand(key, (BG, T, di), dtype)
+    gy = _rand(jax.random.fold_in(key, 1), (BG, T, do), dtype)
+    got = pegrad_norm(x, gy, interpret=True)
+    want = ref.pegrad_norm_ref(x, gy)
+    rtol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got, want, rtol=rtol)
+
+
+@pytest.mark.parametrize("shape", [(2, 16, 8, 12), (2, 200, 64, 48),
+                                   (1, 130, 520, 16), (3, 33, 7, 130)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gram_norm_sweep(shape, dtype, key):
+    BG, T, di, do = shape
+    x = _rand(key, (BG, T, di), dtype)
+    gy = _rand(jax.random.fold_in(key, 1), (BG, T, do), dtype)
+    got = gram_norm(x, gy, interpret=True)
+    want = ref.gram_norm_ref(x, gy)
+    rtol = 1e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(got, want, rtol=rtol)
+
+
+@pytest.mark.parametrize("square", [True, False])
+def test_gram_norm_masked(square, key):
+    B, T, d = 3, 40, 16
+    ids = jax.random.randint(key, (B, T), 0, 7)
+    x = _rand(key, (B, T, d), jnp.float32)
+    gy = _rand(jax.random.fold_in(key, 1), (B, T, d), jnp.float32)
+    got = gram_norm(x, gy, ids, interpret=True, square=square)
+    want = ref.gram_norm_ref(x, gy, ids, square=square)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_gram_matches_pegrad(key):
+    """Both kernels compute the same quantity two ways."""
+    BG, T, di, do = 2, 24, 20, 28
+    x = _rand(key, (BG, T, di), jnp.float32)
+    gy = _rand(jax.random.fold_in(key, 1), (BG, T, do), jnp.float32)
+    a = pegrad_norm(x, gy, interpret=True)
+    b = gram_norm(x, gy, interpret=True)
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,N", [(4, 100), (12, 3000), (8, 128), (3, 7)])
+def test_clip_reduce_sweep(B, N, key):
+    g = _rand(key, (B, N), jnp.float32)
+    c = jax.random.uniform(jax.random.fold_in(key, 1), (B,))
+    got = clip_reduce(g, c, interpret=True)
+    want = ref.clip_reduce_ref(g, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=15)
+@given(bg=st.integers(1, 3), t=st.integers(1, 40), di=st.integers(1, 40),
+       do=st.integers(1, 40), seed=st.integers(0, 2 ** 16))
+def test_pegrad_norm_property(bg, t, di, do, seed):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (bg, t, di))
+    gy = jax.random.normal(jax.random.fold_in(k, 1), (bg, t, do))
+    got = pegrad_norm(x, gy, interpret=True)
+    want = ref.pegrad_norm_ref(x, gy)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-6)
+    assert bool(jnp.all(got >= -1e-6))  # norms are nonnegative
+
+
+@settings(max_examples=15)
+@given(b=st.integers(1, 4), n=st.integers(1, 300), seed=st.integers(0, 2 ** 16))
+def test_clip_reduce_property(b, n, seed):
+    k = jax.random.PRNGKey(seed)
+    g = jax.random.normal(k, (b, n))
+    c = jax.random.uniform(jax.random.fold_in(k, 1), (b,))
+    got = clip_reduce(g, c, interpret=True)
+    want = ref.clip_reduce_ref(g, c)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("cfg", [(2, 16, 2, 2, 8, True), (1, 33, 1, 3, 20, True),
+                                 (2, 24, 4, 1, 96, True), (1, 16, 2, 2, 8, False)])
+def test_flash_attention_fwd_bwd(cfg, key):
+    """Pallas flash attention (interpret) + blocked-jnp bwd vs plain-softmax
+    oracle, across GQA layouts, non-tile-aligned shapes, causal/full."""
+    B, T, KV, rep, hd, causal = cfg
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, T, KV, rep, hd))
+    k = jax.random.normal(ks[1], (B, T, KV, hd))
+    v = jax.random.normal(ks[2], (B, T, KV, hd))
+    o = ops.flash_attention(q, k, v, causal)
+    want = ref.flash_attn_ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+    f1 = lambda q, k, v: jnp.sum(jnp.sin(ops.flash_attention(q, k, v, causal)))
+    f2 = lambda q, k, v: jnp.sum(jnp.sin(ref.flash_attn_ref(q, k, v, causal)))
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-5)
+
+
+def test_model_attention_flash_path_matches(key):
+    """Model forward with USE_FLASH on == blocked-XLA attention path."""
+    from repro.configs import ARCHS, reduced
+    from repro.core.context import DPContext
+    from repro.models.transformer import build_model
+    arch = reduced(ARCHS["chatglm3-6b"])
+    model = build_model(arch, param_dtype="float32", compute_dtype="float32")
+    params = model.init(key)
+    batch = {"tokens": jax.random.randint(key, (2, 33), 0, arch.vocab)}
+    l1, _ = model.loss_fn(params, batch, DPContext.off())
+    old = ops.USE_FLASH
+    try:
+        ops.USE_FLASH = True
+        l2, _ = model.loss_fn(params, batch, DPContext.off())
+    finally:
+        ops.USE_FLASH = old
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4)
+
+
+def test_ops_wrappers_group_reduction(key):
+    """ops.* fold the expert/group dim correctly."""
+    B, G, T, d = 2, 3, 10, 8
+    x = jax.random.normal(key, (B, G, T, d))
+    gy = jax.random.normal(jax.random.fold_in(key, 1), (B, G, T, d))
+    got = ops.pegrad_norm(x, gy)
+    per = ref.pegrad_norm_ref(x.reshape(B * G, T, d), gy.reshape(B * G, T, d))
+    want = per.reshape(B, G).sum(1)
+    np.testing.assert_allclose(got, want, rtol=1e-4)

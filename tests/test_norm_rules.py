@@ -1,0 +1,91 @@
+"""Unit tests for the per-site norm rules in core/norms.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import norms
+
+
+def _brute_force(x, gy):
+    """n_b = sum_g || x_bg^T gy_bg ||_F^2 via explicit materialization."""
+    B, G, T, di = x.shape
+    out = np.zeros(B)
+    for b in range(B):
+        for g in range(G):
+            m = np.asarray(x[b, g], np.float64).T @ np.asarray(gy[b, g],
+                                                               np.float64)
+            out[b] += (m ** 2).sum()
+    return out
+
+
+@pytest.mark.parametrize("shape", [(2, 1, 8, 5, 7), (3, 4, 6, 9, 3),
+                                   (1, 2, 1, 16, 4)])
+def test_strategies_equal_brute_force(shape, key):
+    B, G, T, di, do = shape
+    x = jax.random.normal(key, (B, G, T, di))
+    gy = jax.random.normal(jax.random.fold_in(key, 1), (B, G, T, do))
+    want = _brute_force(x, gy)
+    np.testing.assert_allclose(norms.dense_nsq_materialize(x, gy), want,
+                               rtol=1e-5)
+    np.testing.assert_allclose(norms.dense_nsq_gram(x, gy), want, rtol=1e-5)
+
+
+def test_chunked_paths_hit(key, monkeypatch):
+    """Force tiny chunk budget -> scan paths run and stay exact."""
+    monkeypatch.setattr(norms, "MAX_CHUNK_ELEMS", 64)
+    B, G, T, di, do = 2, 1, 12, 10, 6
+    x = jax.random.normal(key, (B, G, T, di))
+    gy = jax.random.normal(jax.random.fold_in(key, 1), (B, G, T, do))
+    want = _brute_force(x, gy)
+    np.testing.assert_allclose(norms.dense_nsq_materialize(x, gy), want,
+                               rtol=1e-5)
+    np.testing.assert_allclose(norms.dense_nsq_gram(x, gy), want, rtol=1e-5)
+
+
+def test_embed_rule_vs_scatter_oracle(key):
+    B, T, V, d = 3, 24, 7, 5
+    ids = jax.random.randint(key, (B, T), 0, V)
+    gy = jax.random.normal(jax.random.fold_in(key, 1), (B, T, d))
+    got = norms.embed_nsq(ids, gy)
+    want = np.zeros(B)
+    for b in range(B):
+        tab = np.zeros((V, d))
+        for t in range(T):
+            tab[int(ids[b, t])] += np.asarray(gy[b, t])
+        want[b] = (tab ** 2).sum()
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+@settings(max_examples=20)
+@given(b=st.integers(1, 3), t=st.integers(1, 20), v=st.integers(1, 10),
+       d=st.integers(1, 8), seed=st.integers(0, 2 ** 16))
+def test_embed_rule_property(b, t, v, d, seed):
+    k = jax.random.PRNGKey(seed)
+    ids = jax.random.randint(k, (b, t), 0, v)
+    gy = jax.random.normal(jax.random.fold_in(k, 1), (b, t, d))
+    got = np.asarray(norms.embed_nsq(ids, gy))
+    want = np.zeros(b)
+    for i in range(b):
+        tab = np.zeros((v, d))
+        for tt in range(t):
+            tab[int(ids[i, tt])] += np.asarray(gy[i, tt])
+        want[i] = (tab ** 2).sum()
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_auto_picks_cheaper():
+    # long T, small d -> materialize; short T, big d -> gram
+    assert norms.pick_strategy("auto", (1, 1, 1000, 8), (1, 1, 1000, 8)) \
+        == "materialize"
+    assert norms.pick_strategy("auto", (1, 1, 4, 512), (1, 1, 4, 512)) \
+        == "gram"
+
+
+def test_canon4():
+    assert norms.canon4(jnp.zeros((2, 5))).shape == (2, 1, 1, 5)
+    assert norms.canon4(jnp.zeros((2, 3, 5))).shape == (2, 1, 3, 5)
+    assert norms.canon4(jnp.zeros((2, 3, 4, 5))).shape == (2, 3, 4, 5)
+    with pytest.raises(ValueError):
+        norms.canon4(jnp.zeros((2,)))

@@ -1,0 +1,135 @@
+"""Optimizers: reference math, 8-bit quantization quality, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimConfig
+from repro.optim import lr_at, make_optimizer
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (32, 16)),
+            "b": jax.random.normal(k2, (64,))}
+
+
+def test_sgd_momentum_reference(key):
+    cfg = OptimConfig(name="sgd", lr=0.1, momentum=0.9, schedule="constant")
+    opt = make_optimizer(cfg)
+    p = _tree(key)
+    g = jax.tree.map(jnp.ones_like, p)
+    s = opt.init(p)
+    p1, s1 = opt.apply(g, s, p, 0)
+    np.testing.assert_allclose(np.asarray(p1["a"]),
+                               np.asarray(p["a"]) - 0.1, rtol=1e-6)
+    p2, _ = opt.apply(g, s1, p1, 1)
+    np.testing.assert_allclose(np.asarray(p2["a"]),
+                               np.asarray(p1["a"]) - 0.1 * 1.9, rtol=1e-6)
+
+
+def test_adamw_first_step_is_lr_sized(key):
+    cfg = OptimConfig(name="adamw", lr=1e-2, schedule="constant",
+                      weight_decay=0.0)
+    opt = make_optimizer(cfg)
+    p = _tree(key)
+    g = jax.tree.map(lambda x: 0.5 * jnp.ones_like(x), p)
+    p1, _ = opt.apply(g, opt.init(p), p, 0)
+    step = np.asarray(p["a"] - p1["a"])
+    np.testing.assert_allclose(step, 1e-2, rtol=1e-3)  # bias-corrected
+
+
+def test_adam8bit_tracks_adamw(key):
+    cfg32 = OptimConfig(name="adamw", lr=1e-3, schedule="constant")
+    cfg8 = OptimConfig(name="adam8bit", lr=1e-3, schedule="constant",
+                       block_size=64)
+    o32, o8 = make_optimizer(cfg32), make_optimizer(cfg8)
+    p = _tree(key)
+    p32, s32 = p, o32.init(p)
+    p8, s8 = p, o8.init(p)
+    for step in range(5):
+        g = jax.tree.map(
+            lambda x: 0.1 * jax.random.normal(
+                jax.random.fold_in(key, step), x.shape), p)
+        p32, s32 = o32.apply(g, s32, p32, step)
+        p8, s8 = o8.apply(g, s8, p8, step)
+    for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(p8)):
+        d = np.abs(np.asarray(a) - np.asarray(b)).max()
+        scale = np.abs(np.asarray(a)).max()
+        assert d < 2e-2 * max(scale, 1.0), d
+
+
+def test_adam8bit_state_is_small(key):
+    cfg = OptimConfig(name="adam8bit", block_size=64)
+    opt = make_optimizer(cfg)
+    p = {"w": jnp.zeros((1024, 1024), jnp.bfloat16)}
+    s = jax.eval_shape(opt.init, p)
+    bytes_state = sum(np.prod(l.shape) * l.dtype.itemsize
+                      for l in jax.tree.leaves(s))
+    bytes_param = 1024 * 1024 * 2
+    assert bytes_state < 1.2 * bytes_param  # ~2 bytes/param + scales
+
+
+def test_warmup_cosine_schedule():
+    cfg = OptimConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      schedule="warmup_cosine")
+    assert float(lr_at(cfg, 0)) == 0.0
+    assert float(lr_at(cfg, 10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr_at(cfg, 100)) == pytest.approx(0.1, rel=1e-2)
+    mid = float(lr_at(cfg, 55))
+    assert 0.1 < mid < 1.0
+
+
+def test_quantize_roundtrip(key):
+    from repro.optim.optimizers import _dequantize, _quantize
+    x = jax.random.normal(key, (1000,)) * 3.0
+    q, s = _quantize(x, 128)
+    y = _dequantize(q, s, x.shape)
+    err = np.abs(np.asarray(x - y))
+    # blockwise absmax int8: error bounded by blockmax/127
+    assert err.max() <= float(np.abs(np.asarray(x)).max()) / 127 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (int8 + error feedback)
+# ---------------------------------------------------------------------------
+
+def test_error_feedback_is_unbiased_over_steps(key):
+    """Error feedback: the cumulative transmitted signal converges to the
+    cumulative true signal (residual stays bounded)."""
+    from repro.dist.compress import compress_grads, init_error_state
+    g = {"w": 0.01 * jax.random.normal(key, (257,))}   # non-block-aligned
+    err = init_error_state(g)
+    sent_total = np.zeros(257)
+    for step in range(20):
+        gs = {"w": g["w"] * (1 + 0.1 * step)}
+        out, err = compress_grads(gs, err)
+        sent_total += np.asarray(out["w"])
+        true_total = sum(np.asarray(g["w"]) * (1 + 0.1 * s)
+                         for s in range(step + 1))
+        resid = np.abs(np.asarray(err["w"]))
+        # residual never exceeds one quantization bucket
+        assert resid.max() <= np.abs(np.asarray(gs["w"])).max() / 127 * 2 + \
+            np.abs(true_total - sent_total).max() * 0 + 1e-3
+    np.testing.assert_allclose(sent_total, true_total,
+                               atol=np.abs(true_total).max() / 100)
+
+
+def test_trainer_with_compression(tmp_path, key):
+    from repro.configs.base import (DPConfig, OptimConfig, ShapeConfig,
+                                    TrainConfig)
+    from repro.train import Trainer
+    import sys, os
+    sys.path.insert(0, os.path.dirname(__file__))
+    from helpers import tiny_model
+    arch, model = tiny_model("stablelm-3b")
+    cfg = TrainConfig(steps=4, log_every=2, ckpt_every=4,
+                      ckpt_dir=str(tmp_path), compress_pod_grads=True,
+                      dp=DPConfig(algo="dpsgd_r", noise_multiplier=0.3),
+                      optim=OptimConfig(name="adamw", lr=1e-3,
+                                        warmup_steps=1, total_steps=4))
+    tr = Trainer(model, cfg, ShapeConfig("t", 32, 4, "train"))
+    st = tr.run(tr.init_state(key), install_signals=False)
+    assert int(st.step) == 4
+    assert "grad_err" in st.opt_state
+    assert np.isfinite(tr.history[-1]["loss"])
