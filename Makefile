@@ -1,0 +1,29 @@
+# Single-invocation entry points (documented in README.md).
+# Everything imports from src/; PYTHONPATH is set per-target so the Makefile
+# works from a clean checkout with no install step.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-multidevice bench-smoke dryrun-smoke
+
+# tier-1 verify: the gate for every change
+test:
+	$(PY) -m pytest -x -q
+
+# distributed semantics on 8 fake CPU host devices (shard_map batch-locality,
+# sharded-vs-single-device equivalence, pjit train step on a (2,4) mesh)
+test-multidevice:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m pytest -x -q tests/test_dist_runtime.py tests/test_costs_sharding.py
+
+# paper-figure benchmarks via the analytical cycle/energy model (fast; the
+# measured system sections are `-m benchmarks.run --section system|roofline`)
+bench-smoke:
+	$(PY) -m benchmarks.run --section paper
+
+# one compile-only distribution cell with batch-local ops (artifact under
+# results/dryrun)
+dryrun-smoke:
+	$(PY) -m repro.launch.dryrun --arch stablelm-3b --shape train_4k \
+	    --mesh single --local-ops

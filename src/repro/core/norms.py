@@ -46,18 +46,34 @@ def canon4(x: jax.Array) -> jax.Array:
 
 
 def flops_materialize(xs, gys) -> int:
+    """FLOPs of the ``materialize`` rule: one (d_in, d_out) outer-product
+    GEMM per (example, group) — ``2·B·G·T·d_in·d_out``.  Linear in T."""
     b, g, t, di = xs
     do = gys[-1]
     return 2 * b * g * t * di * do
 
 
 def flops_gram(xs, gys) -> int:
+    """FLOPs of the ``gram`` (ghost norm) rule: two (T, T) Gram matrices per
+    (example, group) — ``2·B·G·T²·(d_in+d_out)``.  Quadratic in T but
+    independent of the d_in·d_out product."""
     b, g, t, di = xs
     do = gys[-1]
     return 2 * b * g * t * t * (di + do)
 
 
 def pick_strategy(strategy: str, x_shape, gy_shape) -> str:
+    """Resolve ``auto`` to the cheaper exact rule for this site (the
+    Book-Keeping trick; docs/ARCHITECTURE.md §Norm-rule selection).
+
+    ``gram`` wins iff ``T² · (d_in + d_out) < T · d_in · d_out``, i.e.
+    whenever the sequence/contraction length is below the harmonic scale of
+    the weight dims, ``T < d_in·d_out / (d_in+d_out)``.  Concretely: wide
+    dense sites at short T (MoE expert FFNs, whose per-(b,e) group length is
+    the expert capacity C ≪ d_expert) pick ``gram``; long-sequence sites
+    against narrow weights (T=4096 vs d≈2–8k) pick ``materialize``.  Both
+    are exact — the choice only affects cost, never the computed norm.
+    """
     if strategy != "auto":
         return strategy
     return ("materialize"
@@ -122,6 +138,14 @@ def dense_nsq_gram(x: jax.Array, gy: jax.Array) -> jax.Array:
 
 def dense_nsq(x: jax.Array, gy: jax.Array, strategy: str = "auto",
               use_kernels: bool = False) -> jax.Array:
+    """Per-example squared grad norms of a dense site ``y = x @ w``.
+
+    ``strategy``: "materialize" | "gram" | "auto" (``pick_strategy`` picks
+    the cheaper exact rule from the FLOP formulas above).  ``use_kernels``
+    routes to the fused Pallas kernels (kernels/pegrad_norm.py — DiVa's
+    outer-product engine + adder-tree PPU — and kernels/gram_norm.py)
+    instead of the chunked-XLA fallbacks.
+    """
     x4, gy4 = canon4(x), canon4(gy)
     strat = pick_strategy(strategy, x4.shape, gy4.shape)
     if use_kernels:

@@ -1,0 +1,30 @@
+"""repro.dist — the distribution layer.
+
+Three modules, consumed across the codebase:
+
+* ``sharding`` — logical-axis -> PartitionSpec rules and the NamedSharding
+  factories the launchers feed to ``jax.jit`` (``batch_shardings``,
+  ``state_shardings``, ``param_shardings``, ``cache_shardings``).
+* ``runtime``  — ambient ``layout`` + ``batch_local``/``attn_local``
+  shard_map wrappers for ops that must run per-batch-shard (MoE dispatch,
+  embedding norm rule, flash attention).
+* ``compress`` — int8 + error-feedback gradient compression for the
+  cross-pod reduction.
+
+See docs/ARCHITECTURE.md for how this maps onto the DiVa paper.
+"""
+from repro.dist import compress, runtime, sharding
+from repro.dist.compress import compress_grads, init_error_state
+from repro.dist.runtime import attn_local, batch_local, layout
+from repro.dist.sharding import (batch_pspec, batch_shardings,
+                                 cache_shardings, mesh_from_config,
+                                 param_shardings, spec_for_param,
+                                 state_shardings)
+
+__all__ = [
+    "compress", "runtime", "sharding",
+    "compress_grads", "init_error_state",
+    "attn_local", "batch_local", "layout",
+    "batch_pspec", "batch_shardings", "cache_shardings", "mesh_from_config",
+    "param_shardings", "spec_for_param", "state_shardings",
+]

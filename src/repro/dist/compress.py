@@ -1,0 +1,57 @@
+"""Gradient compression for the slow cross-pod link: blockwise-absmax int8
+with error feedback.
+
+The DP-noised gradient sum is the *only* tensor that crosses the pod
+boundary per step, and it already carries Gaussian noise of scale
+``sigma * C`` — quantization error an order of magnitude below the noise
+floor is free.  Error feedback makes the scheme unbiased over time: the
+residual ``t - dequantize(quantize(t))`` is carried into the next step, so
+the cumulative transmitted signal converges to the cumulative true signal
+(the residual never exceeds one quantization bucket; proven in
+tests/test_optim.py::test_error_feedback_is_unbiased_over_steps).
+
+The residual rides in the optimizer state (``trainer.py``) so that
+preemption/resume is bit-exact.
+
+Note on DP: compression happens strictly *after* clip + noise, so the
+privacy guarantee is untouched — it is pure post-processing.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+BLOCK = 256  # quantization block (same granularity as the 8-bit optimizer)
+
+
+def init_error_state(params):
+    """Zero error-feedback residuals, one f32 leaf per param."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+
+
+def _compress_leaf(g: jax.Array, err: jax.Array,
+                   block: int) -> Tuple[jax.Array, jax.Array]:
+    # same blockwise-absmax int8 codec as the 8-bit optimizer moments
+    from repro.optim.optimizers import _dequantize, _quantize
+    t = g.astype(F32) + err
+    q, scale = _quantize(t, block)
+    deq = _dequantize(q, scale, t.shape)
+    return deq, t - deq
+
+
+def compress_grads(grads, err_state, block: int = BLOCK):
+    """(grads, residuals) -> (dequantized grads, new residuals).
+
+    Each leaf is quantized to blockwise-absmax int8 *after* adding the
+    carried residual; what the optimizer sees is the dequantized value (the
+    int8 payload + per-block f32 scale is what would cross the wire: ~4.03
+    bytes -> 1.02 bytes per element).
+    """
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    outs = [_compress_leaf(g, e, block) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))

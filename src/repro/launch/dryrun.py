@@ -153,7 +153,7 @@ def build_cell(arch_name: str, shape_name: str, mesh, dp_algo: str = "dpsgd_r",
 
     # decode
     cache_abs = _abstract_cache(model, shape.global_batch, shape.seq_len)
-    cache_sh = cache_shardings(arch, mesh, shape.global_batch)
+    cache_sh = cache_shardings(mesh, cache_abs, shape.global_batch)
     pos_abs = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
     batch_sh = batch_shardings(mesh, batch_abs, shape.global_batch)
     pos_sh = batch_shardings(mesh, pos_abs, shape.global_batch)
@@ -205,6 +205,8 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
             t2 = time.time()
             mem = compiled.memory_analysis()
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):   # jax returns [dict] pre-0.5
+                ca = ca[0] if ca else {}
             hlo = compiled.as_text()
             coll, coll_top = hlo_collective_bytes(hlo, n_dev)  # per-device
             rec.update({

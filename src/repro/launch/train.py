@@ -27,7 +27,8 @@ import numpy as np
 from repro.configs import (SHAPES, apply_overrides, get_arch, parse_set_args,
                            reduced)
 from repro.configs.base import ShapeConfig, TrainConfig
-from repro.dist import batch_shardings, state_shardings
+from repro.dist import batch_shardings, runtime, state_shardings
+from repro.dist.sharding import batch_pspec
 from repro.launch.mesh import make_host_mesh, make_mesh
 from repro.models.transformer import build_model
 from repro.train import Trainer
@@ -83,7 +84,10 @@ def main() -> None:
     else:
         mesh = make_host_mesh()
 
-    with mesh:
+    # batch-local layout active while the step traces: MoE dispatch and the
+    # embedding norm rule run per-batch-shard under shard_map instead of the
+    # GSPMD-replicated scatter (dist/runtime.py)
+    with mesh, runtime.layout(mesh, batch_pspec(mesh, shape.global_batch)):
         def shard_batch(b):
             abs_tree = jax.tree.map(
                 lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), b)
