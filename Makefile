@@ -5,11 +5,17 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-multidevice bench-smoke dryrun-smoke
+.PHONY: test test-fast test-multidevice bench-smoke bench-serve dryrun-smoke
 
 # tier-1 verify: the gate for every change
 test:
 	$(PY) -m pytest -x -q
+
+# fast tier (~4 min vs ~7 for full): skips the interpret-mode Pallas
+# kernel sweeps and the jamba-398b heavies (@pytest.mark.slow); this is
+# what CI runs on push
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
 
 # distributed semantics on 8 fake CPU host devices (shard_map batch-locality,
 # sharded-vs-single-device equivalence, pjit train step on a (2,4) mesh)
@@ -21,6 +27,10 @@ test-multidevice:
 # measured system sections are `-m benchmarks.run --section system|roofline`)
 bench-smoke:
 	$(PY) -m benchmarks.run --section paper
+
+# serving: host-loop reference vs fully-jitted engine -> BENCH_serve.json
+bench-serve:
+	$(PY) -m benchmarks.serve_bench
 
 # one compile-only distribution cell with batch-local ops (artifact under
 # results/dryrun)

@@ -1,8 +1,11 @@
-"""Serve a small model with batched requests through the slot engine.
+"""Serve a small model with continuous batching through the jitted engine.
 
     PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-1.3b]
 
-Optionally restores weights from a train_dp_lm checkpoint directory.
+All decode state (tokens, positions, temperatures, budgets, caches) lives
+on device; the host only hears back when a request completes.  Compare
+``--engine host-loop`` (the pre-rewrite reference) to see the effect of
+per-token host syncs.
 """
 import argparse
 import time
@@ -12,7 +15,7 @@ import numpy as np
 
 from repro.configs import ARCHS, reduced
 from repro.models.transformer import build_model
-from repro.serve import Engine, Request
+from repro.serve import Engine, HostLoopEngine, Request
 
 
 def main():
@@ -21,12 +24,20 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "shortest-prompt"])
+    ap.add_argument("--engine", default="jitted",
+                    choices=["jitted", "host-loop"])
     args = ap.parse_args()
 
     arch = reduced(ARCHS[args.arch])
     model = build_model(arch, param_dtype="float32", compute_dtype="float32")
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, max_batch=3, cache_len=96)
+    if args.engine == "host-loop":
+        engine = HostLoopEngine(model, params, max_batch=3, cache_len=96)
+    else:
+        engine = Engine(model, params, max_batch=3, cache_len=96,
+                        policy=args.policy, record_ttft=True)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -42,6 +53,7 @@ def main():
     tok = sum(len(v) for v in results.values())
     print(f"{tok} tokens across {len(results)} requests in {dt:.2f}s "
           f"({tok/dt:.1f} tok/s, continuous batching over 3 slots)")
+    print(f"engine stats: {engine.stats}")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ from jax.experimental import pallas as pl
 F32 = jnp.float32
 
 
-def _kernel(g_ref, c_ref, out_ref, *, n_b: int):
+def _kernel(g_ref, c_ref, out_ref):
     b = pl.program_id(1)
 
     @pl.when(b == 0)
@@ -41,7 +41,7 @@ def clip_reduce(g: jax.Array, c: jax.Array, *, bb: int = 8, bn: int = 1024,
     gp = jnp.pad(g, ((0, Bp - B), (0, Np - N)))
     cp = jnp.pad(c, (0, Bp - B))
     out = pl.pallas_call(
-        functools.partial(_kernel, n_b=Bp // bb),
+        _kernel,
         grid=(Np // bn, Bp // bb),
         in_specs=[
             pl.BlockSpec((bb, bn), lambda n, b: (b, n)),

@@ -1,7 +1,11 @@
-"""Serving launcher: batched decode with the slot engine.
+"""Serving launcher: continuous batching with the fully-jitted engine.
 
   python -m repro.launch.serve --arch phi3-mini-3.8b --reduced \
-      --requests 8 --max-new 16 --cache-len 128
+      --requests 8 --max-new 16 --cache-len 128 --policy shortest-prompt
+
+``--engine host-loop`` runs the pre-rewrite reference engine instead
+(useful for eyeballing the speedup; ``benchmarks/serve_bench.py`` measures
+it properly).
 """
 from __future__ import annotations
 
@@ -13,7 +17,8 @@ import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.models.transformer import build_model
-from repro.serve import Engine, Request
+from repro.serve import Engine, HostLoopEngine, Request
+from repro.serve.scheduler import Scheduler
 
 
 def main() -> None:
@@ -27,6 +32,17 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=["jitted", "host-loop"],
+                    default="jitted")
+    ap.add_argument("--policy", choices=list(Scheduler.POLICIES),
+                    default="fifo")
+    ap.add_argument("--decode-chunk", type=int, default=16,
+                    help="fused decode steps per dispatch "
+                         "(floored to a power of two)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds, measured from "
+                         "just before the engine starts (cold-start jit "
+                         "compilation counts against it)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -35,16 +51,31 @@ def main() -> None:
     assert not arch.embed_stub, "serve launcher drives token-input archs"
     model = build_model(arch, param_dtype="float32", compute_dtype="float32")
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = Engine(model, params, max_batch=args.max_batch,
-                    cache_len=args.cache_len, seed=args.seed)
+    if args.engine == "host-loop":
+        if args.deadline is not None or args.policy != "fifo":
+            print("[serve] WARNING: --deadline/--policy are ignored by the "
+                  "host-loop reference engine (FIFO, no eviction)")
+        engine = HostLoopEngine(model, params, max_batch=args.max_batch,
+                                cache_len=args.cache_len, seed=args.seed)
+    else:
+        engine = Engine(model, params, max_batch=args.max_batch,
+                        cache_len=args.cache_len, seed=args.seed,
+                        policy=args.policy, decode_chunk=args.decode_chunk,
+                        record_ttft=True)
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
-    for uid in range(args.requests):
-        prompt = rng.integers(0, arch.vocab,
-                              rng.integers(4, args.prompt_len + 1))
+    prompts = [rng.integers(0, arch.vocab,
+                            rng.integers(4, args.prompt_len + 1))
+               for _ in range(args.requests)]
+    # deadline baseline sits after prompt generation, right before the
+    # engine starts, so all requests get the full budget
+    now = time.monotonic()
+    deadline = None if args.deadline is None else now + args.deadline
+    for uid, prompt in enumerate(prompts):
         engine.submit(Request(uid=uid, prompt=prompt.astype(np.int32),
                               max_new=args.max_new,
-                              temperature=args.temperature))
+                              temperature=args.temperature,
+                              deadline=deadline))
     out = engine.run()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(v) for v in out.values())
@@ -52,6 +83,10 @@ def main() -> None:
         print(f"[serve] req {uid}: {out[uid]}")
     print(f"[serve] {len(out)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
+    print(f"[serve] stats: {engine.stats}")
+    if getattr(engine, "ttft", None):
+        ms = 1e3 * np.mean(list(engine.ttft.values()))
+        print(f"[serve] mean time-to-first-token: {ms:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -335,16 +335,28 @@ class Model:
                 lambda l: jnp.zeros((reps,) + l.shape, l.dtype), one)
         return {"prelude": pre_c, "blocks": blocks_c}
 
-    def prefill(self, params, batch, cache_len: int):
-        """Full-prompt forward; returns (last-position logits, cache padded to
-        cache_len).  batch: tokens (B,T) or embeds (B,T,d)."""
+    def prefill(self, params, batch, cache_len: int, lengths=None):
+        """Full-prompt forward; returns (last-position logits (B,1,Vpad),
+        cache padded to cache_len).  batch: tokens (B,T) or embeds (B,T,d).
+
+        ``lengths``: optional (B,) int32 true prompt lengths for
+        right-padded batches — logits are gathered at position
+        ``lengths-1`` per row instead of the shared final position.  Exact
+        for attention layers (padded positions are causally masked); Mamba
+        recurrent state absorbs pad tokens, so callers batching hybrid/SSM
+        archs must pass equal-length prompts."""
         arch = self.arch
         ctx = DPContext.off()
         x, ctx = self._embed_in(params, batch, ctx)
         B, T = x.shape[0], x.shape[1]
         pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
         x, ctx, _, cache = self._stack(params, x, ctx, pos, want_cache=True)
-        logits, _ = self._head(params, x[:, -1:], ctx)
+        if lengths is None:
+            x_last = x[:, -1:]
+        else:
+            idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+            x_last = jnp.take_along_axis(x, idx, axis=1)
+        logits, _ = self._head(params, x_last, ctx)
 
         # pad attention KV caches (..., T, KV, hd) -> (..., cache_len, KV, hd)
         def pad_leafed(cc, sig):

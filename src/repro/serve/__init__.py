@@ -1,3 +1,7 @@
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine
+from repro.serve.host_loop import HostLoopEngine
+from repro.serve.sampling import sample_tokens
+from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["Engine", "Request"]
+__all__ = ["Engine", "HostLoopEngine", "Request", "Scheduler",
+           "sample_tokens"]

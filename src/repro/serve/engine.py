@@ -1,126 +1,259 @@
-"""Batched serving engine: slot-based continuous batching.
+"""Fully-jitted continuous-batching serving engine.
 
-``Engine`` keeps a fixed-capacity batched cache (max_batch slots x
-cache_len).  Requests are prefilled one at a time into a free slot (the
-prefill and decode computations are the same jitted ``Model`` methods the
-dry-run lowers), then all active slots decode together; finished slots are
-refilled from the queue without stalling the others — continuous batching
-in its simplest correct form.
+The engine keeps *all* per-slot decode state on device — last tokens,
+write positions, per-slot temperatures, remaining-budget counters, the KV /
+SSM caches, and the emitted-token output buffer — and advances every active
+slot with a single jitted decode-sample step (``lax.scan``-chunked, so one
+dispatch covers up to ``decode_chunk`` tokens).  Sampling (greedy + Gumbel
+per-slot temperature, ``serve/sampling.py``) happens on device, so the
+steady-state decode loop performs **zero** per-token host syncs and zero
+Python branching on device values.
+
+Admission is a batched *prefill wave*: up to ``max_batch`` queued requests
+are right-padded to a shared chunked length and prefilled in one jit call;
+their caches are scattered into free slots and their first tokens sampled
+inside the same call.  Slot lifecycle (admit / free / evict, deadlines,
+FIFO vs shortest-prompt ordering) lives in ``serve/scheduler.py`` — pure
+host bookkeeping, possible because every request's completion step is known
+at admit time, so the host never reads the device to learn that a slot
+finished.  Outputs transfer back once per completion event, not per token.
+
+The pre-rewrite engine survives as ``serve/host_loop.py`` (reference for
+differential tests and the speedup baseline of ``benchmarks/serve_bench.py``).
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
+import time
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import MAMBA
+from repro.serve.sampling import mask_padded_vocab, sample_tokens
+from repro.serve.scheduler import Request, Scheduler
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray               # (T,) int32
-    max_new: int = 16
-    temperature: float = 0.0         # 0 -> greedy
-    out_tokens: Optional[List[int]] = None
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (n.bit_length() - 1)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
 
 
 class Engine:
     def __init__(self, model, params, max_batch: int = 4,
-                 cache_len: int = 128, seed: int = 0):
+                 cache_len: int = 128, seed: int = 0, policy: str = "fifo",
+                 decode_chunk: int = 16, prefill_chunk: int = 16,
+                 record_ttft: bool = False, clock=time.monotonic):
         self.model = model
         self.params = params
         self.B = max_batch
         self.S = cache_len
-        self.key = jax.random.PRNGKey(seed)
-        self.cache = model.init_cache(max_batch, cache_len)
-        self.pos = np.zeros((max_batch,), np.int32)
-        self.active: List[Optional[Request]] = [None] * max_batch
-        self.remaining = np.zeros((max_batch,), np.int32)
-        self.last_token = np.zeros((max_batch,), np.int32)
-        self.queue: deque = deque()
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, cache_len),
-            static_argnums=())
-        self._decode = jax.jit(model.decode_step)
+        # power-of-two sub-chunks keep the set of compiled decode lengths
+        # at O(log decode_chunk) instead of one compile per distinct gap
+        self.decode_chunk = _pow2_floor(max(1, decode_chunk))
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.record_ttft = record_ttft
+        self.clock = clock
+        # Mamba/hybrid archs: recurrent state absorbs pad tokens, so waves
+        # may only batch equal-length prompts (scheduler enforces it)
+        self.has_mamba = MAMBA in model.arch.pattern()
+        self.sched = Scheduler(max_batch, cache_len, policy=policy,
+                               same_length_waves=self.has_mamba, clock=clock)
+        self.dev = {
+            "cache": model.init_cache(max_batch, cache_len),
+            "tokens": jnp.zeros((max_batch,), jnp.int32),
+            "pos": jnp.zeros((max_batch,), jnp.int32),
+            "temps": jnp.zeros((max_batch,), jnp.float32),
+            "remaining": jnp.zeros((max_batch,), jnp.int32),
+            "emitted": jnp.zeros((max_batch,), jnp.int32),
+            "out": jnp.zeros((max_batch, cache_len), jnp.int32),
+            "key": jax.random.PRNGKey(seed),
+        }
+        self.stats: Dict[str, int] = dict(
+            prefill_waves=0, decode_steps=0, decode_calls=0, host_syncs=0,
+            evicted=0)
+        self.ttft: Dict[int, float] = {}
+        self._build_jitted()
 
-    # -- queue ------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        req.out_tokens = []
-        self.queue.append(req)
+    # -- jitted device programs --------------------------------------------
+    def _build_jitted(self) -> None:
+        model, B, S = self.model, self.B, self.S
+        vocab = model.arch.vocab
 
-    def _free_slot(self) -> Optional[int]:
-        for i, r in enumerate(self.active):
-            if r is None:
-                return i
-        return None
+        def prefill_wave(params, dev, toks, lengths, slots, temps, budgets):
+            """One admission wave.  toks: (B, Tpad) right-padded prompts;
+            rows beyond the wave carry slot index B, which every scatter
+            drops (mode="drop")."""
+            key, sub = jax.random.split(dev["key"])
+            logits, c1 = model.prefill(params, {"tokens": toks}, S,
+                                       lengths=lengths)
+            first = sample_tokens(sub, logits[:, 0], temps, vocab)
 
-    def _admit(self) -> None:
-        while self.queue:
-            slot = self._free_slot()
-            if slot is None:
-                return
-            req = self.queue.popleft()
-            T = len(req.prompt)
-            assert T + req.max_new <= self.S, "request exceeds cache length"
-            logits, cache1 = self._prefill(
-                self.params, {"tokens": jnp.asarray(req.prompt)[None]})
-            # scatter the single-request cache into this slot.  Prelude
-            # leaves have batch at axis 0; scanned block leaves carry a
-            # leading (reps,) layer axis -> batch at axis 1.
-            self.cache = {
-                "prelude": [jax.tree.map(lambda cb, c1: cb.at[slot].set(c1[0]),
-                                         b, c)
-                            for b, c in zip(self.cache["prelude"],
-                                            cache1["prelude"])],
-                "blocks": (None if self.cache["blocks"] is None else
-                           jax.tree.map(
-                               lambda cb, c1: cb.at[:, slot].set(c1[:, 0]),
-                               self.cache["blocks"], cache1["blocks"])),
+            # prelude cache leaves carry batch at axis 0; scanned block
+            # leaves carry a leading (reps,) layer axis -> batch at axis 1
+            def pre_scatter(cb, cw):
+                return cb.at[slots].set(cw.astype(cb.dtype), mode="drop")
+
+            def blk_scatter(cb, cw):
+                return cb.at[:, slots].set(cw.astype(cb.dtype), mode="drop")
+
+            cache = {
+                "prelude": [jax.tree.map(pre_scatter, b, c) for b, c in
+                            zip(dev["cache"]["prelude"], c1["prelude"])],
+                "blocks": (None if dev["cache"]["blocks"] is None else
+                           jax.tree.map(blk_scatter, dev["cache"]["blocks"],
+                                        c1["blocks"])),
             }
-            tok = self._sample(logits[0, -1], req.temperature)
-            req.out_tokens.append(int(tok))
-            self.active[slot] = req
-            self.pos[slot] = T
-            self.remaining[slot] = req.max_new - 1
-            self.last_token[slot] = int(tok)
 
-    def _sample(self, logits, temperature: float):
-        vocab = self.model.arch.vocab
-        lg = np.asarray(logits, np.float32)[:vocab]
-        if temperature <= 0:
-            return int(np.argmax(lg))
-        self.key, sub = jax.random.split(self.key)
-        g = np.asarray(jax.random.gumbel(sub, (vocab,)))
-        return int(np.argmax(lg / temperature + g))
+            def sset(a, v):
+                return a.at[slots].set(v.astype(a.dtype), mode="drop")
 
-    # -- main loop ----------------------------------------------------------
-    def step(self) -> None:
-        """One decode step across all active slots."""
-        toks = jnp.asarray(self.last_token)[:, None]
-        pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          {"tokens": toks}, pos)
-        for i, req in enumerate(self.active):
-            if req is None or self.remaining[i] <= 0:
+            return {
+                "cache": cache,
+                "key": key,
+                "tokens": sset(dev["tokens"], first),
+                "pos": sset(dev["pos"], lengths),
+                "temps": sset(dev["temps"], temps),
+                "remaining": sset(dev["remaining"], budgets - 1),
+                "emitted": sset(dev["emitted"], jnp.ones_like(budgets)),
+                "out": dev["out"].at[slots, 0].set(first, mode="drop"),
+            }
+
+        def decode_chunk(params, dev, n: int, all_greedy: bool):
+            """n fused decode-sample steps.  Slots whose budget is spent are
+            live-masked: their tokens/pos/counters freeze, so overshooting a
+            completion never corrupts a finished slot.  ``all_greedy`` is a
+            host-known static flag (the scheduler sees every active slot's
+            temperature): greedy-only bursts skip the PRNG split + Gumbel
+            draw entirely, and greedy tokens never depend on the key, so
+            both variants emit identical greedy streams."""
+            def one(d, _):
+                logits, cache = model.decode_step(
+                    params, d["cache"], {"tokens": d["tokens"][:, None]},
+                    d["pos"])
+                if all_greedy:
+                    key = d["key"]
+                    tok = jnp.argmax(mask_padded_vocab(logits[:, 0], vocab),
+                                     axis=-1).astype(jnp.int32)
+                else:
+                    key, sub = jax.random.split(d["key"])
+                    tok = sample_tokens(sub, logits[:, 0], d["temps"], vocab)
+                live = d["remaining"] > 0
+                tok = jnp.where(live, tok, d["tokens"])
+                idx = jnp.where(live, d["emitted"], S)   # S: dropped write
+                out = d["out"].at[jnp.arange(B), idx].set(tok, mode="drop")
+                live32 = live.astype(jnp.int32)
+                return {"cache": cache, "key": key, "tokens": tok,
+                        "pos": d["pos"] + live32, "temps": d["temps"],
+                        "remaining": d["remaining"] - live32,
+                        "emitted": d["emitted"] + live32, "out": out}, None
+
+            d, _ = jax.lax.scan(one, dev, None, length=n)
+            return d
+
+        # dev is engine-owned with no outside references -> donate it so
+        # XLA reuses the cache buffers across chunks
+        self._prefill_jit = jax.jit(prefill_wave, donate_argnums=(1,))
+        self._decode_jit = jax.jit(decode_chunk, static_argnums=(2, 3),
+                                   donate_argnums=(1,))
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req)
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
+        """Serve everything submitted (and anything submitted mid-run by a
+        caller driving ``run`` repeatedly).  Returns {uid: tokens}; evicted
+        requests report the tokens they got before their deadline."""
+        results: Dict[int, List[int]] = {}
+        sched = self.sched
+        start_steps = self.stats["decode_steps"]   # budget is per-call
+        while sched.has_work():
+            now = self.clock()
+            for req in sched.evict_expired_queued(now):
+                results[req.uid] = []
+                self.stats["evicted"] += 1
+            overdue = sched.evict_overdue_active(now)
+            if overdue:
+                rows = self._fetch_out()
+                for slot, s in overdue:
+                    results[s.request.uid] = rows[slot][:s.emitted].tolist()
+                    self.stats["evicted"] += 1
+            wave = sched.next_wave()
+            if wave:
+                self._dispatch_prefill(wave)
+                sched.admit(wave, now)
+            self._collect(results)          # max_new=1 finishes at admit
+            steps = sched.steps_to_next_completion()
+            if steps is None:
                 continue
-            tok = self._sample(logits[i, 0], req.temperature)
-            req.out_tokens.append(tok)
-            self.last_token[i] = tok
-            self.pos[i] += 1
-            self.remaining[i] -= 1
-            if self.remaining[i] == 0:
-                self.active[i] = None           # slot freed for the queue
+            # queue waiting -> stop at the next completion so the freed
+            # slot readmits promptly; queue empty -> run every slot dry
+            n = steps if sched.queue else sched.max_remaining()
+            if max_steps is not None:
+                done_steps = self.stats["decode_steps"] - start_steps
+                if done_steps + n > max_steps:
+                    raise RuntimeError(
+                        f"engine exceeded max_steps={max_steps} "
+                        f"(decode_steps this call: {done_steps})")
+            all_greedy = all(s.request.temperature <= 0
+                             for s in sched.slots if s is not None)
+            deadlines = [s.request.deadline for s in sched.slots
+                         if s is not None and s.request.deadline is not None]
+            while n > 0:
+                c = (self.decode_chunk if n >= self.decode_chunk
+                     else _pow2_floor(n))
+                self.dev = self._decode_jit(self.params, self.dev, c,
+                                            all_greedy)
+                sched.advance(c)
+                n -= c
+                self.stats["decode_steps"] += c
+                self.stats["decode_calls"] += 1
+                if deadlines and self.clock() > min(deadlines):
+                    break       # loop top evicts at this chunk boundary
+            self._collect(results)
+        return results
 
-    def run(self) -> Dict[int, List[int]]:
-        done: Dict[int, List[int]] = {}
-        submitted = list(self.queue)
-        self._admit()
-        while any(r is not None for r in self.active) or self.queue:
-            self.step()
-            self._admit()
-        for req in submitted:
-            done[req.uid] = req.out_tokens
-        return done
+    # -- internals ----------------------------------------------------------
+    def _dispatch_prefill(self, wave) -> None:
+        Ls = [len(r.prompt) for _, r in wave]
+        if self.has_mamba:
+            Tpad = Ls[0]                    # equal-length wave, no padding
+        else:
+            Tpad = min(_round_up(max(Ls), self.prefill_chunk), self.S)
+        toks = np.zeros((self.B, Tpad), np.int32)
+        lengths = np.ones((self.B,), np.int32)
+        slots = np.full((self.B,), self.B, np.int32)   # B = dropped rows
+        temps = np.zeros((self.B,), np.float32)
+        budgets = np.ones((self.B,), np.int32)
+        for i, (slot, r) in enumerate(wave):
+            toks[i, :len(r.prompt)] = r.prompt
+            lengths[i] = len(r.prompt)
+            slots[i] = slot
+            temps[i] = r.temperature
+            budgets[i] = r.max_new
+        self.dev = self._prefill_jit(self.params, self.dev, toks, lengths,
+                                     slots, temps, budgets)
+        self.stats["prefill_waves"] += 1
+        if self.record_ttft:
+            jax.block_until_ready(self.dev["tokens"])
+            self.stats["host_syncs"] += 1
+            t = self.clock()
+            for _, r in wave:
+                self.ttft[r.uid] = t - r.submit_time
+
+    def _fetch_out(self) -> np.ndarray:
+        self.stats["host_syncs"] += 1
+        return np.asarray(self.dev["out"])
+
+    def _collect(self, results: Dict[int, List[int]]) -> None:
+        fins = self.sched.pop_finished()
+        if not fins:
+            return
+        rows = self._fetch_out()
+        for slot, s in fins:
+            results[s.request.uid] = rows[slot][:s.emitted].tolist()

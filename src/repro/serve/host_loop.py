@@ -1,0 +1,148 @@
+"""Host-loop serving engine (pre-rewrite reference implementation).
+
+This is the original slot-based continuous-batching engine: requests are
+prefilled one at a time into a free slot, all active slots decode together,
+but every sampled token round-trips logits to the host (one device->host
+sync per active slot per step) and sampling happens in numpy.
+
+It is kept as (a) the differential-testing oracle for the fully-jitted
+``serve/engine.py`` — greedy outputs must match it bit-for-bit — and
+(b) the baseline that ``benchmarks/serve_bench.py`` measures the host-loop
+-> on-device speedup against.  ``stats["host_syncs"]`` counts the per-token
+device reads the jitted engine eliminates.
+
+Two historical bugs are fixed here (regression-tested in
+``tests/test_serve_engine.py``):
+  * a ``max_new=1`` request used to be admitted with ``remaining=0``; the
+    decode loop skipped the slot without ever freeing it, so ``run()``
+    spun forever.  Exhausted budgets now free the slot at admit time.
+  * ``run()`` used to snapshot ``list(self.queue)`` at entry, silently
+    dropping requests admitted before the call.  Completions are now
+    tracked in a dict keyed at admit time.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.scheduler import Request
+
+
+class HostLoopEngine:
+    def __init__(self, model, params, max_batch: int = 4,
+                 cache_len: int = 128, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.B = max_batch
+        self.S = cache_len
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = model.init_cache(max_batch, cache_len)
+        self.pos = np.zeros((max_batch,), np.int32)
+        self.active: List[Optional[Request]] = [None] * max_batch
+        self.remaining = np.zeros((max_batch,), np.int32)
+        self.last_token = np.zeros((max_batch,), np.int32)
+        self.queue: deque = deque()
+        self.results: Dict[int, List[int]] = {}   # keyed at admit time
+        self.stats: Dict[str, int] = dict(host_syncs=0, decode_steps=0)
+        self.ttft: Dict[int, float] = {}
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len),
+            static_argnums=())
+        self._decode = jax.jit(model.decode_step)
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.max_new < 1:
+            raise ValueError(f"req {req.uid}: max_new must be >= 1")
+        if len(req.prompt) + req.max_new > self.S:
+            raise ValueError(f"req {req.uid}: prompt + max_new exceeds "
+                             f"cache_len ({self.S})")
+        req.out_tokens = []
+        req.submit_time = time.monotonic()
+        self.queue.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _admit(self) -> None:
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.popleft()
+            T = len(req.prompt)
+            logits, cache1 = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt)[None]})
+            # scatter the single-request cache into this slot.  Prelude
+            # leaves have batch at axis 0; scanned block leaves carry a
+            # leading (reps,) layer axis -> batch at axis 1.
+            self.cache = {
+                "prelude": [jax.tree.map(lambda cb, c1: cb.at[slot].set(c1[0]),
+                                         b, c)
+                            for b, c in zip(self.cache["prelude"],
+                                            cache1["prelude"])],
+                "blocks": (None if self.cache["blocks"] is None else
+                           jax.tree.map(
+                               lambda cb, c1: cb.at[:, slot].set(c1[:, 0]),
+                               self.cache["blocks"], cache1["blocks"])),
+            }
+            tok = self._sample(logits[0, -1], req.temperature)
+            req.out_tokens.append(int(tok))
+            self.results[req.uid] = req.out_tokens
+            self.ttft[req.uid] = time.monotonic() - req.submit_time
+            if req.max_new <= 1:
+                continue        # budget already spent: free the slot now
+            self.active[slot] = req
+            self.pos[slot] = T
+            self.remaining[slot] = req.max_new - 1
+            self.last_token[slot] = int(tok)
+
+    def _sample(self, logits, temperature: float):
+        vocab = self.model.arch.vocab
+        self.stats["host_syncs"] += 1
+        lg = np.asarray(logits, np.float32)[:vocab]
+        if temperature <= 0:
+            return int(np.argmax(lg))
+        self.key, sub = jax.random.split(self.key)
+        g = np.asarray(jax.random.gumbel(sub, (vocab,)))
+        return int(np.argmax(lg / temperature + g))
+
+    # -- main loop ----------------------------------------------------------
+    def step(self) -> None:
+        """One decode step across all active slots."""
+        toks = jnp.asarray(self.last_token)[:, None]
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          {"tokens": toks}, pos)
+        self.stats["decode_steps"] += 1
+        for i, req in enumerate(self.active):
+            if req is None or self.remaining[i] <= 0:
+                continue
+            tok = self._sample(logits[i, 0], req.temperature)
+            req.out_tokens.append(tok)
+            self.last_token[i] = tok
+            self.pos[i] += 1
+            self.remaining[i] -= 1
+            if self.remaining[i] == 0:
+                self.active[i] = None           # slot freed for the queue
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
+        start_steps = self.stats["decode_steps"]   # budget is per-call
+        self._admit()
+        while any(r is not None for r in self.active) or self.queue:
+            if (max_steps is not None
+                    and self.stats["decode_steps"] - start_steps >= max_steps):
+                raise RuntimeError(f"host-loop engine exceeded "
+                                   f"max_steps={max_steps}")
+            self.step()
+            self._admit()
+        done, self.results = self.results, {}
+        return done

@@ -1,0 +1,47 @@
+"""On-device token sampling for the serving engine.
+
+Everything here is trace-safe and batched over slots: one call samples the
+next token for every slot in the decode batch, with per-slot temperatures,
+without any host round-trip.  Greedy slots (temperature <= 0) take the
+argmax; stochastic slots use the Gumbel-max trick, which is exactly what
+``jax.random.categorical`` does internally but lets both paths share one
+argmax so the whole thing stays a single fused kernel.
+
+The padded vocab tail (``padded_vocab(vocab) - vocab`` columns of the LM
+head, never trained) is masked to -inf so it can never be sampled — the
+batched equivalent of the host-loop engine's ``logits[:vocab]`` slice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def mask_padded_vocab(logits: jax.Array, vocab: int) -> jax.Array:
+    """(..., Vpad) logits -> f32 logits with columns >= vocab set to -inf."""
+    lg = logits.astype(F32)
+    if lg.shape[-1] == vocab:
+        return lg
+    col = jnp.arange(lg.shape[-1])
+    return jnp.where(col < vocab, lg, -jnp.inf)
+
+
+def sample_tokens(key: jax.Array, logits: jax.Array, temps: jax.Array,
+                  vocab: int) -> jax.Array:
+    """Sample one token per slot.
+
+    key:    PRNG key for this step (consumed whole; split per-step outside).
+    logits: (B, Vpad) raw LM-head outputs.
+    temps:  (B,) per-slot temperatures; <= 0 means greedy.
+    Returns (B,) int32 token ids in [0, vocab).
+    """
+    lg = mask_padded_vocab(logits, vocab)
+    greedy = jnp.argmax(lg, axis=-1)
+    gumbel = jax.random.gumbel(key, lg.shape, F32)
+    # temps <= 0 are routed to the greedy branch; the maximum() only keeps
+    # the stochastic lane NaN-free for those rows.
+    safe_t = jnp.maximum(temps, 1e-6)[:, None]
+    stochastic = jnp.argmax(lg / safe_t + gumbel, axis=-1)
+    return jnp.where(temps > 0.0, stochastic, greedy).astype(jnp.int32)

@@ -3,12 +3,19 @@
 Fault-tolerance model (1000+-node design, DESIGN.md §5):
 * SIGTERM/SIGINT (preemption notice) -> finish current step, checkpoint,
   exit cleanly; resume is exact because data + noise are (seed, step)-keyed.
-* Transient step failure -> retry the step (bit-identical update).
+* Transient step failure -> retry the step (bit-identical update).  The
+  jitted step deliberately does NOT donate ``state``: donation deletes the
+  input buffers even when the call fails, so a "retry" would dereference
+  dead arrays.  Instead the old state is released by refcount only after
+  the step has completed successfully (donate-on-success); failures —
+  including ones raised *inside* the jitted computation, exercised via
+  ``inject_inside_jit`` — leave ``state`` intact for the retry.
 * Straggler watchdog: any step slower than ``watchdog_factor`` x the median
   is logged with its step index (on real fleets this feeds the scheduler).
 """
 from __future__ import annotations
 
+import dataclasses
 import signal
 import time
 from typing import Callable, Dict, Iterable, Optional
@@ -74,15 +81,27 @@ class Trainer:
 
     def __init__(self, model, train_cfg: TrainConfig, shape,
                  jit_step: bool = True, shard_batch=None,
-                 inject_failure_at: Optional[int] = None):
+                 inject_failure_at: Optional[int] = None,
+                 inject_inside_jit: bool = False):
         self.model = model
         self.cfg = train_cfg
         self.shape = shape
         self.source = make_source(train_cfg.data_source, model.arch.vocab,
                                   train_cfg.seed)
+        self.inject_failure_at = inject_failure_at
+        self.inject_inside_jit = inject_inside_jit
+        self._injected = False
         self.step_fn = make_train_step(model, train_cfg)
+        if inject_failure_at is not None and inject_inside_jit:
+            self.step_fn = self._with_injected_failure(self.step_fn)
         if jit_step:
-            self.step_fn = jax.jit(self.step_fn, donate_argnums=(0,))
+            # No donate_argnums: donating `state` deletes its buffers even
+            # when the jitted call fails, so the bit-identical retry in
+            # run() would dereference dead arrays.  The old state is
+            # instead released by refcount once the step has verifiably
+            # succeeded (donate-on-success) at the cost of a transiently
+            # higher in-step memory watermark.
+            self.step_fn = jax.jit(self.step_fn)
         self.opt = make_optimizer(train_cfg.optim)
         self.ckpt = CheckpointManager(train_cfg.ckpt_dir,
                                       keep=train_cfg.ckpt_keep,
@@ -95,9 +114,32 @@ class Trainer:
         self.shard_batch = shard_batch or (lambda b: jax.tree.map(jnp.asarray, b))
         self._preempted = False
         self._step_times: list = []
-        self.inject_failure_at = inject_failure_at
-        self._injected = False
         self.history: list = []
+
+    def _with_injected_failure(self, fn: Callable) -> Callable:
+        """Fault injection *inside* the jitted computation: the configured
+        step's first execution raises from a host callback embedded in the
+        step function, exercising the genuine failure mode where XLA aborts
+        mid-step (tests/test_trainer_serve.py)."""
+        def fail_once(step):
+            if int(step) == self.inject_failure_at and not self._injected:
+                self._injected = True
+                raise RuntimeError("injected transient failure inside jit")
+            return np.int32(0)
+
+        def wrapped(state: TrainState, batch, key):
+            # io_callback (not pure_callback): the injector is stateful and
+            # raises, so it needs the executed-exactly-once, never-cached,
+            # never-elided guarantee of an ordered effect
+            from jax.experimental import io_callback
+            token = io_callback(fail_once,
+                                jax.ShapeDtypeStruct((), jnp.int32),
+                                state.step, ordered=True)
+            # thread the (always-zero) result into the step so the failure
+            # is sequenced before the update it aborts
+            state = dataclasses.replace(state, step=state.step + token)
+            return fn(state, batch, key)
+        return wrapped
 
     # -- lifecycle ---------------------------------------------------------
     def init_state(self, key) -> TrainState:
@@ -136,17 +178,24 @@ class Trainer:
                 for attempt in range(3):   # transient-failure retry
                     try:
                         if (self.inject_failure_at == step
+                                and not self.inject_inside_jit
                                 and not self._injected):
                             self._injected = True
                             raise RuntimeError("injected transient failure")
-                        state, metrics = self.step_fn(state, batch, key)
+                        # keep `state` bound to the last good state until
+                        # the step has fully completed: with async dispatch
+                        # a failure inside the jitted computation can
+                        # surface at the block_until_ready, after step_fn
+                        # already returned poisoned arrays
+                        new_state, metrics = self.step_fn(state, batch, key)
+                        jax.block_until_ready(metrics["loss"])
+                        state = new_state
                         break
                     except RuntimeError as e:
                         print(f"[trainer] step {step} attempt {attempt} "
                               f"failed: {e}; retrying")
                         if attempt == 2:
                             raise
-                jax.block_until_ready(metrics["loss"])
                 dt = time.perf_counter() - t0
                 self._watchdog(step, dt)
                 if (step + 1) % cfg.log_every == 0 or step == steps - 1:

@@ -7,6 +7,10 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+
+# the whole module runs Pallas kernels in interpret mode (slow on CPU);
+# `make test-fast` / CI skip it, `make test` runs it
+pytestmark = pytest.mark.slow
 from repro.kernels.clip_reduce import clip_reduce
 from repro.kernels.gram_norm import gram_norm
 from repro.kernels.pegrad_norm import pegrad_norm

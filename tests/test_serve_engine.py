@@ -1,0 +1,290 @@
+"""Continuous-batching serve engine: differential tests vs the host-loop
+reference, slot-lifecycle regressions, scheduler policies."""
+import jax
+import numpy as np
+import pytest
+
+from repro.serve import Engine, HostLoopEngine, Request, Scheduler
+
+from helpers import tiny_model
+
+
+@pytest.fixture(scope="module")
+def served():
+    arch, model = tiny_model("stablelm-3b")
+    params = model.init(jax.random.PRNGKey(0))
+    return arch, model, params
+
+
+def _requests(arch, n, rng, max_new=None, temperature=0.0):
+    out = []
+    for uid in range(n):
+        prompt = rng.integers(0, arch.vocab,
+                              int(rng.integers(4, 14))).astype(np.int32)
+        out.append(Request(uid=uid, prompt=prompt,
+                           max_new=max_new or int(rng.integers(1, 8)),
+                           temperature=temperature))
+    return out
+
+
+def _clone(reqs):
+    return [Request(uid=r.uid, prompt=r.prompt, max_new=r.max_new,
+                    temperature=r.temperature, deadline=r.deadline)
+            for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# bit-identity
+# ---------------------------------------------------------------------------
+
+def test_interleaved_matches_solo(served):
+    """Greedy continuous-batching output (mixed prompt lengths, slot churn,
+    padded prefill waves) is bit-identical to decoding each request alone."""
+    arch, model, params = served
+    rng = np.random.default_rng(1)
+    reqs = _requests(arch, 6, rng)
+    eng = Engine(model, params, max_batch=3, cache_len=64)
+    for r in _clone(reqs):
+        eng.submit(r)
+    inter = eng.run(max_steps=500)
+    for r in reqs:
+        solo = Engine(model, params, max_batch=1, cache_len=64)
+        solo.submit(Request(uid=r.uid, prompt=r.prompt, max_new=r.max_new))
+        assert solo.run(max_steps=200)[r.uid] == inter[r.uid], r.uid
+
+
+def test_matches_host_loop_engine(served):
+    """Greedy outputs are bit-identical to the pre-rewrite host-loop engine
+    on the same params and request stream."""
+    arch, model, params = served
+    rng = np.random.default_rng(2)
+    reqs = _requests(arch, 5, rng)
+    ref = HostLoopEngine(model, params, max_batch=2, cache_len=64)
+    for r in _clone(reqs):
+        ref.submit(r)
+    want = ref.run(max_steps=500)
+    eng = Engine(model, params, max_batch=2, cache_len=64)
+    for r in _clone(reqs):
+        eng.submit(r)
+    got = eng.run(max_steps=500)
+    assert got == want
+    assert eng.stats["host_syncs"] < ref.stats["host_syncs"]
+
+
+def test_greedy_matches_teacher_forced_prefill(served):
+    """Engine tokens == argmax of teacher-forced prefill logits."""
+    arch, model, params = served
+    import jax.numpy as jnp
+    prompt = (np.arange(1, 9, dtype=np.int32) % arch.vocab)
+    eng = Engine(model, params, max_batch=1, cache_len=64)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=3))
+    out = eng.run(max_steps=50)[0]
+    toks = np.concatenate([prompt, np.asarray(out[:-1], np.int32)])
+    logits, _ = model.prefill(params, {"tokens": jnp.asarray(toks)[None]}, 64)
+    want = int(np.argmax(np.asarray(logits[0, -1])[:arch.vocab]))
+    assert out[-1] == want
+
+
+def test_mamba_equal_length_waves(served):
+    """SSM archs: recurrent state would absorb pad tokens, so the scheduler
+    batches equal-length prompts only — outputs still match the host loop."""
+    arch, model = tiny_model("mamba2-1.3b")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    reqs = _requests(arch, 5, rng, max_new=4)
+    ref = HostLoopEngine(model, params, max_batch=2, cache_len=64)
+    for r in _clone(reqs):
+        ref.submit(r)
+    want = ref.run(max_steps=200)
+    eng = Engine(model, params, max_batch=2, cache_len=64)
+    assert eng.has_mamba and eng.sched.same_length_waves
+    for r in _clone(reqs):
+        eng.submit(r)
+    assert eng.run(max_steps=200) == want
+
+
+# ---------------------------------------------------------------------------
+# slot lifecycle regressions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_cls", [Engine, HostLoopEngine])
+def test_max_new_1_terminates(served, engine_cls):
+    """Regression: a max_new=1 request used to be admitted with
+    remaining=0, never freed, and run() hung forever."""
+    arch, model, params = served
+    eng = engine_cls(model, params, max_batch=2, cache_len=64)
+    for uid in range(3):
+        eng.submit(Request(uid=uid,
+                           prompt=np.arange(1, 5 + uid, dtype=np.int32),
+                           max_new=1))
+    out = eng.run(max_steps=50)
+    assert sorted(out) == [0, 1, 2]
+    assert all(len(v) == 1 for v in out.values())
+
+
+def test_host_loop_preadmitted_not_dropped(served):
+    """Regression: run() used to snapshot the queue at entry and silently
+    drop requests already admitted into slots."""
+    arch, model, params = served
+    eng = HostLoopEngine(model, params, max_batch=2, cache_len=64)
+    for uid in range(3):
+        eng.submit(Request(uid=uid, prompt=np.arange(1, 7, dtype=np.int32),
+                           max_new=3))
+    eng._admit()        # two requests enter slots before run() is called
+    out = eng.run(max_steps=100)
+    assert sorted(out) == [0, 1, 2]
+    assert all(len(v) == 3 for v in out.values())
+
+
+def test_admission_under_full_batch(served):
+    """More requests than slots: every request completes with its full
+    budget, freed slots are refilled mid-run."""
+    arch, model, params = served
+    rng = np.random.default_rng(3)
+    eng = Engine(model, params, max_batch=2, cache_len=64)
+    for uid in range(7):
+        prompt = rng.integers(0, arch.vocab,
+                              int(rng.integers(4, 12))).astype(np.int32)
+        eng.submit(Request(uid=uid, prompt=prompt, max_new=4))
+    out = eng.run(max_steps=500)
+    assert sorted(out) == list(range(7))
+    assert all(len(v) == 4 for v in out.values())
+    assert eng.stats["prefill_waves"] >= 4     # slot churn forced new waves
+
+
+def test_mixed_temperature_slots(served):
+    """Stochastic neighbours must not perturb a greedy slot's stream."""
+    arch, model, params = served
+    greedy_prompt = np.arange(2, 10, dtype=np.int32) % arch.vocab
+    solo = Engine(model, params, max_batch=1, cache_len=64)
+    solo.submit(Request(uid=0, prompt=greedy_prompt, max_new=5))
+    want = solo.run(max_steps=50)[0]
+
+    eng = Engine(model, params, max_batch=3, cache_len=64, seed=7)
+    eng.submit(Request(uid=0, prompt=greedy_prompt, max_new=5))
+    rng = np.random.default_rng(4)
+    for uid in (1, 2):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, arch.vocab, 6).astype(np.int32),
+                           max_new=5, temperature=1.0))
+    out = eng.run(max_steps=100)
+    assert out[0] == want
+    assert all(0 <= t < arch.vocab for v in out.values() for t in v)
+    assert all(len(v) == 5 for v in out.values())
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def _req(uid, n_prompt, deadline=None):
+    return Request(uid=uid, prompt=np.ones((n_prompt,), np.int32),
+                   max_new=2, deadline=deadline)
+
+
+def test_scheduler_fifo_vs_shortest_prompt():
+    fifo = Scheduler(2, 64, policy="fifo")
+    sjf = Scheduler(2, 64, policy="shortest-prompt")
+    for s in (fifo, sjf):
+        for uid, n in [(0, 9), (1, 3), (2, 5)]:
+            s.submit(_req(uid, n))
+    assert [r.uid for _, r in fifo.next_wave()] == [0, 1]
+    assert [r.uid for _, r in sjf.next_wave()] == [1, 2]
+
+
+def test_scheduler_slot_lifecycle():
+    s = Scheduler(2, 64)
+    for uid in range(3):
+        s.submit(_req(uid, 4))
+    wave = s.next_wave()
+    s.admit(wave, 0.0)
+    assert s.free_slots() == [] and len(s.queue) == 1
+    assert s.steps_to_next_completion() == 1     # max_new=2 -> 1 decode step
+    s.advance(1)
+    done = s.pop_finished()
+    assert sorted(i for i, _ in done) == [0, 1]
+    assert all(sl.emitted == 2 for _, sl in done)
+    assert s.free_slots() == [0, 1]
+
+
+def test_scheduler_same_length_wave_fills_from_whole_queue():
+    """Equal-length requests behind a different-length one still fill the
+    wave (Mamba waves must not be underfilled by queue order)."""
+    s = Scheduler(4, 64, same_length_waves=True)
+    for uid, n in [(0, 5), (1, 7), (2, 5), (3, 5), (4, 5)]:
+        s.submit(_req(uid, n))
+    wave = s.next_wave()
+    assert [r.uid for _, r in wave] == [0, 2, 3, 4]
+    assert [r.uid for r in s.queue] == [1]
+
+
+def test_scheduler_deadline_eviction_queued():
+    s = Scheduler(1, 64, clock=lambda: 10.0)
+    s.submit(_req(0, 4, deadline=5.0))       # already past deadline
+    s.submit(_req(1, 4))
+    dropped = s.evict_expired_queued(10.0)
+    assert [r.uid for r in dropped] == [0]
+    assert [r.uid for r in s.queue] == [1]
+
+
+def test_engine_deadline_eviction(served):
+    """A queued request whose deadline passed is evicted with an empty
+    result; the fake clock makes eviction deterministic."""
+    arch, model, params = served
+    t = {"now": 0.0}
+    eng = Engine(model, params, max_batch=1, cache_len=64,
+                 clock=lambda: t["now"])
+    eng.submit(Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                       max_new=3))
+    eng.submit(Request(uid=1, prompt=np.arange(1, 6, dtype=np.int32),
+                       max_new=3, deadline=-1.0))
+    out = eng.run(max_steps=50)
+    assert out[1] == [] and len(out[0]) == 3
+    assert eng.stats["evicted"] == 1
+
+
+def test_engine_mid_burst_deadline_eviction(served):
+    """A deadline that passes while a long burst is in flight evicts the
+    slot at the next chunk boundary with a partial result — even with an
+    empty queue, where the burst would otherwise run the budget dry."""
+    arch, model, params = served
+    t = {"now": 0.0}
+
+    def clock():                       # advances 50 ms per observation
+        t["now"] += 0.05
+        return t["now"]
+
+    eng = Engine(model, params, max_batch=1, cache_len=64, decode_chunk=2,
+                 clock=clock)
+    eng.submit(Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                       max_new=40, deadline=0.6))
+    out = eng.run(max_steps=100)
+    assert 0 < len(out[0]) < 40
+    assert eng.stats["evicted"] == 1
+
+
+def test_duplicate_requests_use_identity():
+    """Requests compare by identity (eq=False): two equal-looking requests
+    in the queue must not make membership tests ambiguous (ndarray __eq__)
+    or drop one of them."""
+    s = Scheduler(1, 64)
+    a, b = _req(7, 4), _req(7, 4)
+    s.submit(a)
+    s.submit(b)
+    wave = s.next_wave()
+    assert [r for _, r in wave] == [a]
+    assert s.queue == [b]
+
+
+def test_submit_validation(served):
+    s = Scheduler(2, 16)
+    with pytest.raises(ValueError):
+        s.submit(_req(0, 20))                       # prompt too long
+    with pytest.raises(ValueError):
+        s.submit(Request(uid=1, prompt=np.ones((4,), np.int32), max_new=0))
+    # host-loop engine validates identically (max_new=0 used to re-expose
+    # the never-freed-slot hang)
+    arch, model, params = served
+    hl = HostLoopEngine(model, params, max_batch=1, cache_len=16)
+    with pytest.raises(ValueError):
+        hl.submit(Request(uid=2, prompt=np.ones((4,), np.int32), max_new=0))

@@ -1,6 +1,5 @@
 """Trainer fault-tolerance + serving engine behaviour."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -41,6 +40,22 @@ def test_transient_failure_retry(tmp_path, key):
     tr = Trainer(model, _cfg(tmp_path), SHAPE, inject_failure_at=2)
     st = tr.run(tr.init_state(key), install_signals=False)
     assert int(st.step) == 6  # failure retried, run completed
+
+
+def test_transient_failure_inside_jit_retry(tmp_path, key):
+    """Failure raised *inside* the jitted step (host callback aborts the
+    XLA computation).  Because the step no longer donates `state`, the
+    retry sees live buffers and the whole run is bit-identical to a
+    failure-free run."""
+    arch, model = tiny_model("stablelm-3b")
+    tr = Trainer(model, _cfg(tmp_path / "a"), SHAPE,
+                 inject_failure_at=2, inject_inside_jit=True)
+    st = tr.run(tr.init_state(key), install_signals=False)
+    assert int(st.step) == 6 and tr._injected
+    tr2 = Trainer(model, _cfg(tmp_path / "b"), SHAPE)
+    st2 = tr2.run(tr2.init_state(key), install_signals=False)
+    for a, b in zip(jax.tree.leaves(st.params), jax.tree.leaves(st2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_resume_from_checkpoint(tmp_path, key):
@@ -101,16 +116,5 @@ def test_engine_continuous_batching(key):
     assert all(0 <= t < arch.vocab for v in out.values() for t in v)
 
 
-def test_engine_greedy_matches_prefill(key):
-    """Greedy engine tokens == argmax of teacher-forced prefill logits."""
-    arch, model = tiny_model("stablelm-3b", dropless=True)
-    params = model.init(key)
-    prompt = np.arange(1, 9, dtype=np.int32) % arch.vocab
-    eng = Engine(model, params, max_batch=1, cache_len=64)
-    eng.submit(Request(uid=0, prompt=prompt, max_new=3))
-    out = eng.run()[0]
-    # replay: teacher-force the emitted tokens through prefill
-    toks = np.concatenate([prompt, np.asarray(out[:-1], np.int32)])
-    logits, _ = model.prefill(params, {"tokens": jnp.asarray(toks)[None]}, 64)
-    want_last = int(np.argmax(np.asarray(logits[0, -1])[:arch.vocab]))
-    assert out[-1] == want_last
+# (the greedy-vs-teacher-forced-prefill check moved to
+# tests/test_serve_engine.py::test_greedy_matches_teacher_forced_prefill)
