@@ -5,11 +5,19 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-multidevice bench-smoke bench-serve dryrun-smoke
+.PHONY: test test-fast test-dp test-multidevice bench-smoke bench-serve dryrun-smoke
 
 # tier-1 verify: the gate for every change
 test:
 	$(PY) -m pytest -x -q
+
+# the DP correctness gate: Algorithm 1 semantics, Poisson-masked batch
+# properties, and the privacy accountant's published reference points
+# (the slow tier adds the interpret-mode kernel parity sweeps)
+test-dp:
+	$(PY) -m pytest -x -q -m "not slow" \
+	    tests/test_dp_core.py tests/test_dp_properties.py \
+	    tests/test_accountant.py
 
 # fast tier (~4 min vs ~7 for full): skips the interpret-mode Pallas
 # kernel sweeps and the jamba-398b heavies (@pytest.mark.slow); this is

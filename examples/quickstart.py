@@ -30,8 +30,9 @@ def main():
     eps = trainer.accountant.epsilon_at(int(state.step))
     print(f"\ntrained to step {int(state.step)}; "
           f"(eps={eps:.3f}, delta={cfg.dp.delta})-DP spent")
-    print(f"loss: {trainer.history[0]['loss']:.3f} -> "
-          f"{trainer.history[-1]['loss']:.3f}")
+    if trainer.history:   # empty when a finished checkpoint was restored
+        print(f"loss: {trainer.history[0]['loss']:.3f} -> "
+              f"{trainer.history[-1]['loss']:.3f}")
 
 
 if __name__ == "__main__":

@@ -183,11 +183,46 @@ class MeshConfig:
 
 @dataclass(frozen=True)
 class DPConfig:
+    """DP-SGD configuration (the single place these knobs are documented).
+
+    ``algo`` — which gradient transformation core/algo.py builds:
+      * ``"sgd"``       non-private baseline (mean-loss gradient);
+      * ``"dpsgd"``     vanilla DP-SGD: vmap per-example grads, explicit
+                        norm/clip/reduce (Algorithm 1 lines 15-25);
+      * ``"dpsgd_r"``   reweighted DP-SGD(R), the paper's baseline: norm
+                        side-channel pass + reweighted backprop (lines 27-42);
+      * ``"dpsgd_r1f"`` single-forward DP-SGD(R): one vjp, two pullbacks —
+                        same update, one forward pass fewer.
+      All three private algos produce identical updates (property-tested).
+
+    ``sampling`` — how the data pipeline forms each step's batch, and hence
+    which mechanism the accountant prices:
+      * ``"fixed"``   fixed-size batches (``data/pipeline.batch_for``); the
+                      accountant's q = B/N is then the standard practical
+                      approximation, not exact;
+      * ``"poisson"`` true Poisson subsampling (``poisson_batch_for``):
+                      every example enters each batch independently w.p.
+                      q = B/N, emitted as a fixed-capacity right-padded
+                      batch + ``(B,) bool`` validity mask that the algos
+                      thread end-to-end; the subsampled-Gaussian RDP bound
+                      is exact for this scheme, and the noisy sum is
+                      normalized by the *expected* batch size q·N.
+
+    ``norm_strategy`` — per-example-norm rule for the side-channel algos
+    (core/norms.py): ``"materialize"`` (outer-product GEMM reduced on the
+    fly), ``"gram"`` (ghost norm, never forms the weight-shaped object), or
+    ``"auto"`` (picks the cheaper exact rule per call site).
+
+    ``use_kernels`` — route the norm rules through the fused Pallas kernels
+    (kernels/pegrad_norm.py, kernels/gram_norm.py) instead of the chunked
+    XLA fallbacks; interpret-mode on CPU, Mosaic on TPU.
+    """
     enabled: bool = True
-    algo: str = "dpsgd_r"          # sgd | dpsgd | dpsgd_r
+    algo: str = "dpsgd_r"          # sgd | dpsgd | dpsgd_r | dpsgd_r1f
     clip_norm: float = 1.0         # C
     noise_multiplier: float = 1.0  # sigma
     delta: float = 1e-5
+    sampling: str = "fixed"        # fixed | poisson (see docstring)
     microbatch: int = 0            # vanilla dpsgd: vmap chunk (0 = whole batch)
     norm_strategy: str = "auto"    # auto | materialize | gram
     use_kernels: bool = False      # route norm rules through Pallas kernels

@@ -2,7 +2,25 @@
 
 Implements the integer-order RDP bound of Mironov et al. (2019) (the same
 bound TensorFlow-Privacy's ``compute_rdp`` uses at integer orders) and the
-improved RDP -> (ε, δ) conversion of Canonne–Kamath–Steinke (2020).
+improved RDP -> (ε, δ) conversion of Canonne–Kamath–Steinke (2020).  The
+classic conversion (``rdp_to_eps_classic``) is kept for parity with
+published TF-Privacy / Opacus numbers, which predate CKS.
+
+The accountant prices the *sampling scheme the pipeline actually runs*:
+
+* ``sampling="poisson"`` (data/pipeline.py ``poisson_batch_for``): every
+  example enters each step's batch independently with probability
+  ``q = expected_batch / N`` — exactly the mechanism this bound is proved
+  for.  The true sample rate is passed explicitly (``sample_rate=``).
+* ``sampling="fixed"``: fixed-size batches; ``q = B/N`` is then the
+  standard practical relaxation (the bound is not exact for shuffling —
+  the mismatch "How to DP-fy ML" §5.1 warns about).
+
+Optimization over orders uses a dense integer grid (every order 2..128,
+then geometric up to 4096) and *extends the grid* whenever the optimum
+lands on its upper edge, so a too-coarse grid can never silently loosen ε.
+A self-consistency pass re-derives ε at the chosen order and checks local
+grid-minimality against the neighbouring orders.
 
 Pure Python/math — runs on the host, no jax required.  The trainer reports
 ε every log step (Algorithm 1's "total privacy cost (ε, δ)").
@@ -10,10 +28,16 @@ Pure Python/math — runs on the host, no jax required.  The trainer reports
 from __future__ import annotations
 
 import math
-from typing import Iterable, Sequence, Tuple
+from typing import Dict, Iterable, Optional, Sequence, Tuple
 
-DEFAULT_ORDERS: Tuple[int, ...] = tuple(range(2, 65)) + (
-    80, 96, 128, 160, 192, 256, 320, 384, 512, 1024)
+# Dense low-order coverage (the optimum for practical (q, σ) almost always
+# lies below 128), then geometric tail for tiny-ε / huge-σ regimes.
+DEFAULT_ORDERS: Tuple[int, ...] = tuple(range(2, 129)) + (
+    144, 160, 192, 224, 256, 320, 384, 448, 512, 768, 1024, 1536, 2048,
+    3072, 4096)
+
+# hard ceiling for automatic grid extension (ε(a) is flat this far out)
+MAX_ORDER = 1 << 17
 
 
 def _log_binom(n: int, k: int) -> float:
@@ -62,40 +86,175 @@ def rdp_to_eps(rdp: float, order: int, delta: float) -> float:
                - (math.log(delta) + math.log(a)) / (a - 1))
 
 
+def rdp_to_eps_classic(rdp: float, order: int, delta: float) -> float:
+    """The classic Mironov (2017) conversion, eps = rdp + log(1/δ)/(a-1).
+
+    Looser than CKS — kept only so ε can be compared against published
+    TF-Privacy / Opacus reference numbers, which use this conversion
+    (tests/test_accountant.py pins the MNIST tutorial anchor with it)."""
+    if delta <= 0 or delta >= 1:
+        raise ValueError(f"delta={delta} not in (0,1)")
+    return max(0.0, rdp + math.log(1.0 / delta) / (order - 1))
+
+
+def _rdp_direct_sum(q: float, sigma: float, order: int) -> Optional[float]:
+    """Independent re-derivation of ``rdp_subsampled_gaussian`` for the
+    self-consistency check: exact integer binomials (math.comb) +
+    compensated linear-space summation (math.fsum) — a different numerical
+    path than the logsumexp implementation.  None when the linear-space
+    evaluation would overflow float64 (large order / small sigma)."""
+    a = int(order)
+    # a > 512: comb(a, a/2) itself exceeds float64 range mid-product;
+    # exponent > 700: the k=a term overflows
+    if a > 512 or (a * a - a) / (2 * sigma ** 2) > 700:
+        return None
+    total = math.fsum(
+        math.comb(a, k) * (1 - q) ** (a - k) * q ** k
+        * math.exp((k * k - k) / (2 * sigma ** 2))
+        for k in range(a + 1))
+    if total <= 0.0 or math.isinf(total):
+        return None
+    return math.log(total) / (a - 1)
+
+
+def _extend_orders(orders: Sequence[int]) -> Tuple[int, ...]:
+    """Geometric continuation past the current grid max (for grid growth
+    when the optimum lands on the edge)."""
+    top = orders[-1]
+    new = []
+    a = top
+    while a < min(top * 8, MAX_ORDER):
+        a = min(int(a * 1.5) + 1, MAX_ORDER)
+        new.append(a)
+    return tuple(orders) + tuple(new)
+
+
+def compute_epsilon_from_rate(
+        steps: int, sample_rate: float, noise_multiplier: float, delta: float,
+        orders: Sequence[int] = DEFAULT_ORDERS,
+        conversion=rdp_to_eps,
+        rdp1_cache: Optional[Dict[int, float]] = None) -> Tuple[float, int]:
+    """(ε, best_order) after ``steps`` Poisson-subsampled Gaussian steps at
+    the *true* per-step sample rate ``q`` and noise multiplier σ.
+
+    The order grid self-extends while the optimum sits on its upper edge;
+    the winning order's RDP is re-derived through an independent numerical
+    path as a self-consistency check (plus local grid-minimality against
+    the neighbouring orders).
+
+    ``rdp1_cache``: optional {order: per-step RDP} dict for repeated
+    queries at fixed (q, σ) — per-step RDP is steps-independent, so a
+    caller polling ε every log step (``PrivacyAccountant``) pays the
+    binomial sums only once per order."""
+    if steps < 0:
+        raise ValueError(f"steps={steps} < 0")
+    if steps == 0 or sample_rate == 0.0:
+        return 0.0, int(orders[0])
+    if noise_multiplier <= 0:
+        return math.inf, int(orders[0])
+
+    grid = tuple(sorted({int(a) for a in orders}))
+    evaluated: Dict[int, float] = {}
+
+    def rdp1(a: int) -> float:
+        if rdp1_cache is not None and a in rdp1_cache:
+            return rdp1_cache[a]
+        r = rdp_subsampled_gaussian(sample_rate, noise_multiplier, a)
+        if rdp1_cache is not None:
+            rdp1_cache[a] = r
+        return r
+
+    def eps_at(a: int) -> float:
+        if a not in evaluated:
+            try:
+                evaluated[a] = conversion(steps * rdp1(a), a, delta)
+            except (OverflowError, ValueError):
+                evaluated[a] = math.inf
+        return evaluated[a]
+
+    while True:
+        best_a = min(grid, key=eps_at)
+        if eps_at(best_a) == math.inf:
+            return math.inf, grid[0]
+        if eps_at(best_a) == 0.0:
+            return 0.0, best_a               # exact floor: nothing to refine
+        if best_a != grid[-1] or grid[-1] >= MAX_ORDER:
+            break
+        grid = _extend_orders(grid)          # optimum on the edge: grow
+
+    # densify: the geometric tail can land off the true integer optimum —
+    # ternary-search the bracket between the neighbouring grid points
+    # (ε(a) is unimodal in a for the subsampled Gaussian)
+    i = grid.index(best_a)
+    lo = grid[i - 1] if i > 0 else 2
+    hi = grid[i + 1] if i + 1 < len(grid) else min(2 * best_a, MAX_ORDER)
+    while hi - lo > 2:
+        m1 = lo + (hi - lo) // 3
+        m2 = hi - (hi - lo) // 3
+        if eps_at(m1) <= eps_at(m2):
+            hi = m2
+        else:
+            lo = m1
+    best_a = min(range(lo, hi + 1), key=eps_at)
+    best_eps = eps_at(best_a)
+    # -- self-consistency: re-derive the winning order's RDP through an
+    # INDEPENDENT numerical path (exact binomials + compensated linear-
+    # space summation vs the production logsumexp); skipped only where the
+    # linear-space evaluation would overflow float64
+    direct = _rdp_direct_sum(sample_rate, noise_multiplier, best_a)
+    if direct is not None:
+        r = rdp1(best_a)
+        # abs_tol floor: at tiny RDP both paths hit the same log1p-scale
+        # cancellation (~1e-16 absolute), which 1e-9 comfortably covers
+        if not math.isclose(direct, r, rel_tol=1e-6, abs_tol=1e-9):
+            raise AssertionError(
+                f"accountant self-consistency: per-step RDP({best_a}) = {r} "
+                f"vs independent re-derivation {direct}")
+    # -- local grid-minimality at the integer neighbours ------------------
+    for a in (best_a - 1, best_a + 1):
+        if a >= 2 and eps_at(a) < best_eps - 1e-12:
+            raise AssertionError(
+                f"accountant grid not locally minimal: eps({a}) = "
+                f"{eps_at(a)} < eps({best_a}) = {best_eps}")
+    return best_eps, best_a
+
+
 def compute_epsilon(steps: int, batch_size: int, dataset_size: int,
                     noise_multiplier: float, delta: float,
                     orders: Sequence[int] = DEFAULT_ORDERS) -> Tuple[float, int]:
     """(ε, best_order) after ``steps`` DP-SGD steps with Poisson sampling
-    rate q = B/N and noise multiplier σ."""
-    if noise_multiplier <= 0:
-        return math.inf, orders[0]
-    q = batch_size / dataset_size
-    best = (math.inf, orders[0])
-    for a in orders:
-        try:
-            r = steps * rdp_subsampled_gaussian(q, noise_multiplier, a)
-            e = rdp_to_eps(r, a, delta)
-        except (OverflowError, ValueError):
-            continue
-        if e < best[0]:
-            best = (e, a)
-    return best
+    rate q = B/N and noise multiplier σ (B = expected batch size)."""
+    return compute_epsilon_from_rate(steps, batch_size / dataset_size,
+                                     noise_multiplier, delta, orders)
 
 
 class PrivacyAccountant:
     """Stateful wrapper used by the trainer (state = just the step count,
-    so checkpoint/restore is trivial and retried steps are idempotent)."""
+    so checkpoint/restore is trivial and retried steps are idempotent).
+
+    ``sample_rate`` (the true per-step Poisson rate) takes precedence over
+    the ``batch_size / dataset_size`` fallback — under
+    ``DPConfig.sampling="poisson"`` the trainer passes the exact rate its
+    sampler draws with, so the priced mechanism IS the executed one."""
 
     def __init__(self, batch_size: int, dataset_size: int,
-                 noise_multiplier: float, delta: float):
+                 noise_multiplier: float, delta: float,
+                 sample_rate: Optional[float] = None):
         self.batch_size = batch_size
         self.dataset_size = dataset_size
         self.noise_multiplier = noise_multiplier
         self.delta = delta
+        self.sample_rate = (sample_rate if sample_rate is not None
+                            else batch_size / dataset_size)
+        # per-step RDP is steps-independent at fixed (q, sigma): cache it
+        # so the trainer's every-log-step polling pays the binomial sums
+        # only once per order
+        self._rdp1_cache: Dict[int, float] = {}
 
     def epsilon_at(self, step: int) -> float:
         if step <= 0:
             return 0.0
-        eps, _ = compute_epsilon(step, self.batch_size, self.dataset_size,
-                                 self.noise_multiplier, self.delta)
+        eps, _ = compute_epsilon_from_rate(step, self.sample_rate,
+                                           self.noise_multiplier, self.delta,
+                                           rdp1_cache=self._rdp1_cache)
         return eps

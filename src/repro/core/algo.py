@@ -6,30 +6,50 @@
 
 for ``dp.algo`` in:
 
-* ``"sgd"``      — non-private baseline (paper §II-B): mean-loss gradient.
-* ``"dpsgd"``    — vanilla DP-SGD (lines 15–25): per-example grads via
-                   vmap(grad) under a scan over microbatches, explicit
-                   norm/clip/reduce post-processing, Gaussian noise.
-* ``"dpsgd_r"``  — reweighted DP-SGD(R) (lines 27–42, the paper's baseline):
-                   pass 1 = per-example norms via the DPContext side-channel
-                   (no per-example grad materialization); pass 2 = backprop
-                   of the clip-reweighted loss; noise.
+* ``"sgd"``       — non-private baseline (paper §II-B): mean-loss gradient.
+* ``"dpsgd"``     — vanilla DP-SGD (lines 15–25): per-example grads via
+                    vmap(grad) under a scan over microbatches, explicit
+                    norm/clip/reduce post-processing, Gaussian noise.
+* ``"dpsgd_r"``   — reweighted DP-SGD(R) (lines 27–42, the paper's baseline):
+                    pass 1 = per-example norms via the DPContext side-channel
+                    (no per-example grad materialization); pass 2 = backprop
+                    of the clip-reweighted loss; noise.
+* ``"dpsgd_r1f"`` — single-forward DP-SGD(R): one vjp, two pullbacks.
+
+Masked variable batches (Poisson subsampling, lines 15–17): a batch may
+carry a ``"mask"`` key — ``(B,)`` bool/0-1 example-validity flags for a
+right-padded fixed-capacity batch (data/pipeline.py ``poisson_batch_for``).
+The mask is threaded by *seeding every backward pass with the masked
+per-example loss cotangents*: padded rows receive an exactly-zero cotangent,
+so their activation grads, per-example norms² (through ``DPContext``, every
+``norms.py`` rule, and the Pallas kernel paths — 0-valued ``gy`` rows reduce
+to exact 0), clip contributions and clipped-sum terms are all exact zeros.
+A masked batch therefore produces the same update as the physically
+compacted batch.  Without a ``"mask"`` key, all rows are real (fixed-size
+mode) and nothing changes.
 
 ``grad_accum > 1`` scans the per-algorithm *clipped-sum* over microbatches
 (per-example clipping is self-contained per microbatch, so accumulation is
-exact); noise is added once per step, after the full-batch reduction —
-identical privacy accounting and identical update to grad_accum=1.
+exact); the mask is chunked alongside the data.  Noise is added once per
+step, after the full-batch reduction — identical privacy accounting and
+identical update to grad_accum=1.
 
-All three produce gradients in the same tree/dtype (f32), so the optimizer
-is agnostic.  ``dpsgd`` and ``dpsgd_r`` produce *identical* updates for the
-same (params, batch, key) — property-tested in tests/test_dp_core.py.
+``expected_batch_size``: the normalizer of the private update.  Defaults to
+the physical batch size (fixed-size mode); under Poisson sampling the
+trainer passes the *expected* sample size q·N (Algorithm 1 line 24's lot
+size) — never the realized draw, which would leak the sample size.
+
+All four produce gradients in the same tree/dtype (f32), so the optimizer
+is agnostic.  The three private algos produce *identical* updates for the
+same (params, batch, key) — property-tested in tests/test_dp_core.py and,
+under random masks, tests/test_dp_properties.py.
 
 loss_fn contract: ``loss_fn(params, batch, ctx) -> (per_example_losses, ctx)``
 with ``per_example_losses: (B,) float32``.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,32 +58,56 @@ from repro.configs.base import DPConfig
 from repro.core import clipping, noise
 from repro.core.context import DPContext
 
+MASK_KEY = "mask"
+
 
 def _batch_size(batch) -> int:
     return jax.tree.leaves(batch)[0].shape[0]
 
 
-def _metrics(losses, nsq, clip_norm):
+def split_mask(batch) -> Tuple[dict, Optional[jax.Array]]:
+    """Split the optional ``"mask"`` leaf off a batch.  Returns
+    (model inputs, f32 (B,) 0/1 mask or None)."""
+    if isinstance(batch, dict) and MASK_KEY in batch:
+        data = {k: v for k, v in batch.items() if k != MASK_KEY}
+        return data, batch[MASK_KEY].astype(jnp.float32)
+    return batch, None
+
+
+def _ones_if_none(mask, B: int) -> jax.Array:
+    return jnp.ones((B,), jnp.float32) if mask is None else mask
+
+
+def _metrics(losses, nsq, clip_norm, mask):
+    """Mask-weighted metrics: padded rows carry exact-zero norms² but
+    garbage losses, so every mean/frac is taken over real rows only."""
     n = jnp.sqrt(jnp.maximum(nsq, 0.0))
+    count = jnp.maximum(jnp.sum(mask), 1.0)
     return {
-        "loss": jnp.mean(losses),
-        "grad_norm_mean": jnp.mean(n),
-        "grad_norm_max": jnp.max(n),
-        "clipped_frac": jnp.mean((n > clip_norm).astype(jnp.float32)),
+        "loss": jnp.sum(losses * mask) / count,
+        "grad_norm_mean": jnp.sum(n * mask) / count,
+        "grad_norm_max": jnp.max(n * mask),
+        "clipped_frac": jnp.sum((n > clip_norm).astype(jnp.float32) * mask)
+                        / count,
+        "realized_batch": jnp.sum(mask),
     }
 
 
 # ---------------------------------------------------------------------------
-# per-algorithm clipped-sum kernels:  (params, microbatch) ->
-#   (Σ_i c_i g_i  [f32 tree],  (losses (b,), nsq (b,)))
+# per-algorithm clipped-sum kernels:  (params, microbatch[+mask]) ->
+#   (Σ_i m_i c_i g_i  [f32 tree],  (losses (b,), nsq (b,)))
 # ---------------------------------------------------------------------------
 
 def _sgd_sum(loss_fn):
     def fn(params, batch):
-        b = _batch_size(batch)
+        data, mask = split_mask(batch)
+        b = _batch_size(data)
+        m = _ones_if_none(mask, b)
+
         def sum_loss(p):
-            losses, _ = loss_fn(p, batch, DPContext.off())
-            return jnp.sum(losses), losses
+            losses, _ = loss_fn(p, data, DPContext.off())
+            return jnp.sum(m * losses), losses
+
         (_, losses), grads = jax.value_and_grad(sum_loss, has_aux=True)(params)
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         return grads, (losses, jnp.zeros((b,), jnp.float32))
@@ -72,27 +116,34 @@ def _sgd_sum(loss_fn):
 
 def _dpsgd_sum(loss_fn, dp: DPConfig):
     def fn(params, batch):
-        B = _batch_size(batch)
+        data, mask = split_mask(batch)
+        B = _batch_size(data)
+        m = _ones_if_none(mask, B)
         mb = dp.microbatch or B
         assert B % mb == 0, (B, mb)
 
-        def one_example_grad(p, ex):
+        def one_example_grad(p, ex, mi):
             def l(p_):
                 ex1 = jax.tree.map(lambda a: a[None], ex)
                 losses, _ = loss_fn(p_, ex1, DPContext.off())
-                return losses[0]
-            return jax.value_and_grad(l)(p)
+                # mask at the loss: padded rows backprop an exact-zero
+                # cotangent -> zero per-example grad, zero norm
+                return mi * losses[0], losses[0]
+            (_, raw), g = jax.value_and_grad(l, has_aux=True)(p)
+            return raw, g
 
         def microbatch_step(acc, chunk):
-            losses, gb = jax.vmap(lambda ex: one_example_grad(params, ex))(chunk)
-            summed, nsq = clipping.clip_and_sum(gb, dp.clip_norm)
+            cdata, cm = chunk
+            losses, gb = jax.vmap(
+                lambda ex, mi: one_example_grad(params, ex, mi))(cdata, cm)
+            summed, nsq = clipping.clip_and_sum(gb, dp.clip_norm, mask=cm)
             acc = jax.tree.map(lambda a, s: a + s.astype(jnp.float32),
                                acc, summed)
             return acc, (losses, nsq)
 
         zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         chunks = jax.tree.map(lambda a: a.reshape((B // mb, mb) + a.shape[1:]),
-                              batch)
+                              (data, m))
         summed, (losses, nsq) = jax.lax.scan(microbatch_step, zeros, chunks)
         return summed, (losses.reshape(-1), nsq.reshape(-1))
     return fn
@@ -100,25 +151,29 @@ def _dpsgd_sum(loss_fn, dp: DPConfig):
 
 def _dpsgd_r_sum(loss_fn, dp: DPConfig):
     def fn(params, batch):
-        B = _batch_size(batch)
+        data, mask = split_mask(batch)
+        B = _batch_size(data)
+        m = _ones_if_none(mask, B)
 
         # ---- pass 1: per-example grad norms via the side-channel --------
+        # Seeding Σ mᵢLᵢ (not Σ Lᵢ) makes every padded row's gy — and hence
+        # its norms² through all DPContext sites — an exact zero.
         def pass1(p, acc0):
             ctx = DPContext(acc=acc0, mode="norm", strategy=dp.norm_strategy,
                             use_kernels=dp.use_kernels)
-            losses, ctx = loss_fn(p, batch, ctx)
-            return (jnp.sum(losses), ctx.acc), losses
+            losses, ctx = loss_fn(p, data, ctx)
+            return (jnp.sum(m * losses), ctx.acc), losses
 
         acc0 = jnp.zeros((B,), jnp.float32)
         _, pull, losses = jax.vjp(pass1, params, acc0, has_aux=True)
         # params cotangent is discarded -> its weight-grad GEMMs are DCE'd.
         _, nsq = pull((jnp.ones(()), jnp.zeros((B,), jnp.float32)))
 
-        c = clipping.clip_factors(nsq, dp.clip_norm)           # line 35
+        c = clipping.clip_factors(nsq, dp.clip_norm) * m       # line 35
 
         # ---- pass 2: backprop of the reweighted loss --------------------
         def reweighted_loss(p):
-            ls, _ = loss_fn(p, batch, DPContext.off())
+            ls, _ = loss_fn(p, data, DPContext.off())
             return jnp.sum(jax.lax.stop_gradient(c) * ls)      # line 36
 
         grads = jax.grad(reweighted_loss)(params)              # line 39
@@ -134,9 +189,10 @@ def _dpsgd_r1f_sum(loss_fn, dp: DPConfig):
     forward pass.  But pass 2's forward is bit-identical to pass 1's, so we
     take ONE ``jax.vjp`` and pull back twice through the shared residuals:
 
-      pullback(1_B, 0)  -> norm-channel cotangent  = per-example norms²
-                           (param cotangents discarded -> wgrad GEMMs DCE'd)
-      pullback(c,   0)  -> param cotangents of Σ cᵢ Lᵢ = clipped grad sum
+      pullback(m_B, 0)  -> norm-channel cotangent  = per-example norms²
+                           (param cotangents discarded -> wgrad GEMMs DCE'd;
+                            the mask seed zeroes padded rows exactly)
+      pullback(m·c, 0)  -> param cotangents of Σ mᵢcᵢLᵢ = clipped grad sum
                            (norm-channel cotangent discarded -> norm-rule
                             einsums DCE'd)
 
@@ -144,19 +200,21 @@ def _dpsgd_r1f_sum(loss_fn, dp: DPConfig):
     identical update to ``dpsgd_r``/``dpsgd`` (tested to equality).
     """
     def fn(params, batch):
-        B = _batch_size(batch)
+        data, mask = split_mask(batch)
+        B = _batch_size(data)
+        m = _ones_if_none(mask, B)
 
         def both(p, acc0):
             ctx = DPContext(acc=acc0, mode="norm", strategy=dp.norm_strategy,
                             use_kernels=dp.use_kernels)
-            losses, ctx = loss_fn(p, batch, ctx)
+            losses, ctx = loss_fn(p, data, ctx)
             return (losses, ctx.acc), losses
 
         acc0 = jnp.zeros((B,), jnp.float32)
         _, pull, losses = jax.vjp(both, params, acc0, has_aux=True)
         zero_acc = jnp.zeros((B,), jnp.float32)
-        _, nsq = pull((jnp.ones((B,), jnp.float32), zero_acc))
-        c = clipping.clip_factors(nsq, dp.clip_norm)
+        _, nsq = pull((m, zero_acc))
+        c = clipping.clip_factors(nsq, dp.clip_norm) * m
         grads, _ = pull((jax.lax.stop_gradient(c), zero_acc))
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         return grads, (losses, nsq)
@@ -180,12 +238,23 @@ def make_clipped_sum_fn(loss_fn: Callable, dp: DPConfig) -> Callable:
 # ---------------------------------------------------------------------------
 
 def make_noisy_grad_fn(loss_fn: Callable, dp: DPConfig,
-                       grad_accum: int = 1) -> Callable:
+                       grad_accum: int = 1,
+                       expected_batch_size: Optional[float] = None) -> Callable:
+    """Build fn(params, batch, key) -> (grads, metrics).
+
+    ``expected_batch_size``: private-update normalizer.  None (default)
+    uses the physical batch size — correct for fixed-size batches.  Under
+    ``DPConfig.sampling="poisson"`` pass q·N (= the configured batch size,
+    by construction of the sampler's rate) — Algorithm 1 line 24 divides by
+    the lot size, NOT the realized sample size.
+    """
     csum = make_clipped_sum_fn(loss_fn, dp)
     private = dp.enabled and dp.algo != "sgd"
 
     def fn(params, batch, key):
+        _, mask = split_mask(batch)
         B = _batch_size(batch)
+        full_mask = _ones_if_none(mask, B)
         if grad_accum == 1:
             summed, (losses, nsq) = csum(params, batch)
         else:
@@ -204,12 +273,16 @@ def make_noisy_grad_fn(loss_fn: Callable, dp: DPConfig,
             losses, nsq = losses.reshape(-1), nsq.reshape(-1)
 
         if private:
+            denom = (float(expected_batch_size)
+                     if expected_batch_size is not None else B)
             grads = noise.add_noise(summed, key, dp.noise_multiplier,
-                                    dp.clip_norm, B)           # lines 24/41
-            metrics = _metrics(losses, nsq, dp.clip_norm)
+                                    dp.clip_norm, denom)       # lines 24/41
+            metrics = _metrics(losses, nsq, dp.clip_norm, full_mask)
         else:
-            grads = jax.tree.map(lambda g: g / B, summed)
-            metrics = {"loss": jnp.mean(losses)}
+            count = jnp.maximum(jnp.sum(full_mask), 1.0)
+            grads = jax.tree.map(lambda g: g / count, summed)
+            metrics = {"loss": jnp.sum(losses * full_mask) / count,
+                       "realized_batch": jnp.sum(full_mask)}
         return grads, metrics
 
     return fn

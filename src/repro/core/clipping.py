@@ -18,14 +18,19 @@ def tree_per_example_norm_sq(grads_b) -> jax.Array:
                        axis=tuple(range(1, g.ndim))) for g in leaves)
 
 
-def clip_and_sum(grads_b, clip_norm: float):
+def clip_and_sum(grads_b, clip_norm: float, mask=None):
     """Vanilla DP-SGD post-processing: per-example norms -> clip -> reduce.
 
     grads_b: tree of (B, ...) per-example grads.
+    mask: optional (B,) 0/1 validity weights (Poisson-padded batches) —
+    masked rows get clip factor 0 so they contribute nothing to the sum
+    even if their (garbage) padded gradients were nonfinite.
     Returns (summed clipped grads tree, per-example norm_sq (B,)).
     """
     nsq = tree_per_example_norm_sq(grads_b)
     c = clip_factors(nsq, clip_norm)
+    if mask is not None:
+        c = c * mask.astype(c.dtype)
     def _one(g):
         cb = c.reshape((-1,) + (1,) * (g.ndim - 1)).astype(g.dtype)
         return jnp.sum(g * cb, axis=0)

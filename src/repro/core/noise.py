@@ -4,6 +4,12 @@ Noise is keyed by (seed, step) and parameter path, so a restarted/retried
 step regenerates bit-identical noise — retries do not change the privacy
 accounting.  Under pjit the partitionable threefry PRNG generates each shard
 of the (globally-shaped) noise tensor locally without communication.
+
+``denom`` is the normalizer of the noisy sum.  For fixed-size batches it is
+the physical batch size B; under Poisson subsampling it MUST be the
+*expected* sample size q·N (Algorithm 1 line 24 uses the lot size L, not
+the realized draw) — dividing by the realized size would leak the sample
+size and break the sensitivity analysis the accountant prices.
 """
 from __future__ import annotations
 
@@ -12,8 +18,11 @@ import jax.numpy as jnp
 
 
 def add_noise(grads, key: jax.Array, noise_multiplier: float, clip_norm: float,
-              batch_size: int):
-    """(Σ clipped grads + N(0, σ²C²I)) / B, in f32."""
+              denom):
+    """(Σ clipped grads + N(0, σ²C²I)) / denom, in f32.
+
+    ``denom``: physical B (fixed batches) or expected q·N (Poisson) —
+    a Python number; never a function of the realized sample."""
     leaves, treedef = jax.tree.flatten(grads)
     keys = jax.random.split(key, len(leaves))
     std = noise_multiplier * clip_norm
@@ -22,5 +31,5 @@ def add_noise(grads, key: jax.Array, noise_multiplier: float, clip_norm: float,
         g = g.astype(jnp.float32)
         if std > 0.0:
             g = g + std * jax.random.normal(k, g.shape, jnp.float32)
-        out.append(g / batch_size)
+        out.append(g / denom)
     return jax.tree.unflatten(treedef, out)

@@ -22,6 +22,13 @@ do in VMEM, expressed at the XLA level.  Embedding norms use an exact
 O(B·T·d) sort+segment-sum rule instead of the O(B·T²·d) masked Gram.
 
 All accumulation is in float32 regardless of input dtype.
+
+Masked (Poisson-padded) batches need no special-casing here: core/algo.py
+seeds backprop with masked loss cotangents, so a padded example reaches
+every rule as an all-zero ``gy`` row — and every formula below is a sum of
+products containing a ``gy`` factor, so its norm² is an *exact* zero
+(verified against the compacted batch in tests/test_dp_properties.py and
+tests/test_kernels.py).
 """
 from __future__ import annotations
 

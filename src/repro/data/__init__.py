@@ -1,4 +1,6 @@
 from repro.data.pipeline import (MemmapSource, SyntheticSource, batch_for,
-                                 make_source)
+                                 make_source, poisson_batch_for,
+                                 poisson_capacity, poisson_sample_indices)
 
-__all__ = ["SyntheticSource", "MemmapSource", "make_source", "batch_for"]
+__all__ = ["SyntheticSource", "MemmapSource", "make_source", "batch_for",
+           "poisson_batch_for", "poisson_capacity", "poisson_sample_indices"]

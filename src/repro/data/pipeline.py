@@ -8,24 +8,44 @@ counter-based PRNG (Philox), so:
   global batch (host h materializes example indices [h·B/H, (h+1)·B/H));
 * **retried** steps are bit-identical (matters for DP accounting).
 
-Poisson subsampling note: DP-SGD's accountant assumes Poisson-sampled
-batches.  ``SyntheticSource`` draws fixed-size batches (the standard
-practical relaxation, as in the paper's TF-Privacy setup); the accountant
-uses q = B/N as its sampling rate, matching that practice.
+Two sampling modes feed the DP core (``DPConfig.sampling``):
+
+* ``"fixed"`` (``batch_for``): fixed-size batches of per-step fresh
+  examples — the standard practical relaxation; the accountant prices
+  q = B/N as an approximation.
+* ``"poisson"`` (``poisson_batch_for``): true Poisson subsampling, the
+  mechanism the subsampled-Gaussian RDP bound is actually proved for
+  (Algorithm 1 lines 15–17).  Each step, every dataset example enters the
+  sample independently with probability q — drawn (seed, step)-keyed, so
+  resume/retry reproduce the exact sample.  The variable-size draw is
+  right-padded to a **fixed capacity** and paired with a ``(B,) bool``
+  example-validity ``"mask"`` — static shapes, so the jitted train step
+  never recompiles.  Example *content* is keyed by dataset index (not
+  step): example i is the same tensor in whichever steps it is sampled,
+  as Poisson subsampling of a fixed dataset requires.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional
 
 import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
 
+# stream tag for index-keyed (step-independent) example content; any fixed
+# value outside the per-step stream space works — it only has to be stable
+_EXAMPLE_STREAM_STEP = 0x0DA7A5E7
+
 
 def _rng(seed: int, step: int, stream: int) -> np.random.Generator:
     k0 = (seed * 0x9E3779B97F4A7C15 + step) & 0xFFFFFFFFFFFFFFFF
-    return np.random.Generator(np.random.Philox(key=[k0, stream]))
+    # key MUST be an explicit uint64 array: a Python list with k0 >= 2^63
+    # silently coerces to float64, collapsing ~1024 adjacent steps onto one
+    # Philox key (i.e. identical "per-step" batches for any seed >= 1)
+    key = np.array([k0, stream & 0xFFFFFFFFFFFFFFFF], dtype=np.uint64)
+    return np.random.Generator(np.random.Philox(key=key))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +74,25 @@ class SyntheticSource:
                 gi = _rng(self.seed, step, lo + i + 1)
                 gi.integers(0, self.vocab, seq_len + 1)  # skip token stream
                 emb[i] = gi.standard_normal((seq_len, embed_dim)).astype(np.float32)
+            return {"embeds": emb, "labels": out_tok[:, 1:]}
+        return {"tokens": out_tok}
+
+    def examples(self, indices: np.ndarray, seq_len: int,
+                 embed_dim: int = 0) -> Dict[str, np.ndarray]:
+        """Materialize examples by *dataset index* (step-independent):
+        example i is the same tensor every time it is Poisson-sampled."""
+        k = len(indices)
+        out_tok = np.empty((k, seq_len + 1), np.int32)
+        for row, idx in enumerate(indices):
+            gi = _rng(self.seed, _EXAMPLE_STREAM_STEP, int(idx) + 1)
+            out_tok[row] = gi.integers(0, self.vocab, seq_len + 1, np.int64)
+        if embed_dim:
+            emb = np.empty((k, seq_len, embed_dim), np.float32)
+            for row, idx in enumerate(indices):
+                gi = _rng(self.seed, _EXAMPLE_STREAM_STEP, int(idx) + 1)
+                gi.integers(0, self.vocab, seq_len + 1)  # skip token stream
+                emb[row] = gi.standard_normal((seq_len, embed_dim)).astype(
+                    np.float32)
             return {"embeds": emb, "labels": out_tok[:, 1:]}
         return {"tokens": out_tok}
 
@@ -88,6 +127,19 @@ class MemmapSource:
             out[i] = np.asarray(self._data[s:s + seq_len + 1])
         return {"tokens": np.clip(out, 0, self.vocab - 1)}
 
+    def examples(self, indices: np.ndarray, seq_len: int,
+                 embed_dim: int = 0) -> Dict[str, np.ndarray]:
+        """Dataset-index-keyed windows: index i always maps to the same
+        (seed, i)-keyed window start, independent of the sampling step."""
+        assert embed_dim == 0, "memmap source provides tokens only"
+        hi_start = len(self._data) - (seq_len + 1)
+        out = np.empty((len(indices), seq_len + 1), np.int32)
+        for row, idx in enumerate(indices):
+            gi = _rng(self.seed, _EXAMPLE_STREAM_STEP, int(idx) + 1)
+            s = int(gi.integers(0, hi_start))
+            out[row] = np.asarray(self._data[s:s + seq_len + 1])
+        return {"tokens": np.clip(out, 0, self.vocab - 1)}
+
 
 def make_source(spec: str, vocab: int, seed: int = 0):
     if spec == "synthetic":
@@ -103,3 +155,78 @@ def batch_for(source, arch: ArchConfig, shape: ShapeConfig, step: int,
     embed_dim = arch.d_model if arch.embed_stub else 0
     return source.batch(step, shape.global_batch, shape.seq_len,
                         shard, n_shards, embed_dim)
+
+
+# ---------------------------------------------------------------------------
+# Poisson subsampling (DPConfig.sampling = "poisson")
+# ---------------------------------------------------------------------------
+
+def poisson_sample_indices(seed: int, step: int, dataset_size: int,
+                           sample_rate: float) -> np.ndarray:
+    """The step's Poisson sample: sorted dataset indices, each of the N
+    examples included independently w.p. ``sample_rate``.
+
+    Drawn as S ~ Binomial(N, q) then a uniform size-S subset — exactly
+    equivalent to N independent Bernoulli(q) draws, at O(S) instead of O(N).
+    (seed, step)-keyed: resume and retried steps redraw the same sample."""
+    assert 0.0 <= sample_rate <= 1.0, sample_rate
+    g = _rng(seed, step, 0xB0)
+    size = int(g.binomial(dataset_size, sample_rate))
+    idx = g.choice(dataset_size, size=size, replace=False)
+    return np.sort(idx.astype(np.int64))
+
+
+def poisson_capacity(expected_batch: int, sample_rate: float,
+                     multiple: int = 1, z: float = 6.0) -> int:
+    """Static physical capacity for the padded batch: expected size q·N
+    plus ``z`` binomial standard deviations (z=6 -> overflow probability
+    ~1e-9/step), rounded up to ``multiple`` (grad_accum x microbatch x
+    shard divisibility).  Fixed across steps -> no recompilation."""
+    std = float(np.sqrt(expected_batch * max(1.0 - sample_rate, 0.0)))
+    cap = int(np.ceil(expected_batch + z * std))
+    multiple = max(1, multiple)
+    return ((cap + multiple - 1) // multiple) * multiple
+
+
+def poisson_batch_for(source, arch: ArchConfig, shape: ShapeConfig, step: int,
+                      capacity: Optional[int] = None,
+                      sample_rate: Optional[float] = None,
+                      shard: int = 0, n_shards: int = 1) -> Dict[str, np.ndarray]:
+    """This shard's slice of the step's Poisson-sampled global batch.
+
+    The sample's expected size is ``shape.global_batch`` (the accountant's
+    q = B/N); the physical row count is ``capacity`` >= that, right-padded
+    with all-zero rows.  Returns the model inputs plus ``"mask"`` — (per,)
+    bool example-validity flags the DP core threads through every algo.
+    The astronomically-rare (z=6) draw larger than capacity is truncated
+    deterministically (lowest indices kept) with a RuntimeWarning — the
+    executed mechanism then deviates slightly from the priced one.
+    """
+    N = source.dataset_size
+    q = sample_rate if sample_rate is not None else shape.global_batch / N
+    cap = capacity if capacity is not None else poisson_capacity(
+        shape.global_batch, q, multiple=n_shards)
+    assert cap % n_shards == 0, (cap, n_shards)
+    per = cap // n_shards
+    lo = shard * per
+
+    idx = poisson_sample_indices(source.seed, step, N, q)
+    if len(idx) > cap:
+        warnings.warn(
+            f"poisson draw of {len(idx)} examples exceeds capacity {cap} at "
+            f"step {step}; truncating (the executed sample deviates from "
+            f"the priced Poisson mechanism this step)", RuntimeWarning)
+        idx = idx[:cap]
+    mine = idx[lo:lo + per]                      # this shard's real rows
+    embed_dim = arch.d_model if arch.embed_stub else 0
+    ex = source.examples(mine, shape.seq_len, embed_dim)
+
+    out: Dict[str, np.ndarray] = {}
+    for k, v in ex.items():
+        padded = np.zeros((per,) + v.shape[1:], v.dtype)
+        padded[:len(mine)] = v
+        out[k] = padded
+    mask = np.zeros((per,), np.bool_)
+    mask[:len(mine)] = True
+    out["mask"] = mask
+    return out

@@ -16,15 +16,16 @@ See docs/ARCHITECTURE.md for how this maps onto the DiVa paper.
 from repro.dist import compress, runtime, sharding
 from repro.dist.compress import compress_grads, init_error_state
 from repro.dist.runtime import attn_local, batch_local, layout
-from repro.dist.sharding import (batch_pspec, batch_shardings,
-                                 cache_shardings, mesh_from_config,
-                                 param_shardings, spec_for_param,
-                                 state_shardings)
+from repro.dist.sharding import (batch_axis_width, batch_pspec,
+                                 batch_shardings, cache_shardings,
+                                 mesh_from_config, param_shardings,
+                                 spec_for_param, state_shardings)
 
 __all__ = [
     "compress", "runtime", "sharding",
     "compress_grads", "init_error_state",
     "attn_local", "batch_local", "layout",
-    "batch_pspec", "batch_shardings", "cache_shardings", "mesh_from_config",
-    "param_shardings", "spec_for_param", "state_shardings",
+    "batch_axis_width", "batch_pspec", "batch_shardings", "cache_shardings",
+    "mesh_from_config", "param_shardings", "spec_for_param",
+    "state_shardings",
 ]

@@ -53,6 +53,17 @@ def _axis_size(mesh, name: str) -> int:
     return int(mesh.devices.shape[names.index(name)])
 
 
+def batch_axis_width(mesh) -> int:
+    """Total device product of the mesh's batch-carrying axes — the
+    divisor a physical batch size must satisfy for ``batch_pspec`` to use
+    full data parallelism (launchers round Poisson padded capacities to a
+    multiple of this; train/trainer.py ``physical_batch_size``)."""
+    w = 1
+    for a in BATCH_AXES:
+        w *= _axis_size(mesh, a)
+    return w
+
+
 def batch_pspec(mesh, global_batch: int) -> Optional[Tuple[str, ...]]:
     """Mesh axes the batch dim shards over: the ``BATCH_AXES`` subset (in
     order) with the largest device product that divides the batch — i.e.

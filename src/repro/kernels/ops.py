@@ -4,6 +4,11 @@
 real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or the
 REPRO_PALLAS_INTERPRET=0 env var) and the same kernels compile to Mosaic.
 The DP core routes through these via ``DPConfig.use_kernels``.
+
+Poisson-masked batches (core/algo.py): padded examples arrive as all-zero
+``gy`` rows, which every kernel annihilates to an exact-zero norm² /
+reduction term — kernel-vs-compacted parity is tested in
+tests/test_kernels.py, so the mask needs no explicit kernel argument.
 """
 from __future__ import annotations
 

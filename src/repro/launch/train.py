@@ -28,7 +28,7 @@ from repro.configs import (SHAPES, apply_overrides, get_arch, parse_set_args,
                            reduced)
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.dist import batch_shardings, runtime, state_shardings
-from repro.dist.sharding import batch_pspec
+from repro.dist.sharding import batch_axis_width, batch_pspec
 from repro.launch.mesh import make_host_mesh, make_mesh
 from repro.models.transformer import build_model
 from repro.train import Trainer
@@ -84,17 +84,27 @@ def main() -> None:
     else:
         mesh = make_host_mesh()
 
+    # the trainer owns the physical per-step row count: == global_batch for
+    # fixed sampling; under dp.sampling="poisson" a padded step-invariant
+    # capacity rounded to the mesh's batch-axis width so the batch — and
+    # its (B,) bool mask leaf — shards over the full data axis
+    trainer = Trainer(model, cfg, shape, batch_multiple=batch_axis_width(mesh))
+    phys_batch = trainer.capacity
+    if cfg.dp.sampling == "poisson":
+        print(f"[train] poisson sampling: expected batch "
+              f"{shape.global_batch}, padded capacity {phys_batch}")
+
     # batch-local layout active while the step traces: MoE dispatch and the
     # embedding norm rule run per-batch-shard under shard_map instead of the
     # GSPMD-replicated scatter (dist/runtime.py)
-    with mesh, runtime.layout(mesh, batch_pspec(mesh, shape.global_batch)):
+    with mesh, runtime.layout(mesh, batch_pspec(mesh, phys_batch)):
         def shard_batch(b):
             abs_tree = jax.tree.map(
                 lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), b)
-            sh = batch_shardings(mesh, abs_tree, shape.global_batch)
+            sh = batch_shardings(mesh, abs_tree, phys_batch)
             return jax.tree.map(lambda a, s: jax.device_put(a, s), b, sh)
 
-        trainer = Trainer(model, cfg, shape, shard_batch=shard_batch)
+        trainer.shard_batch = shard_batch
         state = trainer.restore_or_init(jax.random.PRNGKey(cfg.seed))
         # shard the state onto the mesh (works for fresh init and for
         # checkpoints restored from a different mesh — elastic restart)
@@ -106,7 +116,8 @@ def main() -> None:
         eps = trainer.accountant.epsilon_at(int(state.step))
         print(f"[train] finished at step {int(state.step)}; "
               f"privacy spent: eps={eps:.3f} "
-              f"(delta={cfg.dp.delta})")
+              f"(delta={cfg.dp.delta}, sampling={cfg.dp.sampling}, "
+              f"q={trainer.sample_rate:.2e})")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 from repro.train.checkpoint import CheckpointManager
 from repro.train.state import TrainState
-from repro.train.trainer import Trainer, make_train_step
+from repro.train.trainer import Trainer, make_train_step, physical_batch_size
 
-__all__ = ["CheckpointManager", "TrainState", "Trainer", "make_train_step"]
+__all__ = ["CheckpointManager", "TrainState", "Trainer", "make_train_step",
+           "physical_batch_size"]

@@ -16,6 +16,7 @@ Fault-tolerance model (1000+-node design, DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
+import math
 import signal
 import time
 from typing import Callable, Dict, Iterable, Optional
@@ -26,21 +27,43 @@ import numpy as np
 
 from repro.configs.base import TrainConfig
 from repro.core import PrivacyAccountant, make_noisy_grad_fn
-from repro.data import batch_for, make_source
+from repro.data import (batch_for, make_source, poisson_batch_for,
+                        poisson_capacity)
 from repro.optim import make_optimizer
 from repro.train.checkpoint import CheckpointManager
 from repro.train.state import TrainState
 
 
-def make_train_step(model, train_cfg: TrainConfig) -> Callable:
+def physical_batch_size(train_cfg: TrainConfig, shape,
+                        dataset_size: int, shards: int = 1) -> int:
+    """Physical (padded) rows per step.  Fixed sampling: the configured
+    batch.  Poisson: a step-invariant capacity >= the expected size q·N
+    (+6 binomial sigmas), rounded so grad_accum and microbatch chunking —
+    and the mesh's ``shards``-wide batch axes, when given — keep dividing
+    evenly (data/pipeline.poisson_capacity)."""
+    if train_cfg.dp.sampling != "poisson":
+        return shape.global_batch
+    mult = math.lcm(max(1, train_cfg.grad_accum)
+                    * max(1, train_cfg.dp.microbatch), max(1, shards))
+    return poisson_capacity(shape.global_batch,
+                            shape.global_batch / dataset_size, multiple=mult)
+
+
+def make_train_step(model, train_cfg: TrainConfig,
+                    expected_batch_size: Optional[float] = None) -> Callable:
     """Build fn(state, batch, key) -> (state, metrics).  Pure; jit outside.
+
+    ``expected_batch_size``: under ``dp.sampling="poisson"`` the expected
+    sample size q·N that normalizes the noisy sum (Algorithm 1 line 24);
+    None = physical batch size (fixed-size batches).
 
     With ``compress_pod_grads``: the DP-noised gradient sum is int8+error-
     feedback compressed before the cross-pod reduction (dist/compress.py);
     the error residual rides in the optimizer state so it is checkpointed.
     """
     grad_fn = make_noisy_grad_fn(model.loss_fn, train_cfg.dp,
-                                 grad_accum=train_cfg.grad_accum)
+                                 grad_accum=train_cfg.grad_accum,
+                                 expected_batch_size=expected_batch_size)
     opt = make_optimizer(train_cfg.optim)
     compress = train_cfg.compress_pod_grads
 
@@ -82,7 +105,8 @@ class Trainer:
     def __init__(self, model, train_cfg: TrainConfig, shape,
                  jit_step: bool = True, shard_batch=None,
                  inject_failure_at: Optional[int] = None,
-                 inject_inside_jit: bool = False):
+                 inject_inside_jit: bool = False,
+                 batch_multiple: int = 1):
         self.model = model
         self.cfg = train_cfg
         self.shape = shape
@@ -91,7 +115,26 @@ class Trainer:
         self.inject_failure_at = inject_failure_at
         self.inject_inside_jit = inject_inside_jit
         self._injected = False
-        self.step_fn = make_train_step(model, train_cfg)
+
+        # -- sampling mode (DPConfig.sampling) ---------------------------
+        # poisson: variable-size (seed, step)-keyed samples, right-padded
+        # to a step-invariant capacity (static shapes -> one compile); the
+        # noisy sum is normalized by the *expected* batch size q.N.
+        dataset_size = getattr(self.source, "dataset_size", 1_000_000)
+        self.sampling = train_cfg.dp.sampling
+        self.sample_rate = shape.global_batch / dataset_size
+        # batch_multiple: the mesh's batch-axis device width (launchers) so
+        # the padded capacity stays shardable over the full data axis
+        expected_batch = None
+        self.capacity = physical_batch_size(train_cfg, shape, dataset_size,
+                                            shards=batch_multiple)
+        if self.sampling == "poisson":
+            expected_batch = float(shape.global_batch)
+        else:
+            assert self.sampling == "fixed", self.sampling
+
+        self.step_fn = make_train_step(model, train_cfg,
+                                       expected_batch_size=expected_batch)
         if inject_failure_at is not None and inject_inside_jit:
             self.step_fn = self._with_injected_failure(self.step_fn)
         if jit_step:
@@ -106,11 +149,14 @@ class Trainer:
         self.ckpt = CheckpointManager(train_cfg.ckpt_dir,
                                       keep=train_cfg.ckpt_keep,
                                       use_async=train_cfg.ckpt_async)
+        # the accountant prices the true per-step sample rate: exact under
+        # poisson, the standard B/N approximation under fixed batches
         self.accountant = PrivacyAccountant(
             batch_size=shape.global_batch,
-            dataset_size=getattr(self.source, "dataset_size", 1_000_000),
+            dataset_size=dataset_size,
             noise_multiplier=train_cfg.dp.noise_multiplier,
-            delta=train_cfg.dp.delta)
+            delta=train_cfg.dp.delta,
+            sample_rate=self.sample_rate)
         self.shard_batch = shard_batch or (lambda b: jax.tree.map(jnp.asarray, b))
         self._preempted = False
         self._step_times: list = []
@@ -159,6 +205,17 @@ class Trainer:
     def _handle_preempt(self, signum, frame):
         self._preempted = True
 
+    def make_batch(self, step: int):
+        """The step's (seed, step)-keyed batch under the configured
+        sampling mode.  Poisson batches carry a ``"mask"`` validity leaf
+        and a step-invariant physical row count (``self.capacity``)."""
+        if self.sampling == "poisson":
+            return poisson_batch_for(self.source, self.model.arch,
+                                     self.shape, step,
+                                     capacity=self.capacity,
+                                     sample_rate=self.sample_rate)
+        return batch_for(self.source, self.model.arch, self.shape, step)
+
     # -- loop ---------------------------------------------------------------
     def run(self, state: TrainState, steps: Optional[int] = None,
             install_signals: bool = True) -> TrainState:
@@ -171,8 +228,7 @@ class Trainer:
         try:
             start = int(state.step)
             for step in range(start, steps):
-                batch = self.shard_batch(
-                    batch_for(self.source, self.model.arch, self.shape, step))
+                batch = self.shard_batch(self.make_batch(step))
                 key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
                 t0 = time.perf_counter()
                 for attempt in range(3):   # transient-failure retry
@@ -201,11 +257,16 @@ class Trainer:
                 if (step + 1) % cfg.log_every == 0 or step == steps - 1:
                     eps = self.accountant.epsilon_at(step + 1)
                     rec = {k: float(v) for k, v in metrics.items()}
-                    rec.update(step=step, sec=dt, epsilon=eps)
+                    rec.update(step=step, sec=dt, epsilon=eps,
+                               expected_batch=self.shape.global_batch)
                     self.history.append(rec)
+                    realized = ""
+                    if self.sampling == "poisson":
+                        realized = (f"B {rec['realized_batch']:.0f}"
+                                    f"/{self.shape.global_batch} ")
                     print(f"[trainer] step {step:5d} "
                           f"loss {rec['loss']:.4f} eps {eps:.3f} "
-                          f"({dt*1e3:.0f} ms)")
+                          f"{realized}({dt*1e3:.0f} ms)")
                 if (step + 1) % cfg.ckpt_every == 0 or step == steps - 1 \
                         or self._preempted:
                     self.ckpt.save(state, step + 1)

@@ -1,0 +1,381 @@
+"""DP property tests: Poisson-subsampled masked batches, end to end.
+
+The contract (core/algo.py): a right-padded batch carrying a ``(B,) bool``
+``"mask"`` must behave exactly like the physically compacted batch — padded
+rows contribute zero to losses, per-example norms², clip factors and the
+clipped sum — across all three private algorithms and every
+grad_accum/microbatch chunking, with the noisy sum normalized by the
+*expected* batch size.
+
+Two layers of coverage:
+
+* seeded deterministic sweeps (random shapes × random masks × accumulation
+  combos) that always run;
+* hypothesis ``@given`` generalizations that skip cleanly without
+  hypothesis (conftest shim) and widen the search space when it is
+  installed.
+
+Plus the sampler-side properties: (seed, step)-keyed determinism,
+dataset-index-keyed example content, shard-layout consistency, and the
+static-capacity guarantee.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import DPConfig, ShapeConfig
+from repro.core import make_noisy_grad_fn
+from repro.data import (SyntheticSource, poisson_batch_for, poisson_capacity,
+                        poisson_sample_indices)
+from repro.data.pipeline import _rng
+
+from helpers import make_batch, tiny_model
+
+PRIVATE_ALGOS = ("dpsgd", "dpsgd_r", "dpsgd_r1f")
+
+
+@pytest.fixture(scope="module")
+def phi3():
+    arch, model = tiny_model("phi3-mini-3.8b")
+    params = model.init(jax.random.PRNGKey(0))
+    return arch, model, params
+
+
+def _mask_and_batch(arch, seed, B, T):
+    """Seeded random batch + random mask with >= 1 real row."""
+    rng = np.random.default_rng(seed)
+    batch = make_batch(arch, jax.random.PRNGKey(seed), B=B, T=T)
+    mask = rng.random(B) < rng.uniform(0.3, 0.9)
+    if not mask.any():
+        mask[rng.integers(B)] = True
+    return batch, mask
+
+
+def _compact(batch, mask):
+    return {k: v[np.asarray(mask)] for k, v in batch.items()}
+
+
+def _assert_trees_close(a, b, rtol, atol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# algo equality under masks (deterministic sweeps)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,B,T,accum,mb", [
+    (0, 6, 12, 1, 0),      # whole-batch
+    (1, 8, 9, 2, 0),       # grad accumulation
+    (2, 8, 17, 1, 2),      # dpsgd microbatching
+    (3, 12, 8, 3, 2),      # both, chunked mask
+])
+def test_private_algos_identical_under_mask(phi3, seed, B, T, accum, mb):
+    """dpsgd == dpsgd_r == dpsgd_r1f on masked batches, across chunkings.
+
+    (microbatch only affects the dpsgd path; the reweighted algos ignore
+    it, which is itself part of the equality claim.)"""
+    arch, model, params = phi3
+    batch, mask = _mask_and_batch(arch, seed, B, T)
+    mb_batch = dict(batch, mask=jnp.asarray(mask))
+    kw = dict(clip_norm=0.05, noise_multiplier=0.4, sampling="poisson")
+    key = jax.random.PRNGKey(100 + seed)
+    grads = {}
+    for algo in PRIVATE_ALGOS:
+        fn = make_noisy_grad_fn(model.loss_fn,
+                                DPConfig(algo=algo, microbatch=mb, **kw),
+                                grad_accum=accum)
+        grads[algo], metrics = fn(params, mb_batch, key)
+        assert float(metrics["realized_batch"]) == mask.sum()
+    for algo in PRIVATE_ALGOS[1:]:
+        _assert_trees_close(grads["dpsgd"], grads[algo],
+                            rtol=1e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", ["mamba2-1.3b", "deepseek-moe-16b"])
+def test_private_algos_identical_under_mask_other_families(name):
+    """The masked-equality claim holds beyond dense attention: SSM (mamba)
+    and per-example-capacity MoE layers thread the mask too."""
+    arch, model = tiny_model(name)
+    params = model.init(jax.random.PRNGKey(1))
+    batch, mask = _mask_and_batch(arch, 5, 6, 16)
+    mb_batch = dict(batch, mask=jnp.asarray(mask))
+    kw = dict(clip_norm=0.05, noise_multiplier=0.0, sampling="poisson")
+    key = jax.random.PRNGKey(9)
+    grads = [make_noisy_grad_fn(model.loss_fn, DPConfig(algo=a, **kw))(
+        params, mb_batch, key)[0] for a in PRIVATE_ALGOS]
+    for g in grads[1:]:
+        _assert_trees_close(grads[0], g, rtol=1e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("algo", PRIVATE_ALGOS)
+@pytest.mark.parametrize("seed,B,T", [(0, 6, 12), (1, 9, 10), (2, 5, 21)])
+def test_masked_equals_compacted(phi3, algo, seed, B, T):
+    """A masked batch == the same batch with padded rows physically
+    removed: identical clipped sums, identical noise (same key), identical
+    mask-aware metrics — once both normalize by the same denominator."""
+    arch, model, params = phi3
+    batch, mask = _mask_and_batch(arch, seed, B, T)
+    n_real = float(mask.sum())
+    dp = DPConfig(algo=algo, clip_norm=0.05, noise_multiplier=0.7,
+                  sampling="poisson")
+    # pin the SAME denominator for both calls so the comparison sees the
+    # sums (the trainer's q.N normalizer is a shared constant in practice)
+    fn = make_noisy_grad_fn(model.loss_fn, dp, expected_batch_size=n_real)
+    key = jax.random.PRNGKey(7 + seed)
+    gm, mm = fn(params, dict(batch, mask=jnp.asarray(mask)), key)
+    gc, mc = fn(params, _compact(batch, mask), key)
+    _assert_trees_close(gm, gc, rtol=1e-5, atol=1e-8)
+    np.testing.assert_allclose(float(mm["loss"]), float(mc["loss"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(mm["grad_norm_mean"]),
+                               float(mc["grad_norm_mean"]), rtol=1e-4)
+    np.testing.assert_allclose(float(mm["clipped_frac"]),
+                               float(mc["clipped_frac"]), rtol=1e-6)
+    assert float(mm["realized_batch"]) == n_real
+
+
+def test_masked_equals_compacted_nonprivate(phi3):
+    """sgd normalizes by the realized count, so masked == compacted with
+    no denominator pinning at all."""
+    arch, model, params = phi3
+    batch, mask = _mask_and_batch(arch, 11, 7, 14)
+    fn = make_noisy_grad_fn(model.loss_fn, DPConfig(algo="sgd"))
+    key = jax.random.PRNGKey(0)
+    gm, mm = fn(params, dict(batch, mask=jnp.asarray(mask)), key)
+    gc, mc = fn(params, _compact(batch, mask), key)
+    _assert_trees_close(gm, gc, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(mm["loss"]), float(mc["loss"]),
+                               rtol=1e-6)
+
+
+def test_padded_rows_have_zero_norms(phi3):
+    """The mask is threaded by seeding backprop with masked loss
+    cotangents, so a padded row's per-example norm² is an EXACT zero (not
+    merely small) through the whole DPContext side-channel."""
+    arch, model, params = phi3
+    batch, mask = _mask_and_batch(arch, 21, 8, 10)
+    from repro.core.algo import make_clipped_sum_fn
+    dp = DPConfig(algo="dpsgd_r1f", clip_norm=0.05)
+    _, (_, nsq) = make_clipped_sum_fn(model.loss_fn, dp)(
+        params, dict(batch, mask=jnp.asarray(mask)))
+    nsq = np.asarray(nsq)
+    assert (nsq[~mask] == 0.0).all()
+    assert (nsq[mask] > 0.0).all()
+
+
+def test_all_rows_masked_is_noise_only(phi3):
+    """Degenerate Poisson draw (empty sample): the update is pure noise /
+    q.N and the metrics stay finite."""
+    arch, model, params = phi3
+    batch = make_batch(arch, jax.random.PRNGKey(0), B=4, T=8)
+    mask = np.zeros(4, bool)
+    dp = DPConfig(algo="dpsgd_r", clip_norm=1.0, noise_multiplier=0.5,
+                  sampling="poisson")
+    fn = make_noisy_grad_fn(model.loss_fn, dp, expected_batch_size=64.0)
+    g, m = fn(params, dict(batch, mask=jnp.asarray(mask)), jax.random.PRNGKey(1))
+    assert float(m["realized_batch"]) == 0.0
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(g))
+    from repro.core.noise import add_noise
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    want = add_noise(zeros, jax.random.PRNGKey(1), 0.5, 1.0, 64.0)
+    _assert_trees_close(g, want, rtol=1e-6, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis generalizations (skip cleanly without hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), b=st.integers(2, 8),
+       t=st.integers(4, 20), accum=st.sampled_from([1, 2]),
+       variant=st.sampled_from(["dpsgd_r", "dpsgd_r1f"]))
+def test_hypothesis_algos_identical_under_mask(seed, b, t, accum, variant):
+    arch, model = tiny_model("phi3-mini-3.8b")
+    params = model.init(jax.random.PRNGKey(0))
+    B = b * accum
+    batch, mask = _mask_and_batch(arch, seed, B, t)
+    mb_batch = dict(batch, mask=jnp.asarray(mask))
+    kw = dict(clip_norm=0.05, noise_multiplier=0.4, sampling="poisson")
+    key = jax.random.PRNGKey(seed)
+    ga, _ = make_noisy_grad_fn(model.loss_fn, DPConfig(algo="dpsgd", **kw),
+                               grad_accum=accum)(params, mb_batch, key)
+    gb, _ = make_noisy_grad_fn(model.loss_fn, DPConfig(algo=variant, **kw),
+                               grad_accum=accum)(params, mb_batch, key)
+    _assert_trees_close(ga, gb, rtol=1e-4, atol=1e-7)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), b=st.integers(2, 8), t=st.integers(4, 16),
+       algo=st.sampled_from(list(PRIVATE_ALGOS)))
+def test_hypothesis_masked_equals_compacted(seed, b, t, algo):
+    arch, model = tiny_model("phi3-mini-3.8b")
+    params = model.init(jax.random.PRNGKey(0))
+    batch, mask = _mask_and_batch(arch, seed, b, t)
+    dp = DPConfig(algo=algo, clip_norm=0.05, noise_multiplier=0.3,
+                  sampling="poisson")
+    fn = make_noisy_grad_fn(model.loss_fn, dp,
+                            expected_batch_size=float(mask.sum()))
+    key = jax.random.PRNGKey(seed)
+    gm, _ = fn(params, dict(batch, mask=jnp.asarray(mask)), key)
+    gc, _ = fn(params, _compact(batch, mask), key)
+    _assert_trees_close(gm, gc, rtol=1e-5, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Poisson sampler / pipeline properties
+# ---------------------------------------------------------------------------
+
+def test_sampler_deterministic_and_distinct():
+    i1 = poisson_sample_indices(3, 7, 10_000, 0.01)
+    i2 = poisson_sample_indices(3, 7, 10_000, 0.01)
+    assert (i1 == i2).all()
+    assert len(set(i1.tolist())) == len(i1)          # without replacement
+    assert (np.diff(i1) > 0).all()                   # sorted
+
+
+@pytest.mark.parametrize("seed", [0, 1, 17])
+def test_sampler_varies_by_step(seed):
+    """Regression for the Philox float64-key-collapse bug: per-step draws
+    must actually differ (for ANY seed — seeds >= 1 used to collapse ~1024
+    adjacent steps onto one stream)."""
+    draws = [tuple(poisson_sample_indices(seed, s, 5_000, 0.02))
+             for s in range(6)]
+    assert len(set(draws)) == len(draws)
+    sizes = [len(d) for d in draws]
+    assert len(set(sizes)) > 1                       # binomial, not constant
+
+
+def test_rng_streams_differ_for_adjacent_steps():
+    """Direct regression on the keyed-PRNG helper for seed >= 1."""
+    a = _rng(1, 0, 0).integers(0, 1 << 30, 8)
+    b = _rng(1, 1, 0).integers(0, 1 << 30, 8)
+    assert not (a == b).all()
+
+
+def test_sample_size_concentrates_at_expectation():
+    N, q = 100_000, 0.004
+    sizes = [len(poisson_sample_indices(0, s, N, q)) for s in range(30)]
+    mean = np.mean(sizes)
+    assert abs(mean - q * N) < 5 * np.sqrt(q * N)    # ~expected batch 400
+
+
+def test_poisson_capacity_properties():
+    cap = poisson_capacity(256, 256 / 50_000, multiple=8)
+    assert cap % 8 == 0 and cap >= 256
+    assert cap <= 2 * 256                            # not absurdly padded
+    assert poisson_capacity(64, 1.0) == 64           # q=1: no variance
+
+
+def test_physical_batch_size_respects_mesh_width():
+    """The padded capacity must stay divisible by grad_accum*microbatch AND
+    the mesh's batch-axis width, so launchers keep full data parallelism
+    (lcm, not product — no needless padding when they share factors)."""
+    from repro.configs.base import DPConfig as DC, TrainConfig
+    from repro.train import physical_batch_size
+    cfg = TrainConfig(grad_accum=2,
+                      dp=DC(sampling="poisson", microbatch=2))
+    shape = ShapeConfig("t", 8, 32, "train")
+    cap = physical_batch_size(cfg, shape, 60_000, shards=8)
+    assert cap % 8 == 0 and cap % 4 == 0 and cap >= 32
+    # shared factors are not double-counted: lcm(4, 8) = 8, not 32
+    cap_lcm = physical_batch_size(cfg, shape, 60_000, shards=4)
+    assert cap_lcm % 4 == 0
+    assert cap_lcm <= cap
+    # fixed mode ignores shards entirely
+    fixed = TrainConfig(dp=DC(sampling="fixed"))
+    assert physical_batch_size(fixed, shape, 60_000, shards=8) == 32
+
+
+def test_poisson_batch_layout_and_determinism():
+    src = SyntheticSource(vocab=64, seed=5, dataset_size=2_000)
+    arch, _ = tiny_model("phi3-mini-3.8b")
+    shape = ShapeConfig("t", 8, 16, "train")
+    b1 = poisson_batch_for(src, arch, shape, 3, capacity=32)
+    b2 = poisson_batch_for(src, arch, shape, 3, capacity=32)
+    assert set(b1) == {"tokens", "mask"}
+    assert b1["tokens"].shape == (32, 9) and b1["mask"].shape == (32,)
+    assert b1["mask"].dtype == np.bool_
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["mask"], b2["mask"])
+    m = b1["mask"]
+    k = int(m.sum())
+    assert m[:k].all() and not m[k:].any()           # right-padded
+    assert (b1["tokens"][~m] == 0).all()             # zero pad rows
+
+
+def test_poisson_batch_example_content_is_index_keyed():
+    """An example sampled at two different steps is the same tensor."""
+    src = SyntheticSource(vocab=64, seed=5, dataset_size=500)
+    arch, _ = tiny_model("phi3-mini-3.8b")
+    shape = ShapeConfig("t", 8, 32, "train")
+    q = 32 / 500
+    steps = (0, 11)
+    idx = {s: poisson_sample_indices(src.seed, s, 500, q)[:64] for s in steps}
+    bat = {s: poisson_batch_for(src, arch, shape, s, capacity=64)
+           for s in steps}
+    common = set(idx[0].tolist()) & set(idx[11].tolist())
+    assert common, "expected overlapping samples at q=0.064"
+    for c in common:
+        r0 = idx[0].tolist().index(c)
+        r1 = idx[11].tolist().index(c)
+        np.testing.assert_array_equal(bat[0]["tokens"][r0],
+                                      bat[11]["tokens"][r1])
+
+
+def test_poisson_batch_shards_tile_the_global_batch():
+    src = SyntheticSource(vocab=64, seed=2, dataset_size=3_000)
+    arch, _ = tiny_model("phi3-mini-3.8b")
+    shape = ShapeConfig("t", 8, 24, "train")
+    whole = poisson_batch_for(src, arch, shape, 4, capacity=48)
+    parts = [poisson_batch_for(src, arch, shape, 4, capacity=48,
+                               shard=s, n_shards=4) for s in range(4)]
+    for k in whole:
+        np.testing.assert_array_equal(
+            whole[k], np.concatenate([p[k] for p in parts], axis=0))
+
+
+def test_poisson_batch_embed_stub_arch():
+    """embed-stub (vlm/audio) batches carry embeds+labels+mask."""
+    src = SyntheticSource(vocab=64, seed=1, dataset_size=1_000)
+    arch, _ = tiny_model("chameleon-34b")
+    assert arch.embed_stub
+    shape = ShapeConfig("t", 8, 8, "train")
+    b = poisson_batch_for(src, arch, shape, 0, capacity=16)
+    assert set(b) == {"embeds", "labels", "mask"}
+    assert b["embeds"].shape == (16, 8, arch.d_model)
+    m = b["mask"]
+    assert (b["embeds"][~m] == 0).all()
+
+
+def test_trainer_poisson_end_to_end(tmp_path):
+    """Two steps of the real Trainer in poisson mode: capacity is static,
+    metrics carry realized batch, resume redraws the exact sample."""
+    from repro.configs.base import DPConfig as DC, OptimConfig, TrainConfig
+    from repro.models.transformer import build_model
+    from repro.train import Trainer
+    arch, _ = tiny_model("phi3-mini-3.8b")
+    shape = ShapeConfig("t", 12, 8, "train")
+    cfg = TrainConfig(arch=arch.name, shape="t", seed=1, steps=2,
+                      log_every=1, ckpt_every=100, ckpt_dir=str(tmp_path),
+                      param_dtype="float32", compute_dtype="float32",
+                      dp=DC(algo="dpsgd_r", sampling="poisson",
+                            noise_multiplier=0.5),
+                      optim=OptimConfig(lr=1e-3, total_steps=2))
+    model = build_model(arch, "float32", "float32")
+    tr = Trainer(model, cfg, shape)
+    assert tr.capacity >= shape.global_batch
+    b0 = tr.make_batch(0)
+    assert b0["mask"].shape == (tr.capacity,)
+    np.testing.assert_array_equal(b0["mask"], tr.make_batch(0)["mask"])
+    state = tr.init_state(jax.random.PRNGKey(0))
+    state = tr.run(state, install_signals=False)
+    assert int(state.step) == 2
+    assert "realized_batch" in tr.history[-1]
+    assert tr.history[-1]["expected_batch"] == shape.global_batch
+    # accountant prices the expected rate, not the padded capacity
+    assert tr.accountant.sample_rate == (shape.global_batch
+                                         / tr.source.dataset_size)

@@ -155,3 +155,97 @@ def test_ops_wrappers_group_reduction(key):
     per = ref.pegrad_norm_ref(x.reshape(B * G, T, d), gy.reshape(B * G, T, d))
     want = per.reshape(B, G).sum(1)
     np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# parity under Poisson masks: a padded (masked) example reaches the kernels
+# as an all-zero gy row (core/algo.py seeds backprop with masked loss
+# cotangents), so kernel outputs must be exact zeros there and must match
+# ref.py on the batch with the masked rows physically removed.
+# ---------------------------------------------------------------------------
+
+MASK_SWEEP = [(4, 16, 8, 12), (6, 33, 20, 16), (5, 130, 64, 48)]
+
+
+def _masked_rows(key, B):
+    m = jax.random.bernoulli(jax.random.fold_in(key, 99), 0.6, (B,))
+    return m.at[0].set(True)                 # keep >= 1 real row
+
+
+@pytest.mark.parametrize("shape", MASK_SWEEP)
+def test_pegrad_norm_masked_rows_match_compacted(shape, key):
+    B, T, di, do = shape
+    x = _rand(key, (B, T, di), jnp.float32)
+    gy = _rand(jax.random.fold_in(key, 1), (B, T, do), jnp.float32)
+    m = _masked_rows(key, B)
+    gym = gy * m[:, None, None]              # what masked backprop produces
+    got = pegrad_norm(x, gym, interpret=True)
+    # masked rows: EXACT zeros (0-valued gy rows annihilate every product)
+    np.testing.assert_array_equal(np.asarray(got)[~np.asarray(m)], 0.0)
+    # real rows: identical to ref.py on the compacted batch
+    keep = np.asarray(m)
+    want = ref.pegrad_norm_ref(x[keep], gy[keep])
+    np.testing.assert_allclose(np.asarray(got)[keep], want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", MASK_SWEEP)
+def test_gram_norm_masked_rows_match_compacted(shape, key):
+    B, T, di, do = shape
+    x = _rand(key, (B, T, di), jnp.float32)
+    gy = _rand(jax.random.fold_in(key, 1), (B, T, do), jnp.float32)
+    m = _masked_rows(key, B)
+    gym = gy * m[:, None, None]
+    got = gram_norm(x, gym, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got)[~np.asarray(m)], 0.0)
+    keep = np.asarray(m)
+    want = ref.gram_norm_ref(x[keep], gy[keep])
+    np.testing.assert_allclose(np.asarray(got)[keep], want, rtol=1e-4)
+
+
+def test_gram_norm_embed_rule_masked_rows(key):
+    """The square=False embedding path under a masked row: zero gy -> zero
+    norm, real rows match the compacted id-masked reference."""
+    B, T, d = 4, 40, 16
+    ids = jax.random.randint(key, (B, T), 0, 7)
+    gy = _rand(jax.random.fold_in(key, 1), (B, T, d), jnp.float32)
+    m = _masked_rows(key, B)
+    gym = gy * m[:, None, None]
+    got = gram_norm(gym, gym, ids, interpret=True, square=False)
+    np.testing.assert_array_equal(np.asarray(got)[~np.asarray(m)], 0.0)
+    keep = np.asarray(m)
+    want = ref.gram_norm_ref(gy[keep], gy[keep], ids[keep], square=False)
+    np.testing.assert_allclose(np.asarray(got)[keep], want, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,N", [(6, 128), (5, 1000)])
+def test_clip_reduce_masked_rows_match_compacted(B, N, key):
+    """clip_reduce with zeroed clip factors == the compacted reduction
+    (how algo.py's masked clip factors reach the kernel path)."""
+    g = _rand(key, (B, N), jnp.float32)
+    c = jax.random.uniform(jax.random.fold_in(key, 1), (B,))
+    m = _masked_rows(key, B)
+    cm = c * m
+    got = clip_reduce(g, cm, interpret=True)
+    keep = np.asarray(m)
+    want = ref.clip_reduce_ref(g[keep], c[keep])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_kernel_backed_side_channel_masked_equals_compacted(key):
+    """End-to-end: DPConfig.use_kernels=True with a masked batch produces
+    the same per-example norms² as the kernel path on the compacted batch
+    (zeros at padded rows)."""
+    from helpers import make_batch, tiny_model
+    from repro.configs.base import DPConfig
+    from repro.core.algo import make_clipped_sum_fn
+    arch, model = tiny_model("phi3-mini-3.8b")
+    params = model.init(key)
+    batch = make_batch(arch, key, B=4, T=16)
+    mask = np.array([True, False, True, True])
+    dp = DPConfig(algo="dpsgd_r1f", clip_norm=0.05, use_kernels=True)
+    fn = make_clipped_sum_fn(model.loss_fn, dp)
+    _, (_, nsq_m) = fn(params, dict(batch, mask=jnp.asarray(mask)))
+    _, (_, nsq_c) = fn(params, {k: v[mask] for k, v in batch.items()})
+    nsq_m = np.asarray(nsq_m)
+    np.testing.assert_array_equal(nsq_m[~mask], 0.0)
+    np.testing.assert_allclose(nsq_m[mask], np.asarray(nsq_c), rtol=1e-4)
