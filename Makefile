@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dp test-multidevice bench-smoke bench-serve dryrun-smoke
+.PHONY: test test-fast test-dp test-sites test-multidevice bench-smoke bench-serve dryrun-smoke
 
 # tier-1 verify: the gate for every change
 test:
@@ -18,6 +18,14 @@ test-dp:
 	$(PY) -m pytest -x -q -m "not slow" \
 	    tests/test_dp_core.py tests/test_dp_properties.py \
 	    tests/test_accountant.py
+
+# the extension-surface gate: the pluggable site/algo registries
+# (third-party registration, error surfaces, shim equivalence) and the
+# registry-backed CNN workload (conv2d/bias rules, three-algo identity
+# under Poisson masks, trainer e2e)
+test-sites:
+	$(PY) -m pytest -x -q -m "not slow" \
+	    tests/test_sites_registry.py tests/test_cnn.py
 
 # fast tier (~4 min vs ~7 for full): skips the interpret-mode Pallas
 # kernel sweeps and the jamba-398b heavies (@pytest.mark.slow); this is

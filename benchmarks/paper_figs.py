@@ -182,6 +182,42 @@ def fig4_memory_model():
     return rows
 
 
+def fig_norm_rule_crossover():
+    """Beyond-paper: the Book-Keeping crossover (ghost/gram norm vs
+    materialize), read from the private-site registry's *own* FLOP formulas
+    (repro.core.sites) — so the figure covers conv2d (CNN) sites exactly as
+    it covers dense ones, and any newly registered site kind joins for
+    free.  ``auto`` marks which exact rule the side-channel actually picks
+    at each shape."""
+    from repro.core import sites
+    B = 64
+    rows = []
+    for d in (512, 4096):
+        for T in (16, 64, 256, 1024, 4096):
+            ops, gy = ((B, T, d),), (B, T, d)
+            fm = sites.site_flops("dense", "materialize", ops, gy)
+            fg = sites.site_flops("dense", "gram", ops, gy)
+            auto = sites.resolve_strategy("dense", "auto", ops, gy)
+            rows.append((f"crossover/dense/d{d}/T{T}", 0.0,
+                         f"materialize={fm:.3e};gram={fg:.3e};auto={auto}"))
+        rows.append((f"crossover/dense/d{d}/T_star", 0.0,
+                     f"analytic={d * d / (d + d):.0f}"))
+    conv_cases = (("cifar_stem", 32, 3, 3, 16),
+                  ("cifar_mid", 16, 3, 32, 32),
+                  ("imagenet_mid", 28, 3, 256, 256),
+                  ("imagenet_late", 7, 3, 512, 512))
+    for name, s, k, cin, cout in conv_cases:
+        ops = ((B, s, s, cin), (k, k, cin, cout))
+        gy = (B, s, s, cout)
+        fm = sites.site_flops("conv2d", "materialize", ops, gy)
+        fg = sites.site_flops("conv2d", "gram", ops, gy)
+        auto = sites.resolve_strategy("conv2d", "auto", ops, gy)
+        rows.append((f"crossover/conv2d/{name}", 0.0,
+                     f"materialize={fm:.3e};gram={fg:.3e};auto={auto}"))
+    return rows
+
+
 ALL = [fig4_memory_model, fig5_dp_slowdown, fig7_fig15_utilization,
        fig13_end_to_end_speedup, fig13_nonprivate_sgd,
-       fig14_latency_breakdown, fig16_energy, table1_sram_bandwidth]
+       fig14_latency_breakdown, fig16_energy, table1_sram_bandwidth,
+       fig_norm_rule_crossover]

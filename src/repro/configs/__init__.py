@@ -4,10 +4,11 @@ from __future__ import annotations
 from dataclasses import replace
 from typing import Dict, List
 
-from repro.configs.base import (ATTN, MAMBA, ArchConfig, DPConfig, MambaConfig,
-                                MeshConfig, MoEConfig, OptimConfig, SHAPES,
-                                ShapeConfig, TrainConfig, apply_overrides,
-                                parse_set_args, shape_applicable)
+from repro.configs.base import (ATTN, MAMBA, ArchConfig, CNNConfig, DPConfig,
+                                MambaConfig, MeshConfig, MoEConfig,
+                                OptimConfig, SHAPES, ShapeConfig, TrainConfig,
+                                apply_overrides, parse_set_args,
+                                shape_applicable)
 
 from repro.configs.phi3_mini_3_8b import ARCH as _phi3
 from repro.configs.stablelm_3b import ARCH as _stablelm
@@ -19,11 +20,12 @@ from repro.configs.chameleon_34b import ARCH as _chameleon
 from repro.configs.grok_1_314b import ARCH as _grok1
 from repro.configs.deepseek_moe_16b import ARCH as _dsmoe
 from repro.configs.jamba_1_5_large_398b import ARCH as _jamba
+from repro.configs.cnn_cifar10 import ARCH as _cnn_cifar10
 
 ARCHS: Dict[str, ArchConfig] = {
     a.name: a
     for a in (_phi3, _stablelm, _starcoder2, _chatglm3, _musicgen,
-              _mamba2, _chameleon, _grok1, _dsmoe, _jamba)
+              _mamba2, _chameleon, _grok1, _dsmoe, _jamba, _cnn_cifar10)
 }
 
 
@@ -40,7 +42,18 @@ def list_archs() -> List[str]:
 def reduced(arch: ArchConfig) -> ArchConfig:
     """Tiny same-family variant for CPU smoke tests: same layer pattern /
     feature set, small dims. Preserves GQA ratio, MoE topology, hybrid
-    interleave (one pattern period)."""
+    interleave (one pattern period); CNNs keep the stage structure at
+    small channel counts / image size."""
+    if arch.family == "cnn":
+        return replace(
+            arch,
+            name=arch.name + "-reduced",
+            cnn=replace(arch.cnn, image_size=8,
+                        stage_channels=tuple(
+                            8 * (i + 1) for i in
+                            range(min(len(arch.cnn.stage_channels), 2))),
+                        blocks_per_stage=1),
+        )
     n_layers = len(arch.layer_pattern) if arch.layer_pattern else 2
     n_heads = 4 if arch.n_heads else 0
     ratio = max(arch.n_heads // max(arch.n_kv_heads, 1), 1) if arch.n_heads else 1
@@ -72,6 +85,6 @@ def reduced(arch: ArchConfig) -> ArchConfig:
 __all__ = [
     "ARCHS", "get_arch", "list_archs", "reduced", "shape_applicable",
     "ArchConfig", "ShapeConfig", "MeshConfig", "DPConfig", "TrainConfig",
-    "OptimConfig", "MoEConfig", "MambaConfig", "SHAPES", "ATTN", "MAMBA",
-    "apply_overrides", "parse_set_args",
+    "OptimConfig", "MoEConfig", "MambaConfig", "CNNConfig", "SHAPES",
+    "ATTN", "MAMBA", "apply_overrides", "parse_set_args",
 ]

@@ -40,6 +40,20 @@ class MoEConfig:
 
 
 @dataclass(frozen=True)
+class CNNConfig:
+    """ResNet-style CNN workload (family="cnn") — the paper characterizes
+    DP-SGD on CNNs; models/cnn.py implements this family over the conv2d /
+    bias / dense / tap sites of the private-site registry.  Normalization
+    is per-example (tapped RMS scale), never BatchNorm: batch statistics
+    couple examples and break per-example gradient semantics under DP."""
+    image_size: int = 32
+    in_channels: int = 3
+    stage_channels: Tuple[int, ...] = (16, 32, 64)   # one entry per stage
+    blocks_per_stage: int = 2                        # residual blocks/stage
+    kernel: int = 3
+
+
+@dataclass(frozen=True)
 class MambaConfig:
     d_state: int = 128
     d_conv: int = 4
@@ -58,7 +72,7 @@ class MambaConfig:
 @dataclass(frozen=True)
 class ArchConfig:
     name: str
-    family: str                     # dense | ssm | moe | hybrid | audio | vlm
+    family: str             # dense | ssm | moe | hybrid | audio | vlm | cnn
     n_layers: int
     d_model: int
     n_heads: int                    # query heads (0 for attn-free)
@@ -77,6 +91,7 @@ class ArchConfig:
     layer_pattern: Optional[Tuple[str, ...]] = None
     moe: MoEConfig = field(default_factory=MoEConfig)
     mamba: MambaConfig = field(default_factory=MambaConfig)
+    cnn: CNNConfig = field(default_factory=CNNConfig)  # family == "cnn" only
     # modality frontend stub: inputs are precomputed embeddings, not token ids
     embed_stub: bool = False
     # memory plan: shard params/opt-state over data axis too (FSDP/ZeRO-3-lite)
@@ -110,20 +125,30 @@ class ArchConfig:
 
     def param_count(self) -> int:
         """Total parameter count (exact, matches init)."""
-        from repro.models.transformer import abstract_params  # lazy, avoids cycle
         import jax
+        if self.family == "cnn":
+            from repro.models.cnn import abstract_params  # lazy, avoids cycle
+        else:
+            from repro.models.transformer import abstract_params
         tree = abstract_params(self)
         return sum(_size(p.shape) for p in jax.tree.leaves(tree))
 
     def active_param_count(self) -> int:
-        """Active (per-token) params: MoE counts top_k + shared experts only."""
+        """Active (per-token) params: MoE counts top_k + shared experts only.
+
+        The per-expert size is derived from the actual expert param spec
+        (models/moe.py ``moe_spec``), not a hardcoded swiglu formula — a
+        ``mlp_act="gelu"`` MoE has 2 expert matrices, not 3."""
         total = self.param_count()
         if not self.moe.enabled:
             return total
         # subtract inactive routed experts
+        from repro.models.moe import moe_spec   # lazy, avoids cycle
         m = self.moe
         n_moe_layers = sum(self.is_moe_layer(i) for i in range(self.n_layers))
-        per_expert = 3 * self.d_model * m.d_expert  # swiglu w1,w3,w2
+        per_expert = sum(_size(p.shape) // m.num_experts
+                         for k, p in moe_spec(self).items()
+                         if k.startswith("we"))
         inactive = n_moe_layers * (m.num_experts - m.top_k) * per_expert
         return total - inactive
 
@@ -159,6 +184,8 @@ LONG_OK_FAMILIES = ("ssm", "hybrid")
 
 
 def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> bool:
+    if arch.family == "cnn":
+        return shape.kind == "train"   # CNNs neither prefill nor decode
     if shape.name == "long_500k":
         return arch.family in LONG_OK_FAMILIES
     return True
@@ -185,7 +212,18 @@ class MeshConfig:
 class DPConfig:
     """DP-SGD configuration (the single place these knobs are documented).
 
-    ``algo`` — which gradient transformation core/algo.py builds:
+    Registry vocabulary: the DP core is organized around two registries.
+    A **site** (``repro.core.sites``) is a parameterized op whose
+    per-example grad norm the side-channel observes — built-ins are
+    ``dense | moe_dense | embed | tap | conv2d | bias``; each registers
+    its own **norm rules** (named strategies), optional fused **kernel
+    routes**, and **FLOP formulas**.  An **algo**
+    (``repro.core.algo.register_algo``) is a clipped-sum gradient
+    transformation reachable by name through ``algo`` below.  Both are
+    extended by one ``register_*`` call — no core edits.
+
+    ``algo`` — which registered gradient transformation core/algo.py
+    builds (``repro.core.list_algos()`` enumerates).  Built-ins:
       * ``"sgd"``       non-private baseline (mean-loss gradient);
       * ``"dpsgd"``     vanilla DP-SGD: vmap per-example grads, explicit
                         norm/clip/reduce (Algorithm 1 lines 15-25);
@@ -208,14 +246,17 @@ class DPConfig:
                       is exact for this scheme, and the noisy sum is
                       normalized by the *expected* batch size q·N.
 
-    ``norm_strategy`` — per-example-norm rule for the side-channel algos
-    (core/norms.py): ``"materialize"`` (outer-product GEMM reduced on the
-    fly), ``"gram"`` (ghost norm, never forms the weight-shaped object), or
-    ``"auto"`` (picks the cheaper exact rule per call site).
+    ``norm_strategy`` — per-example-norm rule name, resolved *per site*
+    against that site's registered rules: ``"materialize"`` (outer-product
+    GEMM reduced on the fly), ``"gram"`` (ghost norm, never forms the
+    weight-shaped object), or ``"auto"`` (each site picks its cheapest
+    exact rule by its own registered FLOP formulas — the Book-Keeping
+    trick).  Single-rule sites (embed/tap/bias) ignore the setting; an
+    unknown name raises, listing the site's registered strategies.
 
-    ``use_kernels`` — route the norm rules through the fused Pallas kernels
-    (kernels/pegrad_norm.py, kernels/gram_norm.py) instead of the chunked
-    XLA fallbacks; interpret-mode on CPU, Mosaic on TPU.
+    ``use_kernels`` — take each site's registered fused-Pallas kernel
+    route (kernels/pegrad_norm.py, kernels/gram_norm.py) instead of the
+    chunked XLA rules; interpret-mode on CPU, Mosaic on TPU.
     """
     enabled: bool = True
     algo: str = "dpsgd_r"          # sgd | dpsgd | dpsgd_r | dpsgd_r1f
@@ -285,23 +326,75 @@ def _coerce(old: Any, s: str) -> Any:
     return s
 
 
+def _coerce_to_type(tp: Any, s: str, key: str) -> Any:
+    """Coerce ``s`` via a *declared* field type — the path for fields whose
+    current value is ``None`` (value-based ``_coerce`` would silently hand
+    back the raw string, mistyping e.g. ``Optional[Tuple[str, ...]]``)."""
+    import typing
+    origin = typing.get_origin(tp)
+    if origin is typing.Union:                       # Optional[X] / Union
+        if s.lower() in ("none", "null"):
+            return None
+        for arg in typing.get_args(tp):
+            if arg is type(None):
+                continue
+            return _coerce_to_type(arg, s, key)
+    if origin is tuple:
+        args = typing.get_args(tp)
+        elt = args[0] if args else str
+        parts = [p for p in s.strip("()").split(",") if p]
+        return tuple(_coerce_to_type(elt, p.strip(), key) for p in parts)
+    if tp is bool:
+        return s.lower() in ("1", "true", "yes")
+    if tp in (int, float, str):
+        return tp(s)
+    raise ValueError(
+        f"cannot coerce override {key}={s!r}: field is currently None and "
+        f"its declared type {tp!r} is not a supported override type "
+        f"(bool/int/float/str/tuple/Optional thereof)")
+
+
+def _field_type(cfg: Any, name: str) -> Any:
+    import typing
+    try:
+        return typing.get_type_hints(type(cfg))[name]
+    except Exception:
+        return None
+
+
+def _is_optional(tp: Any) -> bool:
+    import typing
+    return (typing.get_origin(tp) is typing.Union
+            and type(None) in typing.get_args(tp))
+
+
 def apply_overrides(cfg: Any, overrides: Dict[str, str]) -> Any:
     """Apply {'dp.clip_norm': '0.5', 'optim.lr': '3e-4'} style overrides to a
     (possibly nested) frozen dataclass."""
     for key, val in overrides.items():
         parts = key.split(".")
-        cfg = _apply_one(cfg, parts, val)
+        cfg = _apply_one(cfg, parts, val, key)
     return cfg
 
 
-def _apply_one(cfg: Any, parts, val: str) -> Any:
+def _apply_one(cfg: Any, parts, val: str, key: str = "") -> Any:
     name = parts[0]
+    key = key or ".".join(parts)
     if not dataclasses.is_dataclass(cfg) or not hasattr(cfg, name):
-        raise KeyError(f"unknown config key {'.'.join(parts)} on {type(cfg).__name__}")
+        raise KeyError(f"unknown config key {key} on {type(cfg).__name__}")
     cur = getattr(cfg, name)
     if len(parts) == 1:
+        if val.lower() in ("none", "null") and _is_optional(_field_type(cfg, name)):
+            return replace(cfg, **{name: None})
+        if cur is None:
+            tp = _field_type(cfg, name)
+            if tp is None:
+                raise ValueError(
+                    f"cannot coerce override {key}={val!r}: current value "
+                    f"is None and the declared field type is unresolvable")
+            return replace(cfg, **{name: _coerce_to_type(tp, val, key)})
         return replace(cfg, **{name: _coerce(cur, val)})
-    return replace(cfg, **{name: _apply_one(cur, parts[1:], val)})
+    return replace(cfg, **{name: _apply_one(cur, parts[1:], val, key)})
 
 
 def parse_set_args(pairs) -> Dict[str, str]:

@@ -1,13 +1,20 @@
 """DP-SGD core: the paper's contribution as a composable JAX module."""
 from repro.core.accountant import PrivacyAccountant, compute_epsilon
-from repro.core.algo import make_clipped_sum_fn, make_noisy_grad_fn
+from repro.core.algo import (list_algos, make_clipped_sum_fn,
+                             make_noisy_grad_fn, register_algo,
+                             unregister_algo)
 from repro.core.clipping import clip_and_sum, clip_factors, tree_per_example_norm_sq
 from repro.core.context import DPContext
 from repro.core.noise import add_noise
+from repro.core.sites import (SiteSpec, get_site, list_sites,
+                              list_strategies, register_site, site_flops,
+                              unregister_site)
 
 __all__ = [
     "PrivacyAccountant", "compute_epsilon", "make_noisy_grad_fn",
-    "make_clipped_sum_fn",
+    "make_clipped_sum_fn", "register_algo", "unregister_algo", "list_algos",
     "clip_and_sum", "clip_factors", "tree_per_example_norm_sq",
     "DPContext", "add_noise",
+    "SiteSpec", "register_site", "unregister_site", "get_site",
+    "list_sites", "list_strategies", "site_flops",
 ]

@@ -221,16 +221,63 @@ def _dpsgd_r1f_sum(loss_fn, dp: DPConfig):
     return fn
 
 
+# ---------------------------------------------------------------------------
+# algorithm registry (mirrors the site registry in core/sites.py)
+# ---------------------------------------------------------------------------
+
+_ALGOS: dict = {}
+
+
+def register_algo(name: str, builder: Callable, *,
+                  private: bool = True, overwrite: bool = False) -> None:
+    """Register a clipped-sum algorithm.
+
+    ``builder(loss_fn, dp) -> fn(params, batch) -> (summed, (losses, nsq))``
+    — the per-microbatch clipped-sum kernel (see the builtins above for the
+    exact contract).  ``private=False`` marks the algorithm as adding no
+    noise (``make_noisy_grad_fn`` then mean-normalizes instead).  Adding a
+    DP algorithm is one call here, not an if-chain edit.
+    """
+    if name in _ALGOS and not overwrite:
+        raise ValueError(f"dp.algo {name!r} already registered "
+                         f"(registered algos: {sorted(_ALGOS)}); "
+                         f"pass overwrite=True to replace it")
+    _ALGOS[name] = (builder, bool(private))
+
+
+def unregister_algo(name: str) -> None:
+    _ALGOS.pop(name, None)
+
+
+def list_algos() -> list:
+    return sorted(_ALGOS)
+
+
+def algo_is_private(name: str, enabled: bool = True) -> bool:
+    if not enabled:
+        return False
+    _lookup_algo(name)
+    return _ALGOS[name][1]
+
+
+def _lookup_algo(name: str):
+    try:
+        return _ALGOS[name][0]
+    except KeyError:
+        raise ValueError(f"unknown dp.algo {name!r}; registered algos: "
+                         f"{sorted(_ALGOS)}") from None
+
+
+register_algo("sgd", lambda loss_fn, dp: _sgd_sum(loss_fn), private=False)
+register_algo("dpsgd", _dpsgd_sum)
+register_algo("dpsgd_r", _dpsgd_r_sum)
+register_algo("dpsgd_r1f", _dpsgd_r1f_sum)
+
+
 def make_clipped_sum_fn(loss_fn: Callable, dp: DPConfig) -> Callable:
-    if dp.algo == "sgd" or not dp.enabled:
+    if not dp.enabled:
         return _sgd_sum(loss_fn)
-    if dp.algo == "dpsgd":
-        return _dpsgd_sum(loss_fn, dp)
-    if dp.algo == "dpsgd_r":
-        return _dpsgd_r_sum(loss_fn, dp)
-    if dp.algo == "dpsgd_r1f":
-        return _dpsgd_r1f_sum(loss_fn, dp)
-    raise ValueError(f"unknown dp.algo {dp.algo!r}")
+    return _lookup_algo(dp.algo)(loss_fn, dp)
 
 
 # ---------------------------------------------------------------------------
@@ -249,7 +296,7 @@ def make_noisy_grad_fn(loss_fn: Callable, dp: DPConfig,
     the lot size, NOT the realized sample size.
     """
     csum = make_clipped_sum_fn(loss_fn, dp)
-    private = dp.enabled and dp.algo != "sgd"
+    private = algo_is_private(dp.algo, dp.enabled)
 
     def fn(params, batch, key):
         _, mask = split_mask(batch)

@@ -1,13 +1,21 @@
 """DPContext — the functional norm side-channel used by DP-SGD(R)'s 1st pass.
 
 A ``(B,)`` float32 accumulator is threaded through every parameterized site
-in the model.  Each site is a ``jax.custom_vjp`` whose forward is the plain
-op (identity on the accumulator) and whose backward *adds the site's
-per-example squared-grad-norm to the accumulator's cotangent*.  Pulling back
-``(1.0, 0)`` through ``(Σᵢ Lᵢ, acc_out)`` therefore yields per-example
-squared gradient norms in ``acc0``'s cotangent — DP-SGD(R) line 31–33 of the
-paper's Algorithm 1, with zero per-example-gradient materialization in HBM
-(DiVa's PPU fusion, expressed functionally).
+in the model.  Each site is routed through the generic ``sites.site_call``
+``jax.custom_vjp`` whose forward is the plain op (identity on the
+accumulator) and whose backward *adds the site's per-example squared-grad-
+norm to the accumulator's cotangent*.  Pulling back ``(1.0, 0)`` through
+``(Σᵢ Lᵢ, acc_out)`` therefore yields per-example squared gradient norms in
+``acc0``'s cotangent — DP-SGD(R) line 31–33 of the paper's Algorithm 1,
+with zero per-example-gradient materialization in HBM (DiVa's PPU fusion,
+expressed functionally).
+
+Which site kinds exist — and which norm rules, kernel routes and FLOP
+formulas each carries — is the business of the pluggable registry in
+``repro.core.sites``.  ``ctx.site(kind, *operands)`` is the single generic
+entry point; ``ctx.dense`` / ``ctx.moe_dense`` / ``ctx.embed`` / ``ctx.tap``
+/ ``ctx.conv2d`` / ``ctx.bias`` are thin shims over it.  Adding a layer
+type is one ``sites.register_site(...)`` call, not an edit to this file.
 
 Because the 1st pass's parameter cotangents are *discarded* by the caller,
 JAX/XLA dead-code-eliminates the summed weight-gradient GEMMs, so the norm
@@ -20,107 +28,18 @@ SGD, DP-SGD(R) pass 2, and inference.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import norms
+from repro.core import sites
+from repro.core.sites import SiteSpec  # re-export (historical import path)
 
 F32 = jnp.float32
 
+__all__ = ["DPContext", "SiteSpec"]
 
-@dataclasses.dataclass(frozen=True)
-class SiteSpec:
-    """Static per-site config (hashable; passed via nondiff_argnums)."""
-    kind: str                   # dense | moe_dense | embed | tap
-    strategy: str = "auto"
-    use_kernels: bool = False
-
-
-# ---------------------------------------------------------------------------
-# custom_vjp sites
-# ---------------------------------------------------------------------------
-
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _dense_site(spec: SiteSpec, x, w, acc):
-    return _dense_fwd_op(spec, x, w), acc
-
-
-def _dense_fwd_op(spec, x, w):
-    if spec.kind == "moe_dense":
-        return jnp.einsum("beci,eio->beco", x, w)
-    return jnp.einsum("...i,io->...o", x, w)
-
-
-def _dense_site_fwd(spec, x, w, acc):
-    return _dense_site(spec, x, w, acc), (x, w)
-
-
-def _dense_site_bwd(spec, res, cots):
-    x, w = res
-    gy, gacc = cots
-    if spec.kind == "moe_dense":
-        gx = jnp.einsum("beco,eio->beci", gy, w).astype(x.dtype)
-        gw = jnp.einsum("beci,beco->eio", x, gy).astype(w.dtype)
-    else:
-        gx = jnp.einsum("...o,io->...i", gy, w).astype(x.dtype)
-        gw = jnp.einsum("...i,...o->io", x, gy).astype(w.dtype)
-    nsq = norms.dense_nsq(x, gy, spec.strategy, spec.use_kernels)
-    return gx, gw, gacc + nsq
-
-
-_dense_site.defvjp(_dense_site_fwd, _dense_site_bwd)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _embed_site(spec: SiteSpec, ids, table, acc):
-    return jnp.take(table, ids, axis=0), acc
-
-
-def _embed_site_fwd(spec, ids, table, acc):
-    return _embed_site(spec, ids, table, acc), (ids, table)
-
-
-def _embed_site_bwd(spec, res, cots):
-    ids, table = res
-    gy, gacc = cots
-    flat_ids = ids.reshape(-1)
-    gt = jnp.zeros(table.shape, dtype=gy.dtype).at[flat_ids].add(
-        gy.reshape(-1, table.shape[-1])).astype(table.dtype)
-    nsq = norms.embed_nsq(ids, gy, spec.use_kernels)
-    return None, gt, gacc + nsq
-
-
-_embed_site.defvjp(_embed_site_fwd, _embed_site_bwd)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _tap_site(nexp: int, batch: int, p, acc):
-    """Broadcast p -> (B, 1*nexp, *p.shape); per-example grads fall out in bwd."""
-    shape = (batch,) + (1,) * nexp + p.shape
-    return jnp.broadcast_to(p, (batch,) + p.shape).reshape(shape), acc
-
-
-def _tap_site_fwd(nexp, batch, p, acc):
-    return _tap_site(nexp, batch, p, acc), p
-
-
-def _tap_site_bwd(nexp, batch, res, cots):
-    p = res
-    gpb, gacc = cots
-    gpb = gpb.reshape((batch,) + p.shape)
-    nsq = norms.tap_nsq(gpb)
-    return jnp.sum(gpb, axis=0).astype(p.dtype), gacc + nsq
-
-
-_tap_site.defvjp(_tap_site_fwd, _tap_site_bwd)
-
-
-# ---------------------------------------------------------------------------
-# DPContext
-# ---------------------------------------------------------------------------
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -129,6 +48,8 @@ class DPContext:
 
     ``acc`` is a pytree child; ``mode``/``strategy``/``use_kernels`` are
     static.  ``mode``: "off" (plain ops) or "norm" (per-example norm pass).
+    ``strategy`` names a norm rule resolved per site against the registry
+    ("auto" picks each site's cheapest by its own FLOP formulas).
     """
     acc: Optional[jax.Array] = None
     mode: str = dataclasses.field(default="off", metadata=dict(static=True))
@@ -146,39 +67,56 @@ class DPContext:
         return DPContext(acc=jnp.zeros((batch,), F32), mode="norm",
                          strategy=strategy, use_kernels=use_kernels)
 
-    def _spec(self, kind: str) -> SiteSpec:
+    def _spec(self, kind: str, meta: tuple = ()) -> SiteSpec:
         return SiteSpec(kind=kind, strategy=self.strategy,
-                        use_kernels=self.use_kernels)
+                        use_kernels=self.use_kernels, meta=tuple(meta))
 
     def _with(self, acc) -> "DPContext":
         return dataclasses.replace(self, acc=acc)
 
-    # -- sites -----------------------------------------------------------
+    # -- the generic entry point -----------------------------------------
+    def site(self, kind: str, *operands,
+             meta: tuple = ()) -> Tuple[jax.Array, "DPContext"]:
+        """Run registered site ``kind`` on ``operands``.
+
+        In ``off`` mode this is the site's plain forward; in ``norm`` mode
+        the call is routed through the registry's ``site_call`` custom_vjp
+        so the backward pass adds the site's per-example grad-norm² to the
+        accumulator.  ``meta`` carries static per-call extras the site
+        declares (see ``sites.SiteSpec.meta``)."""
+        spec = self._spec(kind, meta)
+        site = sites.get_site(kind)        # raises with registered kinds
+        if self.mode == "off":
+            return site.fwd(spec, *operands), self
+        y, acc = sites.site_call(spec, self.acc, *operands)
+        return y, self._with(acc)
+
+    # -- shims (kept for the existing model code; one-liners only) -------
     def dense(self, x, w) -> Tuple[jax.Array, "DPContext"]:
         """y = x @ w, w: (d_in, d_out), x: (..., d_in) with batch dim 0."""
-        if self.mode == "off":
-            return jnp.einsum("...i,io->...o", x, w), self
-        y, acc = _dense_site(self._spec("dense"), x, w, self.acc)
-        return y, self._with(acc)
+        return self.site("dense", x, w)
 
     def moe_dense(self, x, w) -> Tuple[jax.Array, "DPContext"]:
         """y = einsum('beci,eio->beco'); per-(b,e) groups are single-example."""
-        if self.mode == "off":
-            return jnp.einsum("beci,eio->beco", x, w), self
-        y, acc = _dense_site(self._spec("moe_dense"), x, w, self.acc)
-        return y, self._with(acc)
+        return self.site("moe_dense", x, w)
 
     def embed(self, ids, table) -> Tuple[jax.Array, "DPContext"]:
-        if self.mode == "off":
-            return jnp.take(table, ids, axis=0), self
-        y, acc = _embed_site(self._spec("embed"), ids, table, self.acc)
-        return y, self._with(acc)
+        return self.site("embed", ids, table)
 
     def tap(self, p, nexp: int, batch: int) -> Tuple[jax.Array, "DPContext"]:
         """Tap a small param: in norm mode returns (B, 1*nexp, *p.shape) so
         downstream broadcasting yields exact per-example grads in bwd; in off
         mode returns p unchanged (same broadcast semantics)."""
         if self.mode == "off":
-            return p, self
-        pb, acc = _tap_site(nexp, batch, p, self.acc)
-        return pb, self._with(acc)
+            return p, self       # no broadcast in off mode (historical)
+        return self.site("tap", p, meta=(nexp, batch))
+
+    def conv2d(self, x, w, stride: int = 1,
+               padding: str = "SAME") -> Tuple[jax.Array, "DPContext"]:
+        """y = conv2d(x, w) in NHWC/HWIO layout; x: (B, H, W, Cin),
+        w: (kh, kw, Cin, Cout)."""
+        return self.site("conv2d", x, w, meta=(stride, padding))
+
+    def bias(self, x, b) -> Tuple[jax.Array, "DPContext"]:
+        """y = x + b, b: (d,) broadcast over every leading dim of x."""
+        return self.site("bias", x, b)

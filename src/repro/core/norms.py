@@ -70,7 +70,7 @@ def flops_gram(xs, gys) -> int:
 
 
 def pick_strategy(strategy: str, x_shape, gy_shape) -> str:
-    """Resolve ``auto`` to the cheaper exact rule for this site (the
+    """Resolve ``auto`` to the cheaper exact rule for a *dense* site (the
     Book-Keeping trick; docs/ARCHITECTURE.md §Norm-rule selection).
 
     ``gram`` wins iff ``T² · (d_in + d_out) < T · d_in · d_out``, i.e.
@@ -80,12 +80,14 @@ def pick_strategy(strategy: str, x_shape, gy_shape) -> str:
     the expert capacity C ≪ d_expert) pick ``gram``; long-sequence sites
     against narrow weights (T=4096 vs d≈2–8k) pick ``materialize``.  Both
     are exact — the choice only affects cost, never the computed norm.
+
+    This is the dense instance of the generic, registry-driven resolution:
+    ``repro.core.sites.resolve_strategy`` reads each site kind's *own* FLOP
+    formulas, so non-dense sites (conv2d, custom registrations) make the
+    same trade-off against their own cost model.
     """
-    if strategy != "auto":
-        return strategy
-    return ("materialize"
-            if flops_materialize(x_shape, gy_shape) <= flops_gram(x_shape, gy_shape)
-            else "gram")
+    from repro.core import sites   # lazy: sites imports this module
+    return sites.resolve_strategy("dense", strategy, (x_shape,), gy_shape)
 
 
 def _divisor_chunk(dim: int, budget_rows: int) -> int:
@@ -147,22 +149,17 @@ def dense_nsq(x: jax.Array, gy: jax.Array, strategy: str = "auto",
               use_kernels: bool = False) -> jax.Array:
     """Per-example squared grad norms of a dense site ``y = x @ w``.
 
-    ``strategy``: "materialize" | "gram" | "auto" (``pick_strategy`` picks
-    the cheaper exact rule from the FLOP formulas above).  ``use_kernels``
-    routes to the fused Pallas kernels (kernels/pegrad_norm.py — DiVa's
-    outer-product engine + adder-tree PPU — and kernels/gram_norm.py)
-    instead of the chunked-XLA fallbacks.
+    A convenience wrapper over the registry dispatch for the ``"dense"``
+    site kind: ``strategy`` is resolved against the site's registered rules
+    ("auto" picks the cheaper exact rule from its FLOP formulas), and
+    ``use_kernels`` takes the site's fused-Pallas kernel route
+    (kernels/pegrad_norm.py — DiVa's outer-product engine + adder-tree PPU —
+    and kernels/gram_norm.py) instead of the chunked-XLA rules below.
     """
-    x4, gy4 = canon4(x), canon4(gy)
-    strat = pick_strategy(strategy, x4.shape, gy4.shape)
-    if use_kernels:
-        from repro.kernels import ops as kops
-        if strat == "materialize":
-            return kops.pegrad_norm(x4, gy4)
-        return kops.gram_norm(x4, gy4)
-    if strat == "materialize":
-        return dense_nsq_materialize(x4, gy4)
-    return dense_nsq_gram(x4, gy4)
+    from repro.core import sites   # lazy: sites imports this module
+    spec = sites.SiteSpec(kind="dense", strategy=strategy,
+                          use_kernels=use_kernels)
+    return sites.site_nsq(spec, (x,), gy)
 
 
 # ---------------------------------------------------------------------------
@@ -207,4 +204,13 @@ def _embed_nsq_sorted(ids: jax.Array, gy: jax.Array) -> jax.Array:
 def tap_nsq(gp_b: jax.Array) -> jax.Array:
     """(B, *param_shape) per-example grads -> (B,) squared norms."""
     g = gp_b.astype(F32)
+    return jnp.sum(g * g, axis=tuple(range(1, g.ndim)))
+
+
+def bias_nsq(gy: jax.Array) -> jax.Array:
+    """Bias-site rule for ``y = x + b``, b: (d,) broadcast over all leading
+    dims: the per-example bias grad is Σ over every non-batch, non-channel
+    position of gy, so n² = Σ_d (Σ_t gy[b, ..., d])² — exact, O(B·T·d),
+    and exactly zero for all-zero (masked) gy rows."""
+    g = jnp.sum(gy.astype(F32), axis=tuple(range(1, gy.ndim - 1)))
     return jnp.sum(g * g, axis=tuple(range(1, g.ndim)))

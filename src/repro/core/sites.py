@@ -1,0 +1,525 @@
+"""Pluggable private-site registry — the extension point of the DP core.
+
+DiVa's contribution is fusing per-example gradient-norm computation into
+backprop for *arbitrary layer types*.  This module is that claim as an API:
+a **site** is any parameterized op whose per-example weight-gradient norm
+the DP-SGD(R) side-channel must observe, described by one self-contained
+registry entry instead of if-chains spread across context/norms/kernels/
+costs::
+
+    register_site("conv2d",
+                  fwd=...,                                   # the plain op
+                  nsq_rules={"materialize": ..., "gram": ...},  # exact rules
+                  kernel_route={...},     # optional fused Pallas variants
+                  flops={...},            # per-rule cost formulas
+                  bwd=...)                # optional custom backward
+
+``DPContext.site(kind, *operands)`` (core/context.py) then routes through
+the generic ``site_call`` custom_vjp below: forward is the plain op
+(identity on the ``(B,)`` norm accumulator), backward adds the site's
+per-example squared-grad-norm to the accumulator's cotangent.
+
+Contracts every entry must satisfy (tests/test_sites_registry.py):
+
+* **Exactness** — each rule in ``nsq_rules`` returns the exact squared L2
+  norm of the per-example gradient of the site's *parameters* as a ``(B,)``
+  float32 array (``rule(spec, operands, gy) -> (B,)``).
+* **Masked-batch invariant** — a rule must map an all-zero ``gy`` row to an
+  *exactly*-zero norm².  core/algo.py seeds padded Poisson rows with zero
+  loss cotangents, so this is what makes masked batches equal compacted
+  ones; any rule that is a sum of products each containing a ``gy`` factor
+  satisfies it for free.
+* **Strategy selection** — when a site has several rules, ``"auto"`` picks
+  the cheapest by the entry's own ``flops`` formulas (the paper's
+  Book-Keeping trick, generalized beyond the dense einsum shape).  The
+  formulas are also what launch/costs.py and benchmarks/paper_figs.py read
+  for analytic norm-rule accounting.
+
+Built-in sites: ``dense`` / ``moe_dense`` / ``embed`` / ``tap`` (the
+transformer stack) plus ``conv2d`` (im2col materialize + spatial ghost
+norm) and ``bias`` — the CNN workload of models/cnn.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import norms
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Spec & registry entry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SiteSpec:
+    """Static per-site-call config (hashable; passed via nondiff_argnums).
+
+    ``meta`` carries per-call static extras a site's callbacks may need
+    (e.g. ``tap``'s ``(nexp, batch)``, ``conv2d``'s ``(stride, padding)``).
+    """
+    kind: str
+    strategy: str = "auto"
+    use_kernels: bool = False
+    meta: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteDef:
+    """One registered site type.  See module docstring for the contracts.
+
+    ``fwd(spec, *operands) -> y`` — the plain op.
+    ``nsq_rules[name](spec, operands, gy) -> (B,) f32`` — exact norm rules.
+    ``bwd(spec, operands, gy) -> operand cotangents`` — optional; ``None``
+      autodiffs ``fwd`` (``nondiff_operands`` get a ``None`` cotangent).
+    ``kernel_route[name]`` — fused-kernel variant of the same-named rule,
+      used when ``SiteSpec.use_kernels`` (falls back to ``nsq_rules``).
+    ``flops[name](operand_shapes, gy_shape) -> float`` — analytic FLOPs of
+      the same-named rule; drives ``"auto"`` strategy resolution and the
+      cost/benchmark tooling.
+    """
+    kind: str
+    fwd: Callable
+    nsq_rules: Mapping[str, Callable]
+    bwd: Optional[Callable] = None
+    kernel_route: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
+    flops: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
+    nondiff_operands: Tuple[int, ...] = ()
+
+
+_REGISTRY: Dict[str, SiteDef] = {}
+_ALIASES = ("auto",)   # strategy names that are never literal rule names
+
+
+def register_site(kind: str, *, fwd: Callable,
+                  nsq_rules: Mapping[str, Callable],
+                  bwd: Optional[Callable] = None,
+                  kernel_route: Optional[Mapping[str, Callable]] = None,
+                  flops: Optional[Mapping[str, Callable]] = None,
+                  nondiff_operands: Sequence[int] = (),
+                  overwrite: bool = False) -> SiteDef:
+    """Register a site type.  Third-party callers (models, tests, plugins)
+    use exactly this entry point — the builtins below claim no special
+    machinery.  Returns the ``SiteDef`` for introspection."""
+    if not nsq_rules:
+        raise ValueError(f"site {kind!r} needs at least one nsq rule")
+    for bad in set(nsq_rules) & set(_ALIASES):
+        raise ValueError(f"site {kind!r}: {bad!r} is a reserved strategy name")
+    if kind in _REGISTRY and not overwrite:
+        raise ValueError(f"site kind {kind!r} already registered "
+                         f"(registered kinds: {sorted(_REGISTRY)}); "
+                         f"pass overwrite=True to replace it")
+    site = SiteDef(kind=kind, fwd=fwd, nsq_rules=dict(nsq_rules), bwd=bwd,
+                   kernel_route=dict(kernel_route or {}),
+                   flops=dict(flops or {}),
+                   nondiff_operands=tuple(nondiff_operands))
+    for field_name, mapping in (("kernel_route", site.kernel_route),
+                                ("flops", site.flops)):
+        unknown = set(mapping) - set(site.nsq_rules)
+        if unknown:
+            raise ValueError(
+                f"site {kind!r}: {field_name} names {sorted(unknown)} have "
+                f"no matching nsq rule {sorted(site.nsq_rules)}")
+    _REGISTRY[kind] = site
+    return site
+
+
+def unregister_site(kind: str) -> None:
+    """Remove a registration (tests / plugin teardown)."""
+    _REGISTRY.pop(kind, None)
+
+
+def get_site(kind: str) -> SiteDef:
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        raise KeyError(f"unknown site kind {kind!r}; registered site kinds: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_sites() -> list:
+    return sorted(_REGISTRY)
+
+
+def list_strategies(kind: str) -> list:
+    return sorted(get_site(kind).nsq_rules)
+
+
+# ---------------------------------------------------------------------------
+# Strategy resolution (generalized Book-Keeping trick)
+# ---------------------------------------------------------------------------
+
+def resolve_strategy(kind: str, strategy: str, operand_shapes, gy_shape) -> str:
+    """Resolve a strategy name to a registered rule of ``kind``.
+
+    ``"auto"`` picks the cheapest rule by the site's own ``flops`` formulas;
+    a named strategy must exist for the site *unless* the site has a single
+    rule (the context-wide strategy setting then simply doesn't apply —
+    e.g. ``embed``/``tap`` under ``strategy="gram"``)."""
+    site = get_site(kind)
+    rules = site.nsq_rules
+    if strategy in rules:
+        return strategy
+    if len(rules) == 1:
+        return next(iter(rules))
+    if strategy == "auto":
+        best, best_cost = None, None
+        for name in rules:             # ties -> first-registered rule
+            if name not in site.flops:
+                continue
+            cost = site.flops[name](operand_shapes, gy_shape)
+            if best is None or cost < best_cost:
+                best, best_cost = name, cost
+        return best if best is not None else next(iter(rules))
+    raise ValueError(
+        f"unknown norm strategy {strategy!r} for site {kind!r}; "
+        f"registered strategies: {sorted(rules)} (or 'auto')")
+
+
+def site_flops(kind: str, strategy: str, operand_shapes, gy_shape) -> float:
+    """Analytic FLOPs of ``kind``'s ``strategy`` rule at these shapes
+    (resolving ``"auto"`` first).  Raises if the site declares no formula."""
+    site = get_site(kind)
+    strat = resolve_strategy(kind, strategy, operand_shapes, gy_shape)
+    try:
+        fn = site.flops[strat]
+    except KeyError:
+        raise KeyError(f"site {kind!r} declares no FLOP formula for rule "
+                       f"{strat!r}; declared: {sorted(site.flops)}") from None
+    return fn(operand_shapes, gy_shape)
+
+
+def site_nsq(spec: SiteSpec, operands, gy) -> jax.Array:
+    """Dispatch to the site's (resolved, possibly kernel-backed) norm rule."""
+    site = get_site(spec.kind)
+    shapes = tuple(getattr(o, "shape", ()) for o in operands)
+    strat = resolve_strategy(spec.kind, spec.strategy, shapes, gy.shape)
+    if spec.use_kernels and strat in site.kernel_route:
+        return site.kernel_route[strat](spec, operands, gy)
+    return site.nsq_rules[strat](spec, operands, gy)
+
+
+# ---------------------------------------------------------------------------
+# The generic custom_vjp site
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def site_call(spec: SiteSpec, acc, *operands):
+    """y, acc = site_call(spec, acc, *operands) — fwd is the plain op,
+    identity on the accumulator; bwd adds the per-example norm² to the
+    accumulator's cotangent (DiVa's PPU fusion, functionally)."""
+    return get_site(spec.kind).fwd(spec, *operands), acc
+
+
+def _site_call_fwd(spec, acc, *operands):
+    return site_call(spec, acc, *operands), operands
+
+
+def _site_call_bwd(spec, operands, cots):
+    gy, gacc = cots
+    grads = _operand_grads(get_site(spec.kind), spec, operands, gy)
+    nsq = site_nsq(spec, operands, gy)
+    return (gacc + nsq,) + tuple(grads)
+
+
+site_call.defvjp(_site_call_fwd, _site_call_bwd)
+
+
+def _operand_grads(site: SiteDef, spec: SiteSpec, operands, gy):
+    """Operand cotangents: the site's explicit ``bwd`` if given, else
+    autodiff of ``fwd`` over the differentiable operands."""
+    if site.bwd is not None:
+        return site.bwd(spec, operands, gy)
+    diff = [i for i in range(len(operands)) if i not in site.nondiff_operands]
+
+    def f(*diff_ops):
+        ops = list(operands)
+        for i, v in zip(diff, diff_ops):
+            ops[i] = v
+        return site.fwd(spec, *ops)
+
+    _, pull = jax.vjp(f, *(operands[i] for i in diff))
+    gdiff = pull(gy)
+    grads: list = [None] * len(operands)
+    for i, g in zip(diff, gdiff):
+        grads[i] = g.astype(operands[i].dtype)
+    return tuple(grads)
+
+
+# ---------------------------------------------------------------------------
+# Built-in sites: dense / moe_dense / embed / tap
+# ---------------------------------------------------------------------------
+
+def _canon4_shape(shape):
+    """Shape-level twin of norms.canon4: pad to (B, G, T, d)."""
+    if len(shape) == 2:
+        b, d = shape
+        return (b, 1, 1, d)
+    if len(shape) == 3:
+        b, t, d = shape
+        return (b, 1, t, d)
+    if len(shape) == 4:
+        return tuple(shape)
+    raise ValueError(f"dense site operand must be 2/3/4-D, got {shape}")
+
+
+def _dense_fwd(spec, x, w):
+    return jnp.einsum("...i,io->...o", x, w)
+
+
+def _dense_bwd(spec, operands, gy):
+    x, w = operands
+    gx = jnp.einsum("...o,io->...i", gy, w).astype(x.dtype)
+    gw = jnp.einsum("...i,...o->io", x, gy).astype(w.dtype)
+    return gx, gw
+
+
+def _moe_dense_fwd(spec, x, w):
+    return jnp.einsum("beci,eio->beco", x, w)
+
+
+def _moe_dense_bwd(spec, operands, gy):
+    x, w = operands
+    gx = jnp.einsum("beco,eio->beci", gy, w).astype(x.dtype)
+    gw = jnp.einsum("beci,beco->eio", x, gy).astype(w.dtype)
+    return gx, gw
+
+
+def _dense_rule_materialize(spec, operands, gy):
+    return norms.dense_nsq_materialize(norms.canon4(operands[0]),
+                                       norms.canon4(gy))
+
+
+def _dense_rule_gram(spec, operands, gy):
+    return norms.dense_nsq_gram(norms.canon4(operands[0]), norms.canon4(gy))
+
+
+def _dense_kernel_materialize(spec, operands, gy):
+    from repro.kernels import ops as kops
+    return kops.pegrad_norm(norms.canon4(operands[0]), norms.canon4(gy))
+
+
+def _dense_kernel_gram(spec, operands, gy):
+    from repro.kernels import ops as kops
+    return kops.gram_norm(norms.canon4(operands[0]), norms.canon4(gy))
+
+
+def _dense_flops_materialize(operand_shapes, gy_shape):
+    return norms.flops_materialize(_canon4_shape(operand_shapes[0]),
+                                   _canon4_shape(gy_shape))
+
+
+def _dense_flops_gram(operand_shapes, gy_shape):
+    return norms.flops_gram(_canon4_shape(operand_shapes[0]),
+                            _canon4_shape(gy_shape))
+
+
+_DENSE_RULES = dict(materialize=_dense_rule_materialize,
+                    gram=_dense_rule_gram)
+_DENSE_KERNELS = dict(materialize=_dense_kernel_materialize,
+                      gram=_dense_kernel_gram)
+_DENSE_FLOPS = dict(materialize=_dense_flops_materialize,
+                    gram=_dense_flops_gram)
+
+register_site("dense", fwd=_dense_fwd, bwd=_dense_bwd,
+              nsq_rules=_DENSE_RULES, kernel_route=_DENSE_KERNELS,
+              flops=_DENSE_FLOPS)
+register_site("moe_dense", fwd=_moe_dense_fwd, bwd=_moe_dense_bwd,
+              nsq_rules=_DENSE_RULES, kernel_route=_DENSE_KERNELS,
+              flops=_DENSE_FLOPS)
+
+
+def _embed_fwd(spec, ids, table):
+    return jnp.take(table, ids, axis=0)
+
+
+def _embed_bwd(spec, operands, gy):
+    ids, table = operands
+    flat_ids = ids.reshape(-1)
+    gt = jnp.zeros(table.shape, dtype=gy.dtype).at[flat_ids].add(
+        gy.reshape(-1, table.shape[-1])).astype(table.dtype)
+    return None, gt
+
+
+def _embed_rule(spec, operands, gy):
+    return norms.embed_nsq(operands[0], gy, use_kernels=False)
+
+
+def _embed_kernel_rule(spec, operands, gy):
+    return norms.embed_nsq(operands[0], gy, use_kernels=True)
+
+
+def _embed_flops(operand_shapes, gy_shape):
+    # sort+segment-sum: O(B·T·d) adds (+ the O(B·T·logT) sort, omitted)
+    b, t, d = gy_shape
+    return 2 * b * t * d
+
+
+register_site("embed", fwd=_embed_fwd, bwd=_embed_bwd,
+              nsq_rules={"segment_sum": _embed_rule},
+              kernel_route={"segment_sum": _embed_kernel_rule},
+              flops={"segment_sum": _embed_flops},
+              nondiff_operands=(0,))
+
+
+def _tap_fwd(spec, p):
+    nexp, batch = spec.meta
+    shape = (batch,) + (1,) * nexp + p.shape
+    return jnp.broadcast_to(p, (batch,) + p.shape).reshape(shape)
+
+
+def _tap_bwd(spec, operands, gy):
+    (p,) = operands
+    nexp, batch = spec.meta
+    gpb = gy.reshape((batch,) + p.shape)
+    return (jnp.sum(gpb, axis=0).astype(p.dtype),)
+
+
+def _tap_rule(spec, operands, gy):
+    (p,) = operands
+    nexp, batch = spec.meta
+    return norms.tap_nsq(gy.reshape((batch,) + p.shape))
+
+
+def _tap_flops(operand_shapes, gy_shape):
+    n = 1
+    for s in gy_shape:
+        n *= int(s)
+    return 2 * n
+
+
+register_site("tap", fwd=_tap_fwd, bwd=_tap_bwd,
+              nsq_rules={"direct": _tap_rule},
+              flops={"direct": _tap_flops})
+
+
+# ---------------------------------------------------------------------------
+# conv2d: im2col materialize + ghost norm over spatial positions
+# ---------------------------------------------------------------------------
+#
+# y = conv2d(x, w), x: (B, H, W, Cin), w: (kh, kw, Cin, Cout) [NHWC/HWIO].
+# The per-example weight gradient is gw_b = patchesᵀ_b @ gy_b with
+# patches = im2col(x): (B, P, kh·kw·Cin) and gy flattened to (B, P, Cout),
+# P the number of output positions — i.e. *exactly a dense site* with
+# T = P, d_in = kh·kw·Cin, d_out = Cout.  Both dense rules (and both dense
+# Pallas kernels) therefore apply verbatim to the patch tensors, and the
+# masked-batch invariant is inherited (zero gy rows annihilate).
+
+_CONV_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv_meta(spec):
+    stride, padding = spec.meta if spec.meta else (1, "SAME")
+    s = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    return s, padding
+
+
+def _conv2d_fwd(spec, x, w):
+    s, padding = _conv_meta(spec)
+    return jax.lax.conv_general_dilated(x, w, window_strides=s,
+                                        padding=padding,
+                                        dimension_numbers=_CONV_DN)
+
+
+def _conv_patches(spec, x, w):
+    """(B, H', W', kh·kw·Cin) im2col patches matching ``_conv2d_fwd``'s
+    output positions.  Feature ordering is irrelevant: both norm rules are
+    invariant to permutations of the contraction axis."""
+    s, padding = _conv_meta(spec)
+    kh, kw = w.shape[0], w.shape[1]
+    return jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(kh, kw), window_strides=s, padding=padding,
+        dimension_numbers=_CONV_DN)
+
+
+def _conv_pair4(spec, operands, gy):
+    x, w = operands[0], operands[1]
+    pat = _conv_patches(spec, x, w)
+    B = x.shape[0]
+    x4 = pat.reshape(B, 1, -1, pat.shape[-1])
+    gy4 = gy.reshape(B, 1, -1, gy.shape[-1])
+    return x4, gy4
+
+
+def _conv_rule_materialize(spec, operands, gy):
+    return norms.dense_nsq_materialize(*_conv_pair4(spec, operands, gy))
+
+
+def _conv_rule_gram(spec, operands, gy):
+    return norms.dense_nsq_gram(*_conv_pair4(spec, operands, gy))
+
+
+def _conv_kernel_materialize(spec, operands, gy):
+    from repro.kernels import ops as kops
+    return kops.pegrad_norm(*_conv_pair4(spec, operands, gy))
+
+
+def _conv_kernel_gram(spec, operands, gy):
+    from repro.kernels import ops as kops
+    return kops.gram_norm(*_conv_pair4(spec, operands, gy))
+
+
+def conv_norm_dims(operand_shapes, gy_shape):
+    """(B, P, d_in, d_out) of the conv site's implied dense problem."""
+    x_shape, w_shape = operand_shapes[0], operand_shapes[1]
+    b = x_shape[0]
+    p = 1
+    for s in gy_shape[1:-1]:
+        p *= int(s)
+    d_in = int(w_shape[0]) * int(w_shape[1]) * int(w_shape[2])
+    return b, p, d_in, int(gy_shape[-1])
+
+
+def _conv_flops_materialize(operand_shapes, gy_shape):
+    b, p, d_in, d_out = conv_norm_dims(operand_shapes, gy_shape)
+    return norms.flops_materialize((b, 1, p, d_in), (b, 1, p, d_out))
+
+
+def _conv_flops_gram(operand_shapes, gy_shape):
+    b, p, d_in, d_out = conv_norm_dims(operand_shapes, gy_shape)
+    return norms.flops_gram((b, 1, p, d_in), (b, 1, p, d_out))
+
+
+register_site("conv2d", fwd=_conv2d_fwd,
+              nsq_rules={"materialize": _conv_rule_materialize,
+                         "gram": _conv_rule_gram},
+              kernel_route={"materialize": _conv_kernel_materialize,
+                            "gram": _conv_kernel_gram},
+              flops={"materialize": _conv_flops_materialize,
+                     "gram": _conv_flops_gram})
+
+
+# ---------------------------------------------------------------------------
+# bias: y = x + b, b broadcast over every non-channel dim
+# ---------------------------------------------------------------------------
+
+def _bias_fwd(spec, x, b):
+    return x + b.astype(x.dtype)
+
+
+def _bias_bwd(spec, operands, gy):
+    x, b = operands
+    gb = jnp.sum(gy, axis=tuple(range(gy.ndim - 1))).astype(b.dtype)
+    return gy.astype(x.dtype), gb
+
+
+def _bias_rule(spec, operands, gy):
+    return norms.bias_nsq(gy)
+
+
+def _bias_flops(operand_shapes, gy_shape):
+    n = 1
+    for s in gy_shape:
+        n *= int(s)
+    return 2 * n
+
+
+register_site("bias", fwd=_bias_fwd, bwd=_bias_bwd,
+              nsq_rules={"direct": _bias_rule},
+              flops={"direct": _bias_flops})

@@ -96,6 +96,39 @@ class SyntheticSource:
             return {"embeds": emb, "labels": out_tok[:, 1:]}
         return {"tokens": out_tok}
 
+    # -- image stream (family="cnn"; same (seed, step/index) keying) ------
+    def _image_example(self, step: int, stream: int, size: int,
+                       channels: int, n_classes: int):
+        gi = _rng(self.seed, step, stream)
+        label = np.int32(gi.integers(0, n_classes))
+        img = gi.standard_normal((size, size, channels)).astype(np.float32)
+        return img, label
+
+    def image_batch(self, step: int, n: int, size: int, channels: int,
+                    n_classes: int, shard: int = 0,
+                    n_shards: int = 1) -> Dict[str, np.ndarray]:
+        assert n % n_shards == 0
+        per = n // n_shards
+        lo = shard * per
+        imgs = np.empty((per, size, size, channels), np.float32)
+        labels = np.empty((per,), np.int32)
+        for i in range(per):
+            imgs[i], labels[i] = self._image_example(step, lo + i + 1, size,
+                                                     channels, n_classes)
+        return {"images": imgs, "labels": labels}
+
+    def image_examples(self, indices: np.ndarray, size: int, channels: int,
+                       n_classes: int) -> Dict[str, np.ndarray]:
+        """Index-keyed image content (Poisson sampling): example i is the
+        same (image, label) in every step that samples it."""
+        k = len(indices)
+        imgs = np.empty((k, size, size, channels), np.float32)
+        labels = np.empty((k,), np.int32)
+        for row, idx in enumerate(indices):
+            imgs[row], labels[row] = self._image_example(
+                _EXAMPLE_STREAM_STEP, int(idx) + 1, size, channels, n_classes)
+        return {"images": imgs, "labels": labels}
+
 
 @dataclasses.dataclass(frozen=True)
 class MemmapSource:
@@ -152,9 +185,23 @@ def make_source(spec: str, vocab: int, seed: int = 0):
 def batch_for(source, arch: ArchConfig, shape: ShapeConfig, step: int,
               shard: int = 0, n_shards: int = 1) -> Dict[str, np.ndarray]:
     """Materialize this shard's slice of the global batch for (arch, shape)."""
+    if arch.family == "cnn":
+        c = arch.cnn
+        return _image_source(source, arch).image_batch(
+            step, shape.global_batch, c.image_size, c.in_channels,
+            arch.vocab, shard, n_shards)
     embed_dim = arch.d_model if arch.embed_stub else 0
     return source.batch(step, shape.global_batch, shape.seq_len,
                         shard, n_shards, embed_dim)
+
+
+def _image_source(source, arch: ArchConfig):
+    if not hasattr(source, "image_batch"):
+        raise ValueError(
+            f"data source {type(source).__name__} provides tokens only; "
+            f"family={arch.family!r} needs an image-capable source "
+            f"(data_source='synthetic')")
+    return source
 
 
 # ---------------------------------------------------------------------------
@@ -218,8 +265,13 @@ def poisson_batch_for(source, arch: ArchConfig, shape: ShapeConfig, step: int,
             f"the priced Poisson mechanism this step)", RuntimeWarning)
         idx = idx[:cap]
     mine = idx[lo:lo + per]                      # this shard's real rows
-    embed_dim = arch.d_model if arch.embed_stub else 0
-    ex = source.examples(mine, shape.seq_len, embed_dim)
+    if arch.family == "cnn":
+        c = arch.cnn
+        ex = _image_source(source, arch).image_examples(
+            mine, c.image_size, c.in_channels, arch.vocab)
+    else:
+        embed_dim = arch.d_model if arch.embed_stub else 0
+        ex = source.examples(mine, shape.seq_len, embed_dim)
 
     out: Dict[str, np.ndarray] = {}
     for k, v in ex.items():

@@ -3,7 +3,14 @@
 ``INTERPRET`` defaults to True because this container is CPU-only; on a
 real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or the
 REPRO_PALLAS_INTERPRET=0 env var) and the same kernels compile to Mosaic.
-The DP core routes through these via ``DPConfig.use_kernels``.
+
+The DP core reaches these through the site registry: each site kind's
+``kernel_route`` (core/sites.py) maps its named norm strategies onto these
+wrappers — dense/moe_dense route ``materialize -> pegrad_norm`` and
+``gram -> gram_norm``, conv2d routes its im2col patch tensors through the
+same two kernels, embed routes to the id-masked ``gram_norm`` — selected
+at trace time by ``DPConfig.use_kernels``.  New sites pick kernels by
+registering a route, not by editing this file.
 
 Poisson-masked batches (core/algo.py): padded examples arrive as all-zero
 ``gy`` rows, which every kernel annihilates to an exact-zero norm² /

@@ -88,11 +88,34 @@ def _dot_cost(eqn, mult: float, acc: Costs) -> None:
                              + _aval_bytes(out))
 
 
+def _conv_cost(eqn, mult: float, acc: Costs) -> None:
+    """conv_general_dilated: 2 · out_elems · (kernel_spatial · C_in/group)
+    MAC-pair FLOPs — the contraction size is every rhs dim except the
+    output-feature one.  Without this the CNN cells (conv2d sites,
+    models/cnn.py) would be mis-counted as 1-flop/element elementwise."""
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    out = eqn.outvars[0].aval
+    dn = eqn.params["dimension_numbers"]
+    out_f = dn.rhs_spec[0]          # (out_feat, in_feat, *spatial)
+    k = 1
+    for i, d in enumerate(rhs.shape):
+        if i != out_f:
+            k *= int(d)
+    flops = 2.0 * _aval_elems(out) * k * mult
+    dt = str(jax.numpy.promote_types(lhs.dtype, rhs.dtype))
+    acc.dot_flops[dt] = acc.dot_flops.get(dt, 0.0) + flops
+    acc.dot_bytes += mult * (_aval_bytes(lhs) + _aval_bytes(rhs)
+                             + _aval_bytes(out))
+
+
 def _walk(jaxpr, mult: float, acc: Costs) -> None:
     for eqn in jaxpr.eqns:
         name = eqn.primitive.name
         if name == "dot_general":
             _dot_cost(eqn, mult, acc)
+            continue
+        if name == "conv_general_dilated":
+            _conv_cost(eqn, mult, acc)
             continue
         if name == "scan":
             length = eqn.params["length"]
@@ -188,6 +211,32 @@ def jaxpr_costs(fn, *abstract_args) -> dict:
     d = acc.as_dict()
     d["io_bytes"] = float(io_bytes)
     return d
+
+
+# ---------------------------------------------------------------------------
+# registry-backed norm-rule accounting (core/sites.py FLOP formulas)
+# ---------------------------------------------------------------------------
+
+def norm_rule_summary(site_shapes) -> list:
+    """Per-site-kind norm-rule cost table, straight from the registry.
+
+    ``site_shapes``: iterable of ``(label, kind, operand_shapes, gy_shape)``.
+    For each entry, every rule the site registered is costed with the
+    site's *own* FLOP formulas and the ``"auto"`` winner is resolved —
+    the Book-Keeping trick as a reusable lookup (dryrun artifacts,
+    benchmarks/paper_figs.py crossover figure)."""
+    from repro.core import sites
+    rows = []
+    for label, kind, op_shapes, gy_shape in site_shapes:
+        site = sites.get_site(kind)
+        per = {name: float(fn(op_shapes, gy_shape))
+               for name, fn in site.flops.items()}
+        rows.append({"label": label, "kind": kind,
+                     "gy_shape": [int(s) for s in gy_shape],
+                     "rule_flops": per,
+                     "auto": sites.resolve_strategy(kind, "auto", op_shapes,
+                                                    gy_shape)})
+    return rows
 
 
 # ---------------------------------------------------------------------------

@@ -45,7 +45,7 @@ from repro.launch.costs import hlo_collective_bytes, jaxpr_costs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (collective_bytes, model_flops,
                                    roofline_terms)
-from repro.models.transformer import build_model
+from repro.models import build_model_for
 from repro.optim import make_optimizer
 from repro.train.state import TrainState
 
@@ -59,6 +59,13 @@ DEFAULT_OUT = "results/dryrun"
 def input_specs(arch, shape):
     """Abstract model inputs for a given cell."""
     B, T = shape.global_batch, shape.seq_len
+    if arch.family == "cnn":
+        assert shape.kind == "train", (arch.name, shape.name)
+        c = arch.cnn
+        return {"images": jax.ShapeDtypeStruct(
+                    (B, c.image_size, c.image_size, c.in_channels),
+                    jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((B,), jnp.int32)}
     if shape.kind in ("train", "prefill"):
         if arch.embed_stub:
             batch = {"embeds": jax.ShapeDtypeStruct((B, T, arch.d_model),
@@ -79,6 +86,40 @@ def input_specs(arch, shape):
 
 def _abstract_cache(model, B, S):
     return jax.eval_shape(lambda: model.init_cache(B, S))
+
+
+def cell_norm_rules(arch, shape) -> list:
+    """Representative per-site norm-rule cost table for a train cell, read
+    straight from the site registry's own FLOP formulas (costs.py
+    ``norm_rule_summary``) — which exact rule the Book-Keeping trick picks
+    at this cell's shapes, per site kind."""
+    B, T = shape.global_batch, shape.seq_len
+    rows = []
+    if arch.family == "cnn":
+        from repro.models.cnn import iter_conv_sites
+        rows = [(label, "conv2d", op_shapes, gy_shape)
+                for label, op_shapes, gy_shape in iter_conv_sites(arch, B)]
+        rows.append(("head", "dense", ((B, arch.cnn.stage_channels[-1]),),
+                     (B, arch.vocab)))
+    else:
+        d = arch.d_model
+        if not arch.embed_stub:
+            rows.append(("embed", "embed", ((B, T), (arch.vocab, d)),
+                         (B, T, d)))
+        if arch.n_heads:
+            rows.append(("attn_q", "dense", ((B, T, d),),
+                         (B, T, arch.n_heads * arch.hd)))
+        if arch.d_ff > 0:
+            rows.append(("mlp_w1", "dense", ((B, T, d),),
+                         (B, T, arch.ff_dense())))
+        if arch.moe.enabled:
+            from repro.models.moe import capacity
+            C = capacity(arch.moe, T)
+            rows.append(("moe_we1", "moe_dense",
+                         ((B, arch.moe.num_experts, C, d),),
+                         (B, arch.moe.num_experts, C, arch.moe.d_expert)))
+    from repro.launch.costs import norm_rule_summary
+    return norm_rule_summary(rows)
 
 
 def make_grad_accum(arch, shape, mesh) -> int:
@@ -109,7 +150,7 @@ def build_cell(arch_name: str, shape_name: str, mesh, dp_algo: str = "dpsgd_r",
     flag leaks into serving); hillclimbed runs pass False (§Perf C1)."""
     arch = get_arch(arch_name)
     shape = SHAPES[shape_name]
-    model = build_model(arch)
+    model = build_model_for(arch)
     batch_abs = input_specs(arch, shape)
 
     if shape.kind == "train":
@@ -198,6 +239,8 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
                                                 dp_algo, norm_strategy,
                                                 serve_fsdp)
             rec.update(extra)
+            if shape.kind == "train":
+                rec["norm_rules"] = cell_norm_rules(arch, shape)
             analytic = jaxpr_costs(fn, *args)     # global, scan-aware
             lowered = fn.lower(*args)
             t1 = time.time()

@@ -97,7 +97,13 @@ def roofline_terms(flops: Optional[float], bytes_accessed: Optional[float],
 
 
 def model_flops(arch, shape, active_params: int) -> float:
-    """6·N·D for training (fwd+bwd); 2·N·D for inference passes."""
+    """6·N·D for training (fwd+bwd); 2·N·D for inference passes.
+    CNNs (weight sharing: FLOPs ≠ params·positions) are summed per conv
+    site instead: train = 3 × fwd (fwd + dgrad + wgrad)."""
+    if arch.family == "cnn":
+        per_ex = _cnn_fwd_flops_per_example(arch)
+        mult = 3.0 if shape.kind == "train" else 1.0
+        return mult * per_ex * shape.global_batch
     if shape.kind == "train":
         tokens = shape.global_batch * shape.seq_len
         return 6.0 * active_params * tokens
@@ -106,3 +112,16 @@ def model_flops(arch, shape, active_params: int) -> float:
         return 2.0 * active_params * tokens
     tokens = shape.global_batch          # one new token per example
     return 2.0 * active_params * tokens
+
+
+def _cnn_fwd_flops_per_example(arch) -> float:
+    """2·P·k²·cin·cout summed over every conv2d site, walked by the model's
+    own ``iter_conv_sites`` (single source of truth for the structure)."""
+    from repro.models.cnn import iter_conv_sites
+    total = 0.0
+    for _, op_shapes, gy_shape in iter_conv_sites(arch, batch=1):
+        w = op_shapes[1]
+        p = gy_shape[1] * gy_shape[2]
+        total += 2.0 * p * w[0] * w[1] * w[2] * w[3]
+    total += 2.0 * arch.cnn.stage_channels[-1] * arch.vocab      # head
+    return total

@@ -30,7 +30,7 @@ from repro.configs.base import ShapeConfig, TrainConfig
 from repro.dist import batch_shardings, runtime, state_shardings
 from repro.dist.sharding import batch_axis_width, batch_pspec
 from repro.launch.mesh import make_host_mesh, make_mesh
-from repro.models.transformer import build_model
+from repro.models import build_model_for
 from repro.train import Trainer
 
 
@@ -75,8 +75,8 @@ def main() -> None:
         cfg = replace(cfg, steps=args.steps,
                       optim=replace(cfg.optim, total_steps=args.steps))
 
-    model = build_model(arch, param_dtype=cfg.param_dtype,
-                        compute_dtype=cfg.compute_dtype, remat=cfg.remat)
+    model = build_model_for(arch, param_dtype=cfg.param_dtype,
+                            compute_dtype=cfg.compute_dtype, remat=cfg.remat)
 
     if args.mesh:
         mesh = make_mesh([int(s) for s in args.mesh.split(",")],

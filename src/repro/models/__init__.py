@@ -1,5 +1,17 @@
-"""Model zoo: composable pure-JAX layers + the 10 assigned architectures."""
+"""Model zoo: composable pure-JAX layers + the assigned architectures."""
 from repro.models.transformer import (Model, abstract_params, build_model,
                                       logical_axes)
 
-__all__ = ["Model", "build_model", "abstract_params", "logical_axes"]
+
+def build_model_for(arch, **kwargs):
+    """Family-dispatching model factory: transformer families go through
+    ``build_model``; ``family="cnn"`` builds the registry-backed CNN
+    (models/cnn.py).  Launchers use this so new families need no edits."""
+    if arch.family == "cnn":
+        from repro.models.cnn import build_cnn
+        return build_cnn(arch, **kwargs)
+    return build_model(arch, **kwargs)
+
+
+__all__ = ["Model", "build_model", "build_model_for", "abstract_params",
+           "logical_axes"]

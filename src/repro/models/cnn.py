@@ -1,0 +1,229 @@
+"""ResNet-style CNN workload (ArchConfig family ``"cnn"``).
+
+The paper characterizes DP-SGD on CNN workloads; this module gives the
+repo its first DiVa-faithful CNN scenario, built *entirely* on the
+private-site registry (core/sites.py): every parameterized op is a
+``conv2d`` / ``bias`` / ``dense`` / ``tap`` site, so the DP-SGD(R) norm
+side-channel, all three private algorithms, Poisson-masked batches, and
+the kernel routes work unchanged — no CNN-specific code in the DP core.
+
+Architecture (pre-activation residual stages, ``ArchConfig.cnn``):
+
+    stem conv k×k (in_channels → stage_channels[0]) + bias
+    per stage s: blocks_per_stage × [norm → conv → bias → norm → conv →
+      bias + skip]; the first block of stage s>0 downsamples (stride 2)
+      with a 1×1 projection on the skip
+    head: norm → global average pool → dense → bias → (B, n_classes)
+
+Normalization is per-example channel RMSNorm with a tapped scale — never
+BatchNorm, whose batch statistics couple examples and break per-example
+gradient semantics under DP.  ``ArchConfig.vocab`` doubles as the class
+count, so the existing config plumbing (sources, accountant, overrides)
+needs no new field.
+
+Batch contract: ``{"images": (B, S, S, C) float, "labels": (B,) int32}``
+(+ optional ``"mask"`` threaded by core/algo.py as for every workload).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import replace as dc_replace
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.context import DPContext
+from repro.models import layers as L
+from repro.models.layers import P
+from repro.models.transformer import _map_spec, path_key
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Param spec
+# ---------------------------------------------------------------------------
+
+def _conv_p(k: int, cin: int, cout: int) -> P:
+    return P((k, k, cin, cout), (None, None, None, None))
+
+
+def _block_spec(k: int, cin: int, cout: int, downsample: bool) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {
+        "ln1": P((cin,), (None,), "ones"),
+        "w1": _conv_p(k, cin, cout),
+        "b1": P((cout,), (None,), "zeros"),
+        "ln2": P((cout,), (None,), "ones"),
+        "w2": _conv_p(k, cout, cout),
+        "b2": P((cout,), (None,), "zeros"),
+    }
+    if downsample or cin != cout:
+        spec["proj"] = _conv_p(1, cin, cout)
+    return spec
+
+
+def model_spec(arch: ArchConfig) -> Dict[str, Any]:
+    c = arch.cnn
+    k = c.kernel
+    spec: Dict[str, Any] = {
+        "stem": {"w": _conv_p(k, c.in_channels, c.stage_channels[0]),
+                 "b": P((c.stage_channels[0],), (None,), "zeros")},
+        "stages": [],
+    }
+    cin = c.stage_channels[0]
+    for s, cout in enumerate(c.stage_channels):
+        blocks = []
+        for b in range(c.blocks_per_stage):
+            down = s > 0 and b == 0
+            blocks.append(_block_spec(k, cin, cout, down))
+            cin = cout
+        spec["stages"].append(blocks)
+    spec["final_norm"] = P((cin,), (None,), "ones")
+    spec["head"] = {"w": P((cin, arch.vocab), ("embed", "vocab")),
+                    "b": P((arch.vocab,), (None,), "zeros")}
+    return spec
+
+
+def iter_conv_sites(arch: ArchConfig, batch: int = 1):
+    """Yield ``(label, operand_shapes, gy_shape)`` for every conv2d site of
+    the model at the given batch size — the single source of truth for the
+    cost tooling (launch/roofline.py, launch/dryrun.py ``cell_norm_rules``),
+    mirroring ``model_spec``/``_forward`` exactly (SAME padding; stride-2
+    conv1 + 1×1 projection on the first block of stages > 0)."""
+    c = arch.cnn
+    s, k = c.image_size, c.kernel
+    cin = c.in_channels
+    c0 = c.stage_channels[0]
+    yield "stem", ((batch, s, s, cin), (k, k, cin, c0)), (batch, s, s, c0)
+    cin = c0
+    for si, cout in enumerate(c.stage_channels):
+        for b in range(c.blocks_per_stage):
+            down = si > 0 and b == 0
+            s_in = s
+            if down:
+                s = (s + 1) // 2                  # stride-2, SAME padding
+            yield (f"s{si}b{b}_w1",
+                   ((batch, s_in, s_in, cin), (k, k, cin, cout)),
+                   (batch, s, s, cout))
+            yield (f"s{si}b{b}_w2",
+                   ((batch, s, s, cout), (k, k, cout, cout)),
+                   (batch, s, s, cout))
+            if down or cin != cout:
+                yield (f"s{si}b{b}_proj",
+                       ((batch, s_in, s_in, cin), (1, 1, cin, cout)),
+                       (batch, s, s, cout))
+            cin = cout
+
+
+def _is_small(p: P) -> bool:
+    return p.init in ("ones", "zeros")
+
+
+def abstract_params(arch: ArchConfig, param_dtype: str = "bfloat16"):
+    pd = jnp.dtype(param_dtype)
+
+    def mk(p: P, path):
+        dtype = jnp.dtype(jnp.float32) if _is_small(p) else pd
+        return jax.ShapeDtypeStruct(p.shape, dtype)
+
+    return _map_spec(model_spec(arch), mk)
+
+
+def logical_axes(arch: ArchConfig):
+    return _map_spec(model_spec(arch), lambda p, path: p.axes)
+
+
+def init_params(arch: ArchConfig, key, param_dtype: str = "bfloat16"):
+    pd = jnp.dtype(param_dtype)
+
+    def mk(p: P, path):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, F32)
+        if p.init == "ones":
+            return jnp.ones(p.shape, F32)
+        # conv (k, k, cin, cout): fan_in = k·k·cin; dense (d, n): fan_in = d
+        fan_in = int(np.prod(p.shape[:-1]))
+        k = path_key(key, path)
+        std = 1.0 / np.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(k, p.shape, F32)).astype(pd)
+
+    return _map_spec(model_spec(arch), mk)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CNNModel:
+    arch: ArchConfig
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "block"
+
+    # -- params ----------------------------------------------------------
+    def abstract_params(self):
+        return abstract_params(self.arch, self.param_dtype)
+
+    def logical_axes(self):
+        return logical_axes(self.arch)
+
+    def init(self, key):
+        return init_params(self.arch, key, self.param_dtype)
+
+    # -- forward ----------------------------------------------------------
+    def _block(self, bp, x, ctx: DPContext, stride: int):
+        h, ctx = L.rmsnorm_nd(x, bp["ln1"], ctx, self.arch.norm_eps)
+        h, ctx = ctx.conv2d(h, bp["w1"], stride=stride)
+        h, ctx = ctx.bias(h, bp["b1"])
+        h = jax.nn.gelu(h.astype(F32)).astype(h.dtype)
+        h, ctx = L.rmsnorm_nd(h, bp["ln2"], ctx, self.arch.norm_eps)
+        h, ctx = ctx.conv2d(h, bp["w2"], stride=1)
+        h, ctx = ctx.bias(h, bp["b2"])
+        skip = x
+        if "proj" in bp:
+            skip, ctx = ctx.conv2d(x, bp["proj"], stride=stride)
+        return skip + h, ctx
+
+    def _forward(self, params, images, ctx: DPContext):
+        cfg = self.arch.cnn
+        x = images.astype(jnp.dtype(self.compute_dtype))
+        x, ctx = ctx.conv2d(x, params["stem"]["w"], stride=1)
+        x, ctx = ctx.bias(x, params["stem"]["b"])
+        for s, blocks in enumerate(params["stages"]):
+            for b, bp in enumerate(blocks):
+                stride = 2 if (s > 0 and b == 0) else 1
+
+                def run(bp_, x_, acc):
+                    c = dc_replace(ctx, acc=acc)
+                    y, c = self._block(bp_, x_, c, stride)
+                    return y, c.acc
+
+                if self.remat == "block":
+                    run = jax.checkpoint(run)
+                x, acc = run(bp, x, ctx.acc)
+                ctx = dc_replace(ctx, acc=acc)
+        x, ctx = L.rmsnorm_nd(x, params["final_norm"], ctx,
+                              self.arch.norm_eps)
+        pooled = jnp.mean(x.astype(F32), axis=(1, 2)).astype(x.dtype)
+        logits, ctx = ctx.dense(pooled, params["head"]["w"])
+        logits, ctx = ctx.bias(logits, params["head"]["b"])
+        return logits, ctx
+
+    # -- training loss ----------------------------------------------------
+    def loss_fn(self, params, batch, ctx: DPContext):
+        """Returns ((B,) per-example CE losses, ctx)."""
+        logits, ctx = self._forward(params, batch["images"], ctx)
+        logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+        ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+        return -ll[:, 0], ctx
+
+
+def build_cnn(arch: ArchConfig, param_dtype: str = "bfloat16",
+              compute_dtype: str = "bfloat16",
+              remat: str = "block") -> CNNModel:
+    assert arch.family == "cnn", arch.family
+    return CNNModel(arch, param_dtype, compute_dtype, remat)

@@ -30,19 +30,25 @@ def capacity(cfg_moe, seq_len: int) -> int:
 
 
 def moe_spec(cfg) -> dict:
+    """Expert FFNs follow ``cfg.mlp_act``: swiglu = 3 matrices (w1, w3, w2),
+    gelu = 2 (w1, w2) — the same flavor split as the dense MLP."""
     d, m = cfg.d_model, cfg.moe
+    swiglu = cfg.mlp_act == "swiglu"
     spec = {
         "router": P((d, m.num_experts), ("embed", "expert")),
         "we1": P((m.num_experts, d, m.d_expert), ("expert", "embed", "mlp")),
-        "we3": P((m.num_experts, d, m.d_expert), ("expert", "embed", "mlp")),
         "we2": P((m.num_experts, m.d_expert, d), ("expert", "mlp", "embed")),
     }
+    if swiglu:
+        spec["we3"] = P((m.num_experts, d, m.d_expert),
+                        ("expert", "embed", "mlp"))
     if m.num_shared_experts > 0:
         spec.update({
             "ws1": P((d, m.d_shared), ("embed", "mlp")),
-            "ws3": P((d, m.d_shared), ("embed", "mlp")),
             "ws2": P((m.d_shared, d), ("mlp", "embed")),
         })
+        if swiglu:
+            spec["ws3"] = P((d, m.d_shared), ("embed", "mlp"))
     return spec
 
 
@@ -111,15 +117,21 @@ def moe_apply(p, x, ctx: DPContext, cfg) -> Tuple[jax.Array, DPContext, jax.Arra
 
     xd = dispatch(x, e_idx, slot, keep)                           # (B,E,C,d)
     h1, ctx = ctx.moe_dense(xd, p["we1"])
-    h3, ctx = ctx.moe_dense(xd, p["we3"])
-    h = jax.nn.silu(h1.astype(F32)).astype(x.dtype) * h3
+    if "we3" in p:
+        h3, ctx = ctx.moe_dense(xd, p["we3"])
+        h = jax.nn.silu(h1.astype(F32)).astype(x.dtype) * h3
+    else:
+        h = jax.nn.gelu(h1.astype(F32)).astype(x.dtype)
     ye, ctx = ctx.moe_dense(h, p["we2"])                          # (B,E,C,d)
     y = combine(ye, gate_vals, e_idx, slot, keep)
 
     if m.num_shared_experts > 0:
         s1, ctx = ctx.dense(x, p["ws1"])
-        s3, ctx = ctx.dense(x, p["ws3"])
-        sh = jax.nn.silu(s1.astype(F32)).astype(x.dtype) * s3
+        if "ws3" in p:
+            s3, ctx = ctx.dense(x, p["ws3"])
+            sh = jax.nn.silu(s1.astype(F32)).astype(x.dtype) * s3
+        else:
+            sh = jax.nn.gelu(s1.astype(F32)).astype(x.dtype)
         ys, ctx = ctx.dense(sh, p["ws2"])
         y = y + ys
 

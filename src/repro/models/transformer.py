@@ -155,6 +155,15 @@ def _is_small(p: P) -> bool:
     return p.init in ("ones", "zeros", "mamba_dt", "mamba_alog")
 
 
+def path_key(key, path) -> jax.Array:
+    """Per-parameter init key from a spec path.  crc32, NOT hash(): Python
+    salts hash() per process, which would give every host of a
+    multi-controller fleet (and every re-run) different 'same-seed' params."""
+    import zlib
+    return jax.random.fold_in(
+        key, zlib.crc32("/".join(path).encode()) & 0x7FFFFFFF)
+
+
 def _map_spec(spec, fn, path=()):
     """Map fn(P, path) over a spec tree (dicts/lists/tuples of P)."""
     if isinstance(spec, P):
@@ -220,8 +229,7 @@ def init_params(arch: ArchConfig, key, param_dtype: str = "bfloat16"):
         shape = p.shape
         if path and path[0] == "blocks":
             shape = (reps,) + shape
-        k = jax.random.fold_in(key, hash(path) % (2 ** 31))
-        return _init_leaf(k, p, shape, dtype)
+        return _init_leaf(path_key(key, path), p, shape, dtype)
 
     return _map_spec(model_spec(arch), mk)
 

@@ -7,7 +7,7 @@ import numpy as np
 
 from repro.configs import ARCHS, reduced
 from repro.core.context import DPContext
-from repro.models.transformer import build_model
+from repro.models import build_model_for
 
 
 def tiny_model(name: str, dropless: bool = False):
@@ -15,11 +15,16 @@ def tiny_model(name: str, dropless: bool = False):
     if dropless and arch.moe.enabled:
         cf = arch.moe.num_experts / arch.moe.top_k
         arch = replace(arch, moe=replace(arch.moe, capacity_factor=cf))
-    return arch, build_model(arch, param_dtype="float32",
-                             compute_dtype="float32")
+    return arch, build_model_for(arch, param_dtype="float32",
+                                 compute_dtype="float32")
 
 
 def make_batch(arch, key, B=4, T=32):
+    if arch.family == "cnn":
+        k1, k2 = jax.random.split(key)
+        s, c = arch.cnn.image_size, arch.cnn.in_channels
+        return {"images": jax.random.normal(k1, (B, s, s, c)),
+                "labels": jax.random.randint(k2, (B,), 0, arch.vocab)}
     if arch.embed_stub:
         k1, k2 = jax.random.split(key)
         return {"embeds": 0.5 * jax.random.normal(k1, (B, T, arch.d_model)),

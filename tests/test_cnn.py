@@ -1,0 +1,215 @@
+"""CNN workload (models/cnn.py) on the private-site registry: conv2d/bias
+norm-rule exactness, three-algo identity under random Poisson masks, the
+masked==compacted contract, kernel-route parity, and trainer end-to-end.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import (DPConfig, OptimConfig, ShapeConfig,
+                                TrainConfig)
+from repro.core import DPContext, make_noisy_grad_fn
+from repro.core import sites
+
+from helpers import (make_batch, oracle_per_example_norms_sq,
+                     side_channel_norms_sq, tiny_model)
+
+ALGOS = ["dpsgd", "dpsgd_r", "dpsgd_r1f"]
+
+
+def _masked(batch, mask):
+    return dict(batch, mask=mask)
+
+
+def _compact(batch, mask):
+    keep = np.flatnonzero(np.asarray(mask))
+    return jax.tree.map(lambda a: a[keep], batch)
+
+
+# ---------------------------------------------------------------------------
+# conv2d / bias site rules vs brute force
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride,padding", [(1, "SAME"), (2, "SAME"),
+                                            (1, "VALID")])
+@pytest.mark.parametrize("strategy", ["materialize", "gram"])
+def test_conv2d_rules_equal_per_example_wgrad(stride, padding, strategy, key):
+    B, S, cin, cout, k = 3, 8, 3, 5, 3
+    x = jax.random.normal(key, (B, S, S, cin))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, k, cin, cout))
+    spec = sites.SiteSpec("conv2d", strategy=strategy,
+                          meta=(stride, padding))
+    y = sites.get_site("conv2d").fwd(spec, x, w)
+    gy = jax.random.normal(jax.random.fold_in(key, 2), y.shape)
+
+    def per_ex_loss(w_, xb, gyb):
+        yb = sites.get_site("conv2d").fwd(spec, xb[None], w_)
+        return jnp.sum(yb[0] * gyb)
+
+    want = np.empty(B)
+    for b in range(B):
+        gw = jax.grad(per_ex_loss)(w, x[b], gy[b])
+        want[b] = float((np.asarray(gw, np.float64) ** 2).sum())
+    got = sites.site_nsq(spec, (x, w), gy)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+def test_bias_rule_equals_per_example_grad(key):
+    B, S, c = 4, 6, 5
+    gy = jax.random.normal(key, (B, S, S, c))
+    spec = sites.SiteSpec("bias")
+    got = sites.site_nsq(spec, (jnp.zeros((B, S, S, c)), jnp.zeros((c,))), gy)
+    want = np.asarray(jnp.sum(jnp.sum(gy, axis=(1, 2)) ** 2, axis=-1))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+    # masked-batch invariant: zero gy row -> bitwise-zero norm²
+    gy0 = gy.at[2].set(0.0)
+    z = sites.site_nsq(spec, (jnp.zeros((B, S, S, c)), jnp.zeros((c,))), gy0)
+    assert float(np.asarray(z)[2]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# whole-model: side-channel exactness + algo identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["auto", "materialize", "gram"])
+def test_cnn_side_channel_matches_oracle(strategy, key):
+    arch, model = tiny_model("cnn-cifar10")
+    params = model.init(key)
+    batch = make_batch(arch, key)
+    want = oracle_per_example_norms_sq(model, params, batch)
+    got = side_channel_norms_sq(model, params, batch, strategy=strategy)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+@pytest.mark.slow           # interpret-mode Pallas kernels
+def test_cnn_kernel_backed_norms_match(key):
+    arch, model = tiny_model("cnn-cifar10")
+    params = model.init(key)
+    batch = make_batch(arch, key)
+    a = side_channel_norms_sq(model, params, batch, use_kernels=False)
+    b = side_channel_norms_sq(model, params, batch, use_kernels=True)
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_cnn_masked_equals_compacted(algo, key):
+    """A Poisson-masked CNN batch must produce the same clipped-noisy
+    update as the physically compacted batch (per algo)."""
+    arch, model = tiny_model("cnn-cifar10")
+    params = model.init(key)
+    B = 6
+    batch = make_batch(arch, key, B=B)
+    mask = np.array([1, 0, 1, 1, 0, 1], np.bool_)
+    dp = DPConfig(algo=algo, clip_norm=0.05, noise_multiplier=0.0)
+    nmask = int(mask.sum())
+    gm, _ = make_noisy_grad_fn(model.loss_fn, dp,
+                               expected_batch_size=nmask)(
+        params, _masked(batch, jnp.asarray(mask)), jax.random.PRNGKey(5))
+    gc, _ = make_noisy_grad_fn(model.loss_fn, dp)(
+        params, _compact(batch, mask), jax.random.PRNGKey(5))
+    for a, b in zip(jax.tree.leaves(gm), jax.tree.leaves(gc)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-8)
+
+
+@pytest.mark.parametrize("variant", ["dpsgd_r", "dpsgd_r1f"])
+def test_cnn_three_algo_identity_under_random_masks(variant, key):
+    arch, model = tiny_model("cnn-cifar10")
+    params = model.init(key)
+    for trial in range(3):
+        kt = jax.random.fold_in(key, trial)
+        batch = make_batch(arch, kt, B=4)
+        mask = jax.random.bernoulli(jax.random.fold_in(kt, 99), 0.7, (4,))
+        mb = _masked(batch, mask)
+        kw = dict(clip_norm=0.03, noise_multiplier=0.5)
+        ga, _ = make_noisy_grad_fn(model.loss_fn,
+                                   DPConfig(algo="dpsgd", **kw))(
+            params, mb, jax.random.PRNGKey(7 + trial))
+        gb, _ = make_noisy_grad_fn(model.loss_fn,
+                                   DPConfig(algo=variant, **kw))(
+            params, mb, jax.random.PRNGKey(7 + trial))
+        for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-7)
+
+
+@pytest.mark.parametrize("algo", ["sgd"] + ALGOS)
+def test_cnn_trains_one_step_each_algo(algo, key):
+    """An optimizer step under every algorithm: finite loss, param change."""
+    from repro.optim import make_optimizer
+    arch, model = tiny_model("cnn-cifar10")
+    params = model.init(key)
+    batch = make_batch(arch, key)
+    dp = DPConfig(algo=algo, clip_norm=1.0, noise_multiplier=0.3)
+    grads, metrics = make_noisy_grad_fn(model.loss_fn, dp)(
+        params, batch, jax.random.PRNGKey(1))
+    assert np.isfinite(float(metrics["loss"]))
+    opt = make_optimizer(OptimConfig(lr=1e-2, warmup_steps=0,
+                                     schedule="constant", total_steps=10))
+    new_p, _ = opt.apply(grads, opt.init(params), params, jnp.zeros((), jnp.int32))
+    moved = any(float(jnp.max(jnp.abs(a - b))) > 0
+                for a, b in zip(jax.tree.leaves(new_p),
+                                jax.tree.leaves(params)))
+    assert moved
+
+
+def test_cnn_trainer_poisson_end_to_end(key, tmp_path):
+    arch, model = tiny_model("cnn-cifar10")
+    shape = ShapeConfig("train_4k", 8, 8, "train")
+    cfg = TrainConfig(arch=arch.name, steps=3, log_every=1, ckpt_every=100,
+                      ckpt_dir=str(tmp_path), ckpt_async=False,
+                      param_dtype="float32", compute_dtype="float32",
+                      dp=DPConfig(algo="dpsgd_r", sampling="poisson",
+                                  noise_multiplier=0.5),
+                      optim=OptimConfig(lr=1e-3, total_steps=3))
+    from repro.train import Trainer
+    tr = Trainer(model, cfg, shape)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    state = tr.run(state, install_signals=False)
+    assert int(state.step) == 3
+    assert np.isfinite(tr.history[-1]["loss"])
+
+
+def test_cnn_arch_registered_and_reduced():
+    arch = ARCHS["cnn-cifar10"]
+    assert arch.family == "cnn"
+    assert arch.param_count() > 0
+    small = reduced(arch)
+    assert small.cnn.image_size < arch.cnn.image_size
+    assert small.param_count() < arch.param_count()
+
+
+def test_iter_conv_sites_matches_model_spec():
+    """The cost tooling's structure walk must mirror the actual param spec:
+    every 4-D conv weight in model_spec, in order, with matching shapes."""
+    from repro.models import cnn as cnn_mod
+    for arch in (ARCHS["cnn-cifar10"], reduced(ARCHS["cnn-cifar10"])):
+        spec_ws = []
+        cnn_mod._map_spec(
+            cnn_mod.model_spec(arch),
+            lambda p, path: spec_ws.append(p.shape) if len(p.shape) == 4
+            else None)
+        walked = [op_shapes[1] for _, op_shapes, _
+                  in cnn_mod.iter_conv_sites(arch)]
+        assert walked == spec_ws
+        # and gy channel dims match each conv's output channels
+        for _, op_shapes, gy_shape in cnn_mod.iter_conv_sites(arch):
+            assert gy_shape[-1] == op_shapes[1][-1]
+
+
+def test_cnn_dryrun_cell_shapes():
+    """dryrun plumbing: abstract inputs + registry norm-rule artifact."""
+    from repro.launch.dryrun import cell_norm_rules, input_specs
+    from repro.configs import SHAPES, shape_applicable
+    arch = ARCHS["cnn-cifar10"]
+    shape = SHAPES["train_4k"]
+    specs = input_specs(arch, shape)
+    assert specs["images"].shape == (shape.global_batch, 32, 32, 3)
+    rows = cell_norm_rules(arch, shape)
+    assert any(r["kind"] == "conv2d" for r in rows)
+    for r in rows:
+        assert r["auto"] in r["rule_flops"] or len(r["rule_flops"]) == 0
+    assert not shape_applicable(arch, SHAPES["decode_32k"])
+    assert not shape_applicable(arch, SHAPES["long_500k"])

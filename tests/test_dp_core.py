@@ -21,7 +21,7 @@ from helpers import (make_batch, oracle_per_example_norms_sq,
 # expensive cases in tier-1 -> slow-marked, skipped by `make test-fast`
 JAMBA = pytest.param("jamba-1.5-large-398b", marks=pytest.mark.slow)
 ARCH_SAMPLE = ["phi3-mini-3.8b", "starcoder2-7b", "mamba2-1.3b",
-               "deepseek-moe-16b", JAMBA, "chameleon-34b"]
+               "deepseek-moe-16b", JAMBA, "chameleon-34b", "cnn-cifar10"]
 
 
 @pytest.mark.parametrize("name", ARCH_SAMPLE)
@@ -55,7 +55,7 @@ def test_kernel_backed_norms_match(key):
 
 
 @pytest.mark.parametrize("name", ["phi3-mini-3.8b", "deepseek-moe-16b",
-                                  JAMBA])
+                                  JAMBA, "cnn-cifar10"])
 @pytest.mark.parametrize("variant", ["dpsgd_r", "dpsgd_r1f"])
 def test_dpsgd_equals_reweighted_variants(name, variant, key):
     """Vanilla DP-SGD == DP-SGD(R) == single-forward DP-SGD(R)."""

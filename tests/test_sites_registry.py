@@ -1,0 +1,296 @@
+"""The pluggable private-site registry (core/sites.py) and algo registry
+(core/algo.py): error surfaces, shim equivalence, and — the point of the
+redesign — third-party extension: a custom site and a custom algorithm
+registered *outside* repro.core must thread masks and round-trip through
+all three private algorithms exactly like the builtins.
+
+Also home to the satellite regression tests: mlp_act-aware
+``active_param_count`` and typed coercion of ``None``-valued overrides.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, apply_overrides
+from repro.configs.base import ArchConfig, DPConfig, MoEConfig
+from repro.core import (DPContext, make_clipped_sum_fn, make_noisy_grad_fn,
+                        register_algo, register_site, unregister_algo,
+                        unregister_site)
+from repro.core import algo as algo_mod
+from repro.core import norms, sites
+
+from helpers import make_batch, oracle_per_example_norms_sq, \
+    side_channel_norms_sq, tiny_model
+
+
+# ---------------------------------------------------------------------------
+# registry error surfaces (no silent-garbage paths)
+# ---------------------------------------------------------------------------
+
+def test_unknown_site_kind_lists_registered():
+    ctx = DPContext.off()
+    with pytest.raises(KeyError, match=r"unknown site kind 'nope'"):
+        ctx.site("nope", jnp.ones((2, 3)))
+    with pytest.raises(KeyError) as ei:
+        sites.get_site("nope")
+    for kind in ("dense", "moe_dense", "embed", "tap", "conv2d", "bias"):
+        assert kind in str(ei.value)
+
+
+def test_unknown_strategy_lists_registered():
+    x = jnp.ones((2, 4, 8))
+    gy = jnp.ones((2, 4, 8))
+    # pre-refactor this silently fell through to the gram rule
+    with pytest.raises(ValueError, match=r"unknown norm strategy 'grm'"):
+        norms.dense_nsq(x, gy, strategy="grm")
+    with pytest.raises(ValueError) as ei:
+        norms.dense_nsq(x, gy, strategy="grm")
+    assert "gram" in str(ei.value) and "materialize" in str(ei.value)
+
+
+def test_unknown_algo_lists_registered():
+    def loss_fn(p, b, ctx):
+        return jnp.zeros((2,)), ctx
+    with pytest.raises(ValueError, match=r"unknown dp.algo 'nope'"):
+        make_clipped_sum_fn(loss_fn, DPConfig(algo="nope"))
+    with pytest.raises(ValueError) as ei:
+        make_clipped_sum_fn(loss_fn, DPConfig(algo="nope"))
+    for name in ("sgd", "dpsgd", "dpsgd_r", "dpsgd_r1f"):
+        assert name in str(ei.value)
+
+
+def test_duplicate_registration_raises():
+    site = sites.get_site("dense")
+    with pytest.raises(ValueError, match="already registered"):
+        register_site("dense", fwd=site.fwd, nsq_rules=site.nsq_rules)
+    with pytest.raises(ValueError, match="already registered"):
+        register_algo("dpsgd", lambda loss_fn, dp: None)
+
+
+def test_site_flops_and_strategy_resolution():
+    # dense: long T vs wide d (mirrors norms.pick_strategy semantics)
+    assert sites.resolve_strategy("dense", "auto", ((1, 1000, 8),),
+                                  (1, 1000, 8)) == "materialize"
+    assert sites.resolve_strategy("dense", "auto", ((1, 4, 512),),
+                                  (1, 4, 512)) == "gram"
+    # single-rule sites absorb any context-wide strategy name
+    assert sites.resolve_strategy("tap", "gram", ((3,),), (2, 3)) == "direct"
+    assert sites.resolve_strategy("bias", "materialize", ((4,),),
+                                  (2, 4)) == "direct"
+    f = sites.site_flops("dense", "materialize", ((2, 16, 8),), (2, 16, 4))
+    assert f == 2 * 2 * 16 * 8 * 4
+    # conv2d reads its own formulas: im2col d_in = kh*kw*cin over P positions
+    fm = sites.site_flops("conv2d", "materialize",
+                          ((2, 8, 8, 3), (3, 3, 3, 5)), (2, 8, 8, 5))
+    assert fm == 2 * 2 * 64 * 27 * 5
+
+
+# ---------------------------------------------------------------------------
+# shims == generic entry point
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["off", "norm"])
+def test_dense_shim_is_generic_site(mode, key):
+    x = jax.random.normal(key, (3, 5, 8))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (8, 4))
+    ctx = DPContext.off() if mode == "off" else DPContext.norm_mode(3)
+    y1, c1 = ctx.dense(x, w)
+    y2, c2 = ctx.site("dense", x, w)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    def nsq_via(f):
+        def run(acc0):
+            c = dataclasses.replace(DPContext.norm_mode(3), acc=acc0)
+            y, c = f(c)
+            return jnp.sum(y.astype(jnp.float32)), c.acc
+        _, pull = jax.vjp(run, jnp.zeros((3,), jnp.float32))
+        (nsq,) = pull((jnp.ones(()), jnp.zeros((3,), jnp.float32)))
+        return np.asarray(nsq)
+
+    a = nsq_via(lambda c: c.dense(x, w))
+    b = nsq_via(lambda c: c.site("dense", x, w))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_shim_side_channel_matches_oracle_post_refactor(key):
+    """The refactored shims must reproduce the vmap(grad) oracle on a real
+    model — the pre-refactor contract, re-pinned."""
+    arch, model = tiny_model("phi3-mini-3.8b")
+    params = model.init(key)
+    batch = make_batch(arch, key, B=2, T=16)
+    want = oracle_per_example_norms_sq(model, params, batch)
+    got = side_channel_norms_sq(model, params, batch)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# third-party extension: custom site + custom algo, registered in-test
+# ---------------------------------------------------------------------------
+
+def _toy_scale_fwd(spec, x, w):
+    """y[b,t,d] = x[b,t,d] * w[d] — a diagonal 'layer' unknown to core."""
+    return x * w
+
+
+def _toy_scale_nsq(spec, operands, gy):
+    x = operands[0]
+    g = jnp.sum(x.astype(jnp.float32) * gy.astype(jnp.float32), axis=1)
+    return jnp.sum(g * g, axis=-1)
+
+
+@pytest.fixture
+def toy_site():
+    register_site("toy_scale", fwd=_toy_scale_fwd,
+                  nsq_rules={"direct": _toy_scale_nsq})  # bwd: autodiff
+    yield "toy_scale"
+    unregister_site("toy_scale")
+
+
+@pytest.fixture
+def toy_algo():
+    # a third-party algorithm: delegates to the dpsgd_r builder — must be
+    # reachable by name through DPConfig and produce dpsgd_r's updates
+    register_algo("toy_dpsgd", algo_mod._dpsgd_r_sum)
+    yield "toy_dpsgd"
+    unregister_algo("toy_dpsgd")
+
+
+def _toy_loss_fn(params, batch, ctx):
+    h, ctx = ctx.site("toy_scale", batch["x"], params["w"])
+    y, ctx = ctx.dense(h, params["v"])
+    losses = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=(1, 2))
+    return losses, ctx
+
+
+def _toy_setup(key, B=6, T=5, d=4, k=3):
+    params = {"w": jax.random.normal(key, (d,)),
+              "v": jax.random.normal(jax.random.fold_in(key, 1), (d, k))}
+    batch = {"x": jax.random.normal(jax.random.fold_in(key, 2), (B, T, d))}
+    return params, batch
+
+
+def test_custom_site_norms_match_oracle(toy_site, key):
+    params, batch = _toy_setup(key)
+    B = batch["x"].shape[0]
+
+    def one_loss(p, ex):
+        l, _ = _toy_loss_fn(p, jax.tree.map(lambda a: a[None], ex),
+                            DPContext.off())
+        return l[0]
+
+    gb = jax.vmap(lambda ex: jax.grad(one_loss)(params, ex))(batch)
+    want = sum(np.sum(np.asarray(g, np.float64).reshape(B, -1) ** 2, -1)
+               for g in jax.tree.leaves(gb))
+
+    def pass1(p, acc0):
+        ctx = dataclasses.replace(DPContext.norm_mode(B), acc=acc0)
+        losses, ctx = _toy_loss_fn(p, batch, ctx)
+        return (jnp.sum(losses), ctx.acc), losses
+
+    acc0 = jnp.zeros((B,), jnp.float32)
+    _, pull, _ = jax.vjp(pass1, params, acc0, has_aux=True)
+    _, nsq = pull((jnp.ones(()), jnp.zeros((B,), jnp.float32)))
+    np.testing.assert_allclose(np.asarray(nsq), want, rtol=1e-5)
+
+
+def test_custom_site_threads_mask_exact_zero(toy_site, key):
+    """Padded rows (zero loss cotangent) must reach the custom site's rule
+    as zero gy and produce *bitwise-zero* norms²."""
+    params, batch = _toy_setup(key)
+    B = batch["x"].shape[0]
+    m = jnp.asarray([1, 1, 0, 1, 0, 0], jnp.float32)
+
+    def pass1(p, acc0):
+        ctx = dataclasses.replace(DPContext.norm_mode(B), acc=acc0)
+        losses, ctx = _toy_loss_fn(p, batch, ctx)
+        return (jnp.sum(m * losses), ctx.acc), losses
+
+    acc0 = jnp.zeros((B,), jnp.float32)
+    _, pull, _ = jax.vjp(pass1, params, acc0, has_aux=True)
+    _, nsq = pull((jnp.ones(()), jnp.zeros((B,), jnp.float32)))
+    nsq = np.asarray(nsq)
+    assert (nsq[np.asarray(m) == 0] == 0.0).all()      # exact zeros
+    assert (nsq[np.asarray(m) == 1] > 0.0).all()
+
+
+@pytest.mark.parametrize("variant", ["dpsgd_r", "dpsgd_r1f"])
+def test_custom_site_three_algo_identity_under_mask(toy_site, variant, key):
+    params, batch = _toy_setup(key)
+    B = batch["x"].shape[0]
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 9), 0.6, (B,))
+    mb = dict(batch, mask=mask)
+    kw = dict(clip_norm=0.05, noise_multiplier=0.4)
+    ga, _ = make_noisy_grad_fn(_toy_loss_fn, DPConfig(algo="dpsgd", **kw))(
+        params, mb, jax.random.PRNGKey(7))
+    gb, _ = make_noisy_grad_fn(_toy_loss_fn, DPConfig(algo=variant, **kw))(
+        params, mb, jax.random.PRNGKey(7))
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-8)
+
+
+def test_custom_algo_reachable_and_identical(toy_site, toy_algo, key):
+    params, batch = _toy_setup(key)
+    kw = dict(clip_norm=0.05, noise_multiplier=0.4)
+    g1, _ = make_noisy_grad_fn(_toy_loss_fn, DPConfig(algo="toy_dpsgd", **kw))(
+        params, batch, jax.random.PRNGKey(3))
+    g2, _ = make_noisy_grad_fn(_toy_loss_fn, DPConfig(algo="dpsgd_r", **kw))(
+        params, batch, jax.random.PRNGKey(3))
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# satellites: active_param_count / typed None-override coercion
+# ---------------------------------------------------------------------------
+
+def _moe_arch(mlp_act: str) -> ArchConfig:
+    return ArchConfig(
+        name=f"moe-{mlp_act}", family="moe", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=128, mlp_act=mlp_act,
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=16))
+
+
+@pytest.mark.parametrize("mlp_act,mats", [("swiglu", 3), ("gelu", 2)])
+def test_active_param_count_follows_expert_tree(mlp_act, mats):
+    arch = _moe_arch(mlp_act)
+    per_expert = mats * arch.d_model * arch.moe.d_expert
+    inactive = arch.n_layers * (arch.moe.num_experts - arch.moe.top_k) \
+        * per_expert
+    assert arch.param_count() - arch.active_param_count() == inactive
+
+
+def test_moe_gelu_experts_have_two_matrices(key):
+    from repro.models.moe import moe_spec
+    assert set(moe_spec(_moe_arch("gelu"))) == {"router", "we1", "we2"}
+    assert set(moe_spec(_moe_arch("swiglu"))) == {"router", "we1", "we3",
+                                                  "we2"}
+    # and the gelu-expert model actually runs + keeps exact side-channel
+    arch, model = tiny_model("deepseek-moe-16b")
+    arch = dataclasses.replace(arch, mlp_act="gelu")
+    from repro.models import build_model_for
+    model = build_model_for(arch, param_dtype="float32",
+                            compute_dtype="float32")
+    params = model.init(key)
+    batch = make_batch(arch, key, B=2, T=16)
+    want = oracle_per_example_norms_sq(model, params, batch)
+    got = side_channel_norms_sq(model, params, batch)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+def test_override_none_field_coerces_via_declared_type():
+    arch = ARCHS["phi3-mini-3.8b"]
+    assert arch.layer_pattern is None
+    out = apply_overrides(arch, {"layer_pattern": "attn,attn"})
+    assert out.layer_pattern == ("attn", "attn")
+    # and back to None
+    out2 = apply_overrides(out, {"layer_pattern": "none"})
+    assert out2.layer_pattern is None
+
+
+def test_override_unknown_key_still_raises():
+    with pytest.raises(KeyError, match="unknown config key"):
+        apply_overrides(ARCHS["phi3-mini-3.8b"], {"no_such_field": "1"})
