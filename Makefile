@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dp test-sites test-multidevice bench-smoke bench-serve dryrun-smoke
+.PHONY: test test-fast test-dp test-sites test-mem test-multidevice bench-smoke bench-serve dryrun-smoke
 
 # tier-1 verify: the gate for every change
 test:
@@ -26,6 +26,13 @@ test-dp:
 test-sites:
 	$(PY) -m pytest -x -q -m "not slow" \
 	    tests/test_sites_registry.py tests/test_cnn.py
+
+# the memory-capacity gate: remat-identity matrix (checkpointing never
+# changes a bit of any private update), peak-HBM estimator vs XLA's
+# memory_analysis, and budget-driven auto-microbatching
+# (the slow tier adds the full 4-family x 4-algo identity matrix)
+test-mem:
+	$(PY) -m pytest -x -q -m "not slow" tests/test_memory.py
 
 # fast tier (~4 min vs ~7 for full): skips the interpret-mode Pallas
 # kernel sweeps and the jamba-398b heavies (@pytest.mark.slow); this is

@@ -182,6 +182,50 @@ def fig4_memory_model():
     return rows
 
 
+def fig_mem_footprint():
+    """Paper §III characterization on the *real* JAX programs: DP-vs-non-
+    private resident-footprint blowup from the launch/memory.py peak-live
+    estimator (trace-only — no compile, no allocation).  Reports, per
+    reduced arch: estimated peak for sgd / dpsgd / dpsgd_r, the DP blowup
+    ratio (the paper's capacity argument), the per-example-grad
+    side-channel bytes (= sim/dataflow.pegrad_spill_bytes, the quantity the
+    analytical model prices as DRAM spill), and the remat="sites" saving."""
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import DPConfig, TrainConfig
+    from repro.launch.memory import abstract_batch, estimate_train_memory
+    from repro.models import build_model_for
+    B, T = 8, 64
+    rows = []
+    for name in ("phi3-mini-3.8b", "mamba2-1.3b", "cnn-cifar10"):
+        arch = reduced(ARCHS[name])
+        batch_abs = abstract_batch(arch, B, T)
+        peaks = {}
+        for algo, remat in (("sgd", "none"), ("dpsgd", "none"),
+                            ("dpsgd_r", "none"), ("dpsgd_r", "sites")):
+            cfg = TrainConfig(arch=arch.name, remat=remat,
+                              param_dtype="float32",
+                              compute_dtype="float32",
+                              dp=DPConfig(algo=algo))
+            model = build_model_for(arch, param_dtype="float32",
+                                    compute_dtype="float32",
+                                    remat=remat)
+            est = estimate_train_memory(model, cfg, batch_abs)
+            peaks[(algo, remat)] = est
+        base = peaks[("sgd", "none")]["peak_bytes"]
+        for algo in ("sgd", "dpsgd", "dpsgd_r"):
+            e = peaks[(algo, "none")]
+            rows.append((f"fig3mem/{name}/{algo}", 0.0,
+                         f"peak_mb={e['peak_bytes'] / 1e6:.2f};"
+                         f"blowup_vs_sgd={e['peak_bytes'] / base:.2f};"
+                         f"pegrad_mb={e['per_example_grad_bytes'] / 1e6:.3f}"))
+        e_dp = peaks[("dpsgd_r", "none")]["peak_bytes"]
+        e_st = peaks[("dpsgd_r", "sites")]["peak_bytes"]
+        rows.append((f"fig3mem/{name}/dpsgd_r-sites", 0.0,
+                     f"peak_mb={e_st / 1e6:.2f};"
+                     f"remat_saving={e_dp / max(e_st, 1):.2f}"))
+    return rows
+
+
 def fig_norm_rule_crossover():
     """Beyond-paper: the Book-Keeping crossover (ghost/gram norm vs
     materialize), read from the private-site registry's *own* FLOP formulas
@@ -220,4 +264,4 @@ def fig_norm_rule_crossover():
 ALL = [fig4_memory_model, fig5_dp_slowdown, fig7_fig15_utilization,
        fig13_end_to_end_speedup, fig13_nonprivate_sgd,
        fig14_latency_breakdown, fig16_energy, table1_sram_bandwidth,
-       fig_norm_rule_crossover]
+       fig_norm_rule_crossover, fig_mem_footprint]

@@ -47,18 +47,23 @@ def _time(fn, *args, iters=5):
 
 
 def fig5_walltime():
+    from repro.launch.memory import abstract_like, jaxpr_peak_bytes
     rows = []
     for name in BENCH_ARCHS:
         arch, model, params, batch = _setup(name)
         key = jax.random.PRNGKey(1)
-        times = {}
+        abstract = abstract_like((params, batch, key))
+        times, peaks = {}, {}
         for algo in ("sgd", "dpsgd", "dpsgd_r"):
             dp = DPConfig(algo=algo, microbatch=0)
-            fn = jax.jit(make_noisy_grad_fn(model.loss_fn, dp))
+            raw = make_noisy_grad_fn(model.loss_fn, dp)
+            fn = jax.jit(raw)
             times[algo] = _time(fn, params, batch, key)
+            peaks[algo] = jaxpr_peak_bytes(raw, *abstract).peak_bytes
         for algo, t in times.items():
             rows.append((f"fig5/{name}/{algo}", t * 1e6,
-                         f"slowdown_vs_sgd={t / times['sgd']:.2f}"))
+                         f"slowdown_vs_sgd={t / times['sgd']:.2f};"
+                         f"est_peak_mb={peaks[algo] / 1e6:.2f}"))
         rows.append((f"fig5/{name}/r_vs_vanilla", 0.0,
                      f"dpsgd_r_speedup={times['dpsgd'] / times['dpsgd_r']:.2f}"
                      f";paper=1.45"))
@@ -66,20 +71,31 @@ def fig5_walltime():
 
 
 def fig4_compiled_memory():
+    """Compiled temp footprint per algorithm, with the launch/memory.py
+    estimated peak recorded alongside (dryrun's `memory` cell schema at
+    smoke scale) so the estimator is exercised against XLA on every bench
+    run, not only in tests."""
+    from repro.launch.memory import abstract_like, jaxpr_peak_bytes
     rows = []
     for name in BENCH_ARCHS:
         arch, model, params, batch = _setup(name)
         key = jax.random.PRNGKey(1)
-        mems = {}
+        abstract = abstract_like((params, batch, key))
+        mems, ests = {}, {}
         for algo in ("sgd", "dpsgd", "dpsgd_r"):
             dp = DPConfig(algo=algo, microbatch=0)
             fn = make_noisy_grad_fn(model.loss_fn, dp)
             comp = jax.jit(fn).lower(params, batch, key).compile()
             mems[algo] = int(comp.memory_analysis().temp_size_in_bytes)
+            ests[algo] = jaxpr_peak_bytes(fn, *abstract).as_dict()
         for algo, m in mems.items():
+            e = ests[algo]
             rows.append((f"fig4c/{name}/{algo}", 0.0,
                          f"temp_mb={m / 1e6:.2f};"
-                         f"vs_sgd={m / max(mems['sgd'], 1):.2f}"))
+                         f"vs_sgd={m / max(mems['sgd'], 1):.2f};"
+                         f"est_peak_mb={e['peak_bytes'] / 1e6:.2f};"
+                         f"est_transient_mb="
+                         f"{e['transient_bytes'] / 1e6:.2f}"))
     return rows
 
 

@@ -208,6 +208,57 @@ class MeshConfig:
         return n
 
 
+# ---------------------------------------------------------------------------
+# Remat (activation checkpointing) policies
+# ---------------------------------------------------------------------------
+
+# Per-family supported remat policies.  Every family implements the same
+# three today, but validation is keyed by family so a family that gains (or
+# cannot support) a policy changes exactly this table:
+#   * "none"  — no activation checkpointing: every block intermediate is
+#     stored for the backward pass (maximal memory, minimal recompute).
+#   * "block" — jax.checkpoint around each repeated block (transformer
+#     scan body / CNN residual block): only block boundaries are stored.
+#   * "sites" — jax.checkpoint with save_only_these_names: saves exactly
+#     the operands the registered norm rules consume (the checkpoint_name-
+#     tagged site inputs, core/sites.py SAVE_SITE_NAME) and recomputes
+#     everything else — the memory/recompute point between none and block
+#     that keeps DP-SGD(R)'s side-channel residuals resident.
+FAMILY_REMAT_POLICIES: Dict[str, Tuple[str, ...]] = {
+    "dense": ("none", "block", "sites"),
+    "ssm": ("none", "block", "sites"),
+    "moe": ("none", "block", "sites"),
+    "hybrid": ("none", "block", "sites"),
+    "audio": ("none", "block", "sites"),
+    "vlm": ("none", "block", "sites"),
+    "cnn": ("none", "block", "sites"),
+}
+
+REMAT_POLICIES: Tuple[str, ...] = ("none", "block", "sites")
+
+
+def validate_remat(family: str, remat: str) -> str:
+    """Raise if ``remat`` is not a policy ``family`` implements.
+
+    This is the fix for the historical silent no-op: any unknown string
+    (or a policy a family doesn't implement) used to fall through every
+    ``if remat == ...`` chain and silently train without checkpointing.
+    Model constructors call this, so a typo fails at build time with the
+    family's actual policy list."""
+    supported = FAMILY_REMAT_POLICIES.get(family)
+    if supported is None:
+        if remat in REMAT_POLICIES:
+            return remat
+        raise ValueError(
+            f"unknown remat policy {remat!r} for family {family!r}; "
+            f"known policies: {sorted(REMAT_POLICIES)}")
+    if remat not in supported:
+        raise ValueError(
+            f"unknown remat policy {remat!r} for family {family!r}; "
+            f"family {family!r} supports: {sorted(supported)}")
+    return remat
+
+
 @dataclass(frozen=True)
 class DPConfig:
     """DP-SGD configuration (the single place these knobs are documented).
@@ -285,6 +336,28 @@ class OptimConfig:
 
 
 @dataclass(frozen=True)
+class MemConfig:
+    """Memory-capacity plan (launch/memory.py is the estimator).
+
+    ``hbm_budget_bytes`` — per-device HBM capacity the training step's
+    estimated peak must fit in (0 = unlimited, never raises: with no
+    budget the trainer skips the auto-microbatch search entirely).
+    ``auto_microbatch`` — let the trainer pick the largest microbatch /
+    grad_accum split whose estimated peak fits the budget, respecting the
+    Poisson capacity's lcm rounding (grad_accum x microbatch x batch-axis
+    width) so the padded batch stays shardable.  Raises at build time if
+    even the smallest split exceeds the (non-zero) budget.
+    ``compiled_check`` — have the launcher cross-check the estimate
+    against ``compiled.memory_analysis()`` and log both at launch; costs
+    one extra AOT compile of the train step, so very large programs can
+    turn it off and keep the trace-only estimate.
+    """
+    hbm_budget_bytes: int = 0      # 0 = unlimited
+    auto_microbatch: bool = False
+    compiled_check: bool = True
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     arch: str = "phi3-mini-3.8b"
     shape: str = "train_4k"
@@ -295,7 +368,7 @@ class TrainConfig:
     ckpt_dir: str = "/tmp/repro_ckpt"
     ckpt_keep: int = 3
     ckpt_async: bool = True
-    remat: str = "block"           # none | block  (activation checkpointing)
+    remat: str = "block"           # none | block | sites (REMAT_POLICIES)
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
     grad_accum: int = 1
@@ -304,8 +377,17 @@ class TrainConfig:
     dp: DPConfig = field(default_factory=DPConfig)
     optim: OptimConfig = field(default_factory=OptimConfig)
     mesh: MeshConfig = field(default_factory=MeshConfig)
+    mem: MemConfig = field(default_factory=MemConfig)
     data_source: str = "synthetic"  # synthetic | memmap:<path>
     watchdog_factor: float = 3.0    # straggler logging threshold
+
+    def __post_init__(self):
+        # family-agnostic check (the arch name is just a string here);
+        # model constructors re-validate against their family's policies
+        if self.remat not in REMAT_POLICIES:
+            raise ValueError(
+                f"unknown remat policy {self.remat!r}; known policies: "
+                f"{sorted(REMAT_POLICIES)} (see FAMILY_REMAT_POLICIES)")
 
 
 # ---------------------------------------------------------------------------

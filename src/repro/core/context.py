@@ -83,9 +83,17 @@ class DPContext:
         the call is routed through the registry's ``site_call`` custom_vjp
         so the backward pass adds the site's per-example grad-norm² to the
         accumulator.  ``meta`` carries static per-call extras the site
-        declares (see ``sites.SiteSpec.meta``)."""
+        declares (see ``sites.SiteSpec.meta``).
+
+        Every operand the site's norm rules consume (``save_operands``) is
+        tagged with ``checkpoint_name(..., sites.SAVE_SITE_NAME)`` in both
+        modes — pass 1 (norm rules) and pass 2 (reweighted wgrads) both
+        need those residuals — so ``remat="sites"`` can save exactly them
+        and recompute everything else.  Under any other remat policy the
+        tag is an identity that fuses away."""
         spec = self._spec(kind, meta)
         site = sites.get_site(kind)        # raises with registered kinds
+        operands = sites.name_saved_operands(site, operands)
         if self.mode == "off":
             return site.fwd(spec, *operands), self
         y, acc = sites.site_call(spec, self.acc, *operands)

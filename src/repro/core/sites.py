@@ -52,6 +52,31 @@ from repro.core import norms
 
 F32 = jnp.float32
 
+# The checkpoint_name tag DPContext puts on every operand a site's norm
+# rules consume (SiteDef.save_operands).  remat="sites"
+# (jax.checkpoint_policies.save_only_these_names(SAVE_SITE_NAME)) then
+# saves exactly these values as residuals and recomputes everything else —
+# the per-example-norm backward never re-runs the forward just to rebuild
+# a site input, while non-site intermediates (attention scores, activation
+# functions, norm statistics) stay transient.
+SAVE_SITE_NAME = "dp_site_operand"
+
+
+def name_saved_operands(site: "SiteDef", operands: tuple) -> tuple:
+    """Tag the operands ``site.save_operands`` names with
+    ``jax.ad_checkpoint.checkpoint_name(..., SAVE_SITE_NAME)``.
+
+    A no-op unless an enclosing ``jax.checkpoint`` uses a name-aware
+    policy (models/layers.py ``remat_wrap(..., "sites")``); under any
+    other policy the name primitive is identity and fuses away."""
+    if not site.save_operands:
+        return operands
+    from jax.ad_checkpoint import checkpoint_name
+    ops = list(operands)
+    for i in site.save_operands:
+        ops[i] = checkpoint_name(ops[i], SAVE_SITE_NAME)
+    return tuple(ops)
+
 
 # ---------------------------------------------------------------------------
 # Spec & registry entry
@@ -83,6 +108,12 @@ class SiteDef:
     ``flops[name](operand_shapes, gy_shape) -> float`` — analytic FLOPs of
       the same-named rule; drives ``"auto"`` strategy resolution and the
       cost/benchmark tooling.
+    ``save_operands`` — operand indices the norm rules consume (and the
+      ``remat="sites"`` policy must therefore keep resident as residuals;
+      see ``SAVE_SITE_NAME``).  Defaults to ``(0,)`` — the activation of
+      an ``(x, w)``-shaped site; parameters should never be listed (they
+      are jaxpr inputs, already resident, and naming a scanned per-layer
+      parameter slice would duplicate it in the residuals).
     """
     kind: str
     fwd: Callable
@@ -91,6 +122,7 @@ class SiteDef:
     kernel_route: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
     flops: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
     nondiff_operands: Tuple[int, ...] = ()
+    save_operands: Tuple[int, ...] = (0,)
 
 
 _REGISTRY: Dict[str, SiteDef] = {}
@@ -103,6 +135,7 @@ def register_site(kind: str, *, fwd: Callable,
                   kernel_route: Optional[Mapping[str, Callable]] = None,
                   flops: Optional[Mapping[str, Callable]] = None,
                   nondiff_operands: Sequence[int] = (),
+                  save_operands: Sequence[int] = (0,),
                   overwrite: bool = False) -> SiteDef:
     """Register a site type.  Third-party callers (models, tests, plugins)
     use exactly this entry point — the builtins below claim no special
@@ -118,7 +151,8 @@ def register_site(kind: str, *, fwd: Callable,
     site = SiteDef(kind=kind, fwd=fwd, nsq_rules=dict(nsq_rules), bwd=bwd,
                    kernel_route=dict(kernel_route or {}),
                    flops=dict(flops or {}),
-                   nondiff_operands=tuple(nondiff_operands))
+                   nondiff_operands=tuple(nondiff_operands),
+                   save_operands=tuple(save_operands))
     for field_name, mapping in (("kernel_route", site.kernel_route),
                                 ("flops", site.flops)):
         unknown = set(mapping) - set(site.nsq_rules)
@@ -394,9 +428,12 @@ def _tap_flops(operand_shapes, gy_shape):
     return 2 * n
 
 
+# tap's only operand is the parameter itself and its rule consumes only gy,
+# so the sites remat policy has nothing to save here
 register_site("tap", fwd=_tap_fwd, bwd=_tap_bwd,
               nsq_rules={"direct": _tap_rule},
-              flops={"direct": _tap_flops})
+              flops={"direct": _tap_flops},
+              save_operands=())
 
 
 # ---------------------------------------------------------------------------
@@ -520,6 +557,8 @@ def _bias_flops(operand_shapes, gy_shape):
     return 2 * n
 
 
+# the bias rule consumes only gy — nothing for the sites policy to save
 register_site("bias", fwd=_bias_fwd, bwd=_bias_bwd,
               nsq_rules={"direct": _bias_rule},
-              flops={"direct": _bias_flops})
+              flops={"direct": _bias_flops},
+              save_operands=())

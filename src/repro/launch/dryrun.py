@@ -14,6 +14,22 @@ For every (architecture x applicable input shape) cell, on the single-pod
     bytes into a JSON artifact per cell (EXPERIMENTS.md §Dry-run reads
     these; §Roofline derives its three terms from them).
 
+Artifact schema — memory cells (one per arch x shape x mesh record):
+
+  * ``memory`` — the launch/memory.py liveness estimate of the *global*
+    (pre-partitioning) resident peak: ``peak_bytes`` (headline),
+    ``arg_bytes`` / ``donated_bytes`` / ``out_bytes`` /
+    ``transient_bytes``.  Remat-aware (checkpoint regions contribute saved
+    residuals only), scan carries counted once.
+  * ``memory_analysis`` — XLA's own per-device numbers
+    (``temp_size_in_bytes``, ``argument_size_in_bytes``, ...) for the
+    compiled, partitioned executable.
+
+  The pair is the estimated-vs-compiled cross-check at dry-run scale;
+  ``benchmarks/system_bench.py`` records the same estimator output next to
+  measured step times at smoke scale, and ``tests/test_memory.py`` pins
+  the estimate to ``memory.TOLERANCE_FACTOR`` of XLA's total on CPU.
+
 Usage:
   python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
   python -m repro.launch.dryrun --all [--mesh single|multi|both]
@@ -242,6 +258,8 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
             if shape.kind == "train":
                 rec["norm_rules"] = cell_norm_rules(arch, shape)
             analytic = jaxpr_costs(fn, *args)     # global, scan-aware
+            from repro.launch.memory import jaxpr_peak_bytes
+            rec["memory"] = jaxpr_peak_bytes(fn, *args).as_dict()
             lowered = fn.lower(*args)
             t1 = time.time()
             compiled = lowered.compile()

@@ -1,0 +1,440 @@
+"""Peak-live-HBM estimation: bytes *resident*, not bytes moved.
+
+The paper's workload characterization (§III) root-causes DP-SGD's
+bottleneck as a *memory-capacity* blowup — per-example gradients and held
+activations inflate the resident footprint versus non-private training.
+``launch/costs.py`` accounts bytes *moved*; this module accounts bytes
+*live*: a liveness walk over the traced train-step jaxpr that returns the
+peak number of simultaneously-resident bytes, plus a per-phase breakdown
+(params / optimizer state / batch / gradient accumulators / the
+per-example-grad side-channel) that mirrors the paper's Fig. 4 taxonomy.
+
+Estimator model (``jaxpr_peak_bytes``):
+
+* **Liveness over eqns** — every equation output is an allocation; a value
+  is freed after its last use.  Peak = max over program points of the sum
+  of live bytes (arguments + outputs + transients).
+* **Remat-aware** — a ``jax.checkpoint`` region (``remat2`` eqn) contributes
+  its *saved residuals* (= the eqn's outputs) to outer liveness; the
+  recompute inside is a transient bounded by the region's own inner peak.
+  This is what makes ``remat="none" / "block" / "sites"`` visibly different
+  to the estimator, exactly as they are to the compiler.
+* **Scan carries counted once, not x length** — a ``scan`` eqn costs its
+  body's per-iteration peak (which holds one carry + one ys slice) plus
+  one xs slice per stacked input; the stacked xs/ys arrays themselves
+  live at the *outer* level as eqn inputs/outputs.
+* **Donated args excluded** — donated arguments are freed after their last
+  use like any transient instead of being held for the whole program.
+
+Accuracy contract: the estimate is an *upper-bound-flavored approximation*
+of ``compiled.memory_analysis()`` (XLA additionally fuses elementwise
+chains, schedules for reuse, and aliases buffers).  The documented
+tolerance is ``TOLERANCE_FACTOR``: on the small CPU cross-check configs of
+``tests/test_memory.py`` the estimate stays within a factor of
+``TOLERANCE_FACTOR`` of XLA's ``temp + args + outputs`` total.  Consumers
+(`launch/dryrun.py` memory cells, the trainer's auto-microbatch search,
+``benchmarks/system_bench.py``) treat it as a *ranking/sizing* signal with
+that tolerance, never as an exact byte count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.launch.costs import _aval_bytes
+
+# Documented estimator-vs-XLA tolerance (see module docstring and the
+# cross-check tests): estimate / (temp + args + outputs) ∈ [1/4, 4] on the
+# small CPU configs.  XLA's scheduling freedom (fusion, buffer reuse,
+# rematerialization of cheap ops) is why this is a factor, not a percent.
+TOLERANCE_FACTOR = 4.0
+
+_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr",
+                  "body_jaxpr")
+
+
+def _inner_jaxpr(obj):
+    return obj.jaxpr if hasattr(obj, "jaxpr") else obj
+
+
+def _var_bytes(v) -> int:
+    aval = v.aval
+    if not hasattr(aval, "shape"):
+        return 0
+    try:
+        return _aval_bytes(aval)
+    except TypeError:
+        # extended dtypes (PRNG key arrays): itemsize from the dtype when it
+        # exposes one, else the Threefry default of 2 x uint32
+        itemsize = getattr(aval.dtype, "itemsize", 8)
+        return int(np.prod(aval.shape, dtype=np.int64)) * int(itemsize)
+
+
+def _eqn_transient(eqn) -> Tuple[float, bool]:
+    """``(inner_peak, covers_outputs)`` for one eqn.
+
+    ``inner_peak`` is the recursive peak of a call-like eqn's body;
+    ``covers_outputs`` says whether that peak already *includes* the eqn's
+    own outputs (true for plain call-like bodies, whose outvars are held
+    live through the body's end) — the caller must then not add
+    ``out_bytes`` on top at the same program point, or every pjit /
+    checkpoint region's results (saved residuals!) would be counted twice.
+    Scan is the exception: its stacked ys buffers are fully allocated
+    *during* the loop while the body peak holds only per-iteration slices,
+    so outer outputs and inner peak genuinely coexist.
+    """
+    name = eqn.primitive.name
+    if name == "scan":
+        inner = _inner_jaxpr(eqn.params["jaxpr"])
+        n_consts = eqn.params["num_consts"]
+        # one xs slice per stacked input (the body's ys slices and the
+        # once-counted carry are already inside the body peak, which holds
+        # its outvars to its end)
+        n_carry = eqn.params["num_carry"]
+        slice_bytes = sum(_var_bytes(v)
+                          for v in inner.invars[n_consts + n_carry:])
+        return jaxpr_transient_peak(inner) + slice_bytes, False
+    if name == "while":
+        return jaxpr_transient_peak(
+            _inner_jaxpr(eqn.params["body_jaxpr"])), True
+    if name == "cond":
+        return max((jaxpr_transient_peak(_inner_jaxpr(br))
+                    for br in eqn.params["branches"]), default=0.0), True
+    if name == "pallas_call":
+        return 0.0, False   # kernel-internal tiles live in VMEM, not HBM
+    for key in _SUBJAXPR_KEYS:
+        if key in eqn.params:
+            return jaxpr_transient_peak(_inner_jaxpr(eqn.params[key])), True
+    return 0.0, False
+
+
+def jaxpr_transient_peak(jaxpr, freeable_inputs: Optional[Dict] = None
+                         ) -> float:
+    """Peak bytes allocated during execution of ``jaxpr``'s equations,
+    *excluding* its invars/constvars (counted by the caller) but including
+    its outvars (they are live when the last eqn finishes).
+
+    For a ``remat2`` body this is exactly the recompute transient: callers
+    see only the eqn's outputs (the saved residuals) at their own level.
+
+    ``freeable_inputs``: ``{invar: bytes}`` inputs that start live but may
+    be released after their last use (donated buffers) — they join the
+    liveness tracking instead of the caller's always-resident floor.
+    """
+    from jax._src import core as jcore
+    last_use: Dict[Any, int] = {}
+    n_eqns = len(jaxpr.eqns)
+    for i, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.invars:
+            if isinstance(v, jcore.Var):
+                last_use[v] = i
+    inputs = set()
+    for v in list(jaxpr.invars) + list(jaxpr.constvars):
+        if isinstance(v, jcore.Var):
+            inputs.add(v)
+    for v in jaxpr.outvars:
+        if isinstance(v, jcore.Var):
+            last_use[v] = n_eqns    # live through the end
+
+    alive: Dict[Any, int] = {}
+    live = 0.0
+    for v, b in (freeable_inputs or {}).items():
+        alive[v] = b
+        live += b
+    peak = live
+    for i, eqn in enumerate(jaxpr.eqns):
+        out_bytes = 0
+        newly = []
+        for v in eqn.outvars:
+            if isinstance(v, jcore.DropVar) or v in inputs:
+                continue
+            b = _var_bytes(v)
+            out_bytes += b
+            newly.append((v, b))
+        inner, covers_outputs = _eqn_transient(eqn)
+        during = max(inner, out_bytes) if covers_outputs \
+            else inner + out_bytes
+        peak = max(peak, live + during)
+        live += out_bytes
+        for v, b in newly:
+            alive[v] = b
+        # free everything whose last use was this eqn (outputs never used
+        # again — dead code — free immediately too: last_use is absent)
+        for v, b in list(alive.items()):
+            if last_use.get(v, -1) <= i:
+                live -= b
+                del alive[v]
+    return peak
+
+
+@dataclasses.dataclass(frozen=True)
+class PeakEstimate:
+    """Estimator output (all byte counts are *global*, pre-sharding)."""
+    arg_bytes: int              # non-donated program inputs, resident
+    donated_bytes: int          # donated inputs (freed at last use)
+    out_bytes: int              # program outputs
+    transient_bytes: int        # peak of everything allocated mid-program
+    peak_bytes: int             # arg_bytes + transient peak (the headline)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def jaxpr_peak_bytes(fn, *abstract_args,
+                     donate_argnums: Sequence[int] = ()) -> PeakEstimate:
+    """Trace ``fn`` with abstract args and estimate its peak resident bytes.
+
+    ``donate_argnums`` marks *top-level* arguments whose buffers the caller
+    donates: their bytes are excluded from the always-resident argument
+    floor (XLA reuses them for outputs/temps).
+    """
+    closed = jax.make_jaxpr(fn)(*abstract_args)
+    jaxpr = closed.jaxpr
+    flat_donated: set = set()
+    if donate_argnums:
+        # map top-level arg positions to their flattened invars
+        offsets = []
+        pos = 0
+        for a in abstract_args:
+            n = len(jax.tree.leaves(a))
+            offsets.append((pos, pos + n))
+            pos += n
+        for i in donate_argnums:
+            lo, hi = offsets[i]
+            flat_donated.update(range(lo, hi))
+    arg_bytes = 0
+    donated_bytes = 0
+    freeable: Dict[Any, int] = {}
+    for i, v in enumerate(jaxpr.invars):
+        b = _var_bytes(v)
+        if i in flat_donated:
+            donated_bytes += b
+            freeable[v] = b     # live from start, reusable after last use
+        else:
+            arg_bytes += b
+    # trace-time-hoisted constants (closed.consts: baked masks/tables) are
+    # resident exactly like non-donated arguments
+    arg_bytes += sum(_var_bytes(v) for v in jaxpr.constvars)
+    out_bytes = sum(_var_bytes(v) for v in jaxpr.outvars
+                    if hasattr(v, "aval"))
+    transient = jaxpr_transient_peak(jaxpr, freeable_inputs=freeable)
+    peak = arg_bytes + transient
+    return PeakEstimate(arg_bytes=int(arg_bytes),
+                        donated_bytes=int(donated_bytes),
+                        out_bytes=int(out_bytes),
+                        transient_bytes=int(transient),
+                        peak_bytes=int(peak))
+
+
+# ---------------------------------------------------------------------------
+# Train-step estimation with the Fig.-4-style phase breakdown
+# ---------------------------------------------------------------------------
+
+def _tree_bytes(tree) -> int:
+    return int(sum(_aval_bytes(l) for l in jax.tree.leaves(tree)
+                   if hasattr(l, "shape")))
+
+
+def abstract_like(tree):
+    """ShapeDtypeStruct twin of a concrete pytree (the one idiom shared by
+    the trainer's memory_report and the benchmarks)."""
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        tree)
+
+
+def per_device_peak_bytes(est: dict, shards: int) -> int:
+    """Per-device peak from a global ``estimate_train_memory`` dict on a
+    ``shards``-wide batch axis: parameters and optimizer state are assumed
+    replicated (conservative — ZeRO-1/FSDP only shrink them), everything
+    else (batch, activations, per-example channel) shards with the batch.
+    ``shards == 1`` returns the global peak unchanged."""
+    if shards <= 1:
+        return int(est["peak_bytes"])
+    resident = est.get("params_bytes", 0) + est.get("opt_state_bytes", 0)
+    sharded = max(est["peak_bytes"] - resident, 0)
+    return int(resident + -(-sharded // shards))
+
+
+def abstract_batch(arch, batch_size: int, seq_len: int) -> dict:
+    """ShapeDtypeStruct batch for a train cell of ``arch`` (images for
+    family="cnn", next-token text otherwise), f32 inputs."""
+    import jax.numpy as jnp
+    if arch.family == "cnn":
+        c = arch.cnn
+        return {"images": jax.ShapeDtypeStruct(
+                    (batch_size, c.image_size, c.image_size, c.in_channels),
+                    jnp.float32),
+                "labels": jax.ShapeDtypeStruct((batch_size,), jnp.int32)}
+    if arch.embed_stub:
+        return {"embeds": jax.ShapeDtypeStruct(
+                    (batch_size, seq_len, arch.d_model), jnp.float32),
+                "labels": jax.ShapeDtypeStruct((batch_size, seq_len),
+                                               jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((batch_size, seq_len + 1),
+                                           jnp.int32)}
+
+
+def per_example_grad_bytes(dp, batch_size: int, grad_accum: int,
+                           param_elems: int) -> int:
+    """Size of the per-example-grad side channel, shared with the
+    analytical accelerator model (sim/dataflow.py ``pegrad_spill_bytes``):
+    vanilla DP-SGD materializes one f32 gradient per example of its vmap
+    chunk; the reweighted algorithms carry only the (B,) f32 norm
+    accumulator."""
+    from repro.sim.dataflow import pegrad_spill_bytes
+    if not dp.enabled or dp.algo == "sgd":
+        return 0
+    if dp.algo == "dpsgd":
+        chunk = batch_size // max(1, grad_accum)
+        if dp.microbatch:
+            chunk = min(chunk, dp.microbatch)
+        return int(pegrad_spill_bytes(chunk, param_elems))
+    return 4 * batch_size           # the (B,) f32 norm side channel
+
+
+def abstract_step_args(model, train_cfg) -> tuple:
+    """Abstract ``(state, key)`` for the trainer's step function — the one
+    assembly shared by the estimator, the launcher's compiled cross-check
+    and the tests, so all three always describe the same step signature."""
+    import jax.numpy as jnp
+    from repro.optim import make_optimizer
+    from repro.train.state import TrainState
+    from repro.train.trainer import make_opt_init
+    params_abs = model.abstract_params()
+    opt = make_optimizer(train_cfg.optim)
+    opt_abs = jax.eval_shape(make_opt_init(train_cfg, opt), params_abs)
+    state_abs = TrainState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                           params=params_abs, opt_state=opt_abs)
+    key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return state_abs, key_abs
+
+
+def estimate_train_memory(model, train_cfg, batch_abs,
+                          expected_batch_size: Optional[float] = None) -> dict:
+    """Estimate the resident-memory footprint of one optimizer step.
+
+    Returns the ``PeakEstimate`` fields plus the phase breakdown::
+
+        params_bytes / opt_state_bytes / batch_bytes   resident state
+        grad_bytes                                     f32 gradient tree
+        per_example_grad_bytes                         the DP side channel
+        transient_bytes / peak_bytes                   from the jaxpr walk
+
+    ``batch_abs`` is a ShapeDtypeStruct tree (see ``abstract_batch``); the
+    step traced is exactly the trainer's (``train/trainer.py``
+    ``make_train_step``), so remat policy, algorithm, grad_accum and
+    microbatch all shape the estimate.
+    """
+    from repro.train.trainer import make_train_step
+
+    step_fn = make_train_step(model, train_cfg,
+                              expected_batch_size=expected_batch_size)
+    state_abs, key_abs = abstract_step_args(model, train_cfg)
+    est = jaxpr_peak_bytes(step_fn, state_abs, batch_abs, key_abs)
+
+    params_abs = state_abs.params
+    params_bytes = _tree_bytes(params_abs)
+    param_elems = sum(int(np.prod(l.shape))
+                      for l in jax.tree.leaves(params_abs))
+    B = jax.tree.leaves(batch_abs)[0].shape[0]
+    out = est.as_dict()
+    out.update({
+        "params_bytes": params_bytes,
+        "opt_state_bytes": _tree_bytes(state_abs.opt_state),
+        "batch_bytes": _tree_bytes(batch_abs),
+        "grad_bytes": 4 * param_elems,          # f32 gradient tree
+        "per_example_grad_bytes": per_example_grad_bytes(
+            train_cfg.dp, B, train_cfg.grad_accum, param_elems),
+        "remat": train_cfg.remat,
+        "algo": train_cfg.dp.algo if train_cfg.dp.enabled else "sgd",
+        "grad_accum": int(train_cfg.grad_accum),
+        "batch_size": int(B),
+    })
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Budget-driven auto-microbatching (MemConfig)
+# ---------------------------------------------------------------------------
+
+def _accum_candidates(train_cfg, shape, shards: int) -> list:
+    """Feasible grad_accum values, ascending (largest microbatch first).
+
+    Fixed sampling: divisors of the global batch whose chunk also divides
+    over the mesh's batch-axis width and the vanilla-DP-SGD microbatch.
+    Poisson: every accum is feasible — the padded capacity re-rounds to
+    lcm(grad_accum·microbatch, shards) per candidate (PR-3 rounding) —
+    but we keep the same divisor ladder for a deterministic search space.
+    """
+    B = shape.global_batch
+    mb = max(1, train_cfg.dp.microbatch)
+    cands = []
+    for g in range(1, B + 1):
+        if B % g:
+            continue
+        chunk = B // g
+        if chunk % mb:
+            continue
+        if train_cfg.dp.sampling != "poisson" and chunk % shards:
+            continue
+        cands.append(g)
+    return cands
+
+
+def pick_grad_accum(model, train_cfg, shape, dataset_size: int = 1_000_000,
+                    shards: int = 1) -> Tuple[int, dict]:
+    """Pick the smallest grad_accum (= largest microbatch) whose estimated
+    peak fits ``train_cfg.mem.hbm_budget_bytes``.
+
+    Returns ``(grad_accum, estimate_dict)``.  Raises ``ValueError`` when
+    even the smallest feasible split exceeds the budget — that is a
+    capacity planning error the launcher must surface, not paper over.
+    The physical batch each candidate is estimated at is the trainer's
+    own ``physical_batch_size`` (Poisson capacity lcm-rounding included).
+
+    The budget is *per device* (MemConfig contract); each candidate's
+    global estimate is normalized by the ``shards``-wide batch axis via
+    ``per_device_peak_bytes`` (params/opt-state replicated, the rest
+    batch-sharded) before the comparison — the normalized figure is
+    returned in the estimate dict as ``per_device_peak_bytes``.
+    """
+    import dataclasses as dc
+    from repro.train.trainer import physical_batch_size
+
+    budget = train_cfg.mem.hbm_budget_bytes
+    if budget <= 0:
+        raise ValueError("pick_grad_accum needs mem.hbm_budget_bytes > 0")
+    expected = (float(shape.global_batch)
+                if train_cfg.dp.sampling == "poisson" else None)
+    candidates = _accum_candidates(train_cfg, shape, shards)
+    if not candidates:
+        # a divisibility misconfiguration, not a budget problem — say so
+        raise ValueError(
+            f"no feasible grad_accum split at all: global_batch="
+            f"{shape.global_batch} has no divisor whose chunk also divides "
+            f"microbatch={max(1, train_cfg.dp.microbatch)} and "
+            f"batch-axis width={shards} (sampling="
+            f"{train_cfg.dp.sampling!r}); fix the batch/mesh/microbatch "
+            f"divisibility — no budget can")
+    tried = []
+    for g in candidates:
+        cfg_g = dc.replace(train_cfg, grad_accum=g)
+        cap = physical_batch_size(cfg_g, shape, dataset_size, shards=shards)
+        batch_abs = abstract_batch(model.arch, cap, shape.seq_len)
+        est = estimate_train_memory(model, cfg_g, batch_abs,
+                                    expected_batch_size=expected)
+        est["capacity"] = int(cap)
+        est["per_device_peak_bytes"] = per_device_peak_bytes(est, shards)
+        tried.append((g, est["per_device_peak_bytes"]))
+        if est["per_device_peak_bytes"] <= budget:
+            return g, est
+    lines = ", ".join(f"grad_accum={g}: {p / 1e9:.3f} GB" for g, p in tried)
+    raise ValueError(
+        f"no microbatch split fits hbm_budget_bytes={budget} "
+        f"({budget / 1e9:.3f} GB/device); estimated per-device peaks "
+        f"({shards}-wide batch axis): {lines}. "
+        f"Raise the budget, shrink the batch, or use remat.")

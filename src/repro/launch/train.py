@@ -112,6 +112,27 @@ def main() -> None:
                              zero1=cfg.zero1)
         state = jax.tree.map(
             lambda x, s: jax.device_put(x, s), state, sh)
+        # estimated-vs-compiled peak, logged every launch so estimator
+        # drift (and the remat policy's effect) is visible in production
+        rep = trainer.memory_report(
+            state, shard_batch(trainer.make_batch(int(state.step))),
+            jax.random.PRNGKey(cfg.seed), compile=cfg.mem.compiled_check)
+        xla = rep.get("xla_peak_bytes")
+        print(f"[train] memory: estimated peak "
+              f"{rep['peak_bytes'] / 1e9:.3f} GB (remat={cfg.remat}, "
+              f"grad_accum={trainer.cfg.grad_accum}, "
+              f"per-example side-channel "
+              f"{rep['per_example_grad_bytes'] / 1e9:.3f} GB)"
+              + (f"; compiled peak {xla / 1e9:.3f} GB "
+                 f"(estimate/xla {rep['estimate_vs_xla']:.2f})"
+                 if xla else ""))
+        from repro.launch.memory import per_device_peak_bytes
+        per_dev = per_device_peak_bytes(rep, batch_axis_width(mesh))
+        if cfg.mem.hbm_budget_bytes and per_dev > cfg.mem.hbm_budget_bytes:
+            print(f"[train] WARNING estimated per-device peak "
+                  f"{per_dev / 1e9:.3f} GB exceeds mem.hbm_budget_bytes="
+                  f"{cfg.mem.hbm_budget_bytes / 1e9:.3f} GB "
+                  f"(set mem.auto_microbatch=true to split the batch)")
         state = trainer.run(state)
         eps = trainer.accountant.epsilon_at(int(state.step))
         print(f"[train] finished at step {int(state.step)}; "

@@ -162,7 +162,11 @@ class CNNModel:
     arch: ArchConfig
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
-    remat: str = "block"
+    remat: str = "block"           # none | block | sites (validated below)
+
+    def __post_init__(self):
+        from repro.configs.base import validate_remat
+        validate_remat(self.arch.family, self.remat)
 
     # -- params ----------------------------------------------------------
     def abstract_params(self):
@@ -202,8 +206,7 @@ class CNNModel:
                     y, c = self._block(bp_, x_, c, stride)
                     return y, c.acc
 
-                if self.remat == "block":
-                    run = jax.checkpoint(run)
+                run = L.remat_wrap(run, self.remat)
                 x, acc = run(bp, x, ctx.acc)
                 ctx = dc_replace(ctx, acc=acc)
         x, ctx = L.rmsnorm_nd(x, params["final_norm"], ctx,

@@ -91,6 +91,38 @@ def largest_divisor_leq(n: int, cap: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Remat policies (configs/base.py REMAT_POLICIES is the vocabulary)
+# ---------------------------------------------------------------------------
+
+def remat_wrap(fn, remat: str):
+    """Wrap a block function in the configured activation-checkpointing
+    policy.  ``"none"`` stores everything, ``"block"`` stores only block
+    boundaries, ``"sites"`` stores exactly the checkpoint_name-tagged site
+    operands the DP norm rules consume (core/sites.py SAVE_SITE_NAME) and
+    recomputes the rest.  Unknown policies raise via ``validate_remat`` —
+    never a silent fall-through to no checkpointing."""
+    from repro.configs.base import REMAT_POLICIES
+    if remat == "none":
+        return fn
+    if remat == "block":
+        return jax.checkpoint(fn)
+    if remat == "sites":
+        from repro.core.sites import SAVE_SITE_NAME
+        policy = jax.checkpoint_policies.save_only_these_names(SAVE_SITE_NAME)
+        return jax.checkpoint(fn, policy=policy)
+    raise ValueError(f"unknown remat policy {remat!r}; known policies: "
+                     f"{sorted(REMAT_POLICIES)}")
+
+
+def inner_remat(remat: str) -> bool:
+    """Whether the fine-grained inner checkpoints (attention query blocks,
+    SSD chunks) are active: any checkpointing policy keeps them — they are
+    what bounds the O(T²)/O(Q²) score blocks — and only ``"none"`` (store
+    everything) drops them."""
+    return remat != "none"
+
+
+# ---------------------------------------------------------------------------
 # Attention
 # ---------------------------------------------------------------------------
 
@@ -112,12 +144,16 @@ def attn_spec(cfg) -> dict:
     return spec
 
 
-def _causal_blocked_attention(q, k, v, block_q: int):
+def _causal_blocked_attention(q, k, v, block_q: int, remat: str = "block"):
     """Exact causal attention, scanned over query blocks to bound memory.
 
     q: (B, T, KV, rep, hd); k/v: (B, S, KV, hd).  Returns (B, T, KV, rep, hd).
     FLOP note: off-diagonal future blocks are masked, not skipped (2x causal
     waste); the Pallas flash kernel removes this on TPU (§Perf).
+
+    The per-query-block ``jax.checkpoint`` (which keeps the (bq, S) score
+    block transient) follows the model's remat policy: active under
+    "block"/"sites", dropped under "none" (layers.inner_remat).
     """
     B, T, KV, rep, hd = q.shape
     S = k.shape[1]
@@ -137,15 +173,18 @@ def _causal_blocked_attention(q, k, v, block_q: int):
         o = jnp.einsum("bkrqs,bskh->bqkrh", p.astype(v.dtype), v)
         return o
 
+    blk = jax.checkpoint(one_block) if inner_remat(remat) else one_block
+
     def body(carry, inp):
         i, qi = inp
-        return carry, jax.checkpoint(one_block)(i, qi)
+        return carry, blk(i, qi)
 
     _, ob = jax.lax.scan(body, (), (jnp.arange(nq), qb.swapaxes(0, 1)))
     return ob.swapaxes(0, 1).reshape(B, T, KV, rep, hd)
 
 
-def attn_apply(p, x, ctx: DPContext, cfg, pos, block_q: int = 512):
+def attn_apply(p, x, ctx: DPContext, cfg, pos, block_q: int = 512,
+               remat: str = "block"):
     """Training/prefill attention. x: (B,T,d); pos: (B,T). Returns y, ctx, kv."""
     B, T, d = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -169,7 +208,7 @@ def attn_apply(p, x, ctx: DPContext, cfg, pos, block_q: int = 512):
             lambda qq, kk, vv: kops.flash_attention(qq, kk, vv, True), KV)
         o = flash(qg, k, v)
     else:
-        o = _causal_blocked_attention(qg, k, v, block_q)
+        o = _causal_blocked_attention(qg, k, v, block_q, remat)
     o = o.reshape(B, T, H * hd)
     y, ctx = ctx.dense(o, p["wo"])
     return y, ctx, (k, v)

@@ -84,14 +84,17 @@ def _segsum(loga):
     return jnp.where(mask, diff, -jnp.inf)
 
 
-def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None,
+                remat: str = "block"):
     """SSD scan, sequential over chunks (bounded memory: one chunk's
     (B,H,Q,Q) score block alive at a time; remat recomputes it in bwd).
 
     xh: (B,T,H,P) inputs; dt: (B,T,H) (post-softplus); A: (H,) or (B,1,H)
     negative decay rates; Bm/Cm: (B,T,G,N).  Returns (y (B,T,H,P),
-    final_state (B,H,P,N))."""
-    from repro.models.layers import largest_divisor_leq
+    final_state (B,H,P,N)).  The per-chunk ``jax.checkpoint`` follows the
+    model remat policy: active under "block"/"sites", dropped under
+    "none" (layers.inner_remat)."""
+    from repro.models.layers import inner_remat, largest_divisor_leq
     B, T, H, Pd = xh.shape
     G, N = Bm.shape[2], Bm.shape[3]
     rep = H // G
@@ -127,14 +130,15 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
 
     S0 = (jnp.zeros((B, H, Pd, N), F32) if init_state is None
           else init_state.astype(F32))
-    S_final, ys = jax.lax.scan(jax.checkpoint(one_chunk), S0,
-                               (xc, dtc, dac, Bc, Cc))
+    chunk_fn = jax.checkpoint(one_chunk) if inner_remat(remat) else one_chunk
+    S_final, ys = jax.lax.scan(chunk_fn, S0, (xc, dtc, dac, Bc, Cc))
     y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, Pd)
     return y, S_final
 
 
 def mamba_apply(p, x, ctx: DPContext, cfg,
-                conv_state=None, ssm_state=None, want_cache: bool = False):
+                conv_state=None, ssm_state=None, want_cache: bool = False,
+                remat: str = "block"):
     """Full-sequence Mamba2 mixer. x: (B,T,d). Returns (y, ctx, cache)."""
     B, T, d = x.shape
     d_in, H, G, N, K, Pd = mamba_dims(cfg)
@@ -151,7 +155,8 @@ def mamba_apply(p, x, ctx: DPContext, cfg,
     xh = xin.reshape(B, T, H, Pd)
     y, S_final = ssd_chunked(xh, dt, A,
                              Bm.reshape(B, T, G, N), Cm.reshape(B, T, G, N),
-                             cfg.mamba.chunk, init_state=ssm_state)
+                             cfg.mamba.chunk, init_state=ssm_state,
+                             remat=remat)
     Dp, ctx = ctx.tap(p["D"], 1, B)                                # (B,1,H)|(H,)
     y = y + Dp[..., None].astype(F32) * xh.astype(F32)
     y = y.reshape(B, T, d_in).astype(x.dtype)

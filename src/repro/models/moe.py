@@ -10,6 +10,14 @@ would dominate FLOPs.  The scatter/gather pair is linear, so AD transposes
 it for free.  Expert parallelism: the E dim of expert weights and dispatch
 buffers carries the "expert" logical axis -> sharded over the model mesh
 axis when divisible, else tensor-parallel over d_expert (dist/sharding.py).
+
+Remat: MoE layers run inside the transformer's per-block checkpoint, so
+all three policies (configs/base.REMAT_POLICIES) cover them.  Under
+``remat="sites"`` the ``moe_dense`` sites' dispatch buffers (the ``xd``/
+``h`` operands below) are checkpoint_name-tagged by the registry
+(core/sites.py ``save_operands``) and saved as residuals — the (B,E,C,d)
+buffers the norm rules need are kept, while the router softmax, sort
+ranks and combine gather are recomputed.
 """
 from __future__ import annotations
 

@@ -77,17 +77,17 @@ def layer_spec(arch: ArchConfig, sig: Tuple[str, bool]) -> Dict[str, Any]:
 
 
 def apply_layer(sig, p, x, ctx: DPContext, arch: ArchConfig, pos,
-                cache=None, want_cache: bool = False):
+                cache=None, want_cache: bool = False, remat: str = "block"):
     """Full-sequence layer (train / prefill).  Returns (x, ctx, aux, cache)."""
     kind, is_moe = sig
     aux = None
     h, ctx = L.rmsnorm(x, p["ln1"], ctx, arch.norm_eps)
     if kind == ATTN:
-        y, ctx, kv = L.attn_apply(p["attn"], h, ctx, arch, pos)
+        y, ctx, kv = L.attn_apply(p["attn"], h, ctx, arch, pos, remat=remat)
         new_cache = kv if want_cache else None
     else:
         y, ctx, new_cache = mamba2.mamba_apply(
-            p["mamba"], h, ctx, arch, want_cache=want_cache)
+            p["mamba"], h, ctx, arch, want_cache=want_cache, remat=remat)
     x = x + y
     if arch.d_ff > 0:
         h, ctx = L.rmsnorm(x, p["ln2"], ctx, arch.norm_eps)
@@ -243,7 +243,11 @@ class Model:
     arch: ArchConfig
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
-    remat: str = "block"
+    remat: str = "block"           # none | block | sites (validated below)
+
+    def __post_init__(self):
+        from repro.configs.base import validate_remat
+        validate_remat(self.arch.family, self.remat)
 
     # -- params ----------------------------------------------------------
     def abstract_params(self):
@@ -271,7 +275,9 @@ class Model:
         pre_caches = []
         for i in range(pre):
             x, ctx, aux, c = apply_layer(layer_sig(arch, i), params["prelude"][i],
-                                         x, ctx, arch, pos, want_cache=want_cache)
+                                         x, ctx, arch, pos,
+                                         want_cache=want_cache,
+                                         remat=self.remat)
             if aux is not None:
                 aux_total = aux_total + aux
             pre_caches.append(c)
@@ -288,13 +294,14 @@ class Model:
                 for j in range(period):
                     xx, c_l, aux, cc = apply_layer(sigs[j], bp[j], xx, c_l,
                                                    arch, pos,
-                                                   want_cache=want_cache)
+                                                   want_cache=want_cache,
+                                                   remat=self.remat)
                     if aux is not None:
                         aux_t = aux_t + aux
                     caches.append(cc)
                 return (xx, c_l.acc, aux_t), tuple(caches)
 
-            fn = jax.checkpoint(block_fn) if self.remat == "block" else block_fn
+            fn = L.remat_wrap(block_fn, self.remat)
             (x, acc, aux_total), blocks_cache = jax.lax.scan(
                 fn, (x, ctx.acc, aux_total), params["blocks"])
             ctx = dc_replace(ctx, acc=acc)

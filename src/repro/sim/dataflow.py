@@ -67,6 +67,20 @@ def _ceil(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def pegrad_spill_bytes(batch: int, weight_elems: int) -> float:
+    """DRAM bytes of the materialized per-example weight gradients: one f32
+    gradient per example (paper Fig. 4's dominant DP-SGD allocation).
+
+    The single sizing rule shared by the analytical accelerator model
+    (``dp_training_time`` below prices spilling/fetching exactly this many
+    bytes on non-PPU dataflows) and the JAX-side resident-memory estimator
+    (``launch/memory.py::per_example_grad_bytes``) — so the two accountings
+    can be cross-checked against each other in one test
+    (tests/test_memory.py).
+    """
+    return float(batch) * float(weight_elems) * BYTES_OUT
+
+
 def gemm_cycles(acc: Accel, g: GEMM) -> float:
     m, k, n = g
     h, w = acc.pe_h, acc.pe_w
@@ -123,7 +137,7 @@ def dp_training_time(acc: Accel, layers: Iterable, batch: int,
         bd.forward += gemm_time(acc, L.fwd(batch))
         bd.dgrad += gemm_time(acc, L.dgrad(batch))
         w_elems = L.weight_elems()
-        norm_bytes = batch * w_elems * BYTES_OUT
+        norm_bytes = pegrad_spill_bytes(batch, w_elems)
         # per-example weight gradients: B independent small-K GEMMs whose
         # operands are SRAM-resident (they were just produced); only the
         # per-example grad spill (if any) touches DRAM.

@@ -121,6 +121,30 @@ class Trainer:
         # to a step-invariant capacity (static shapes -> one compile); the
         # noisy sum is normalized by the *expected* batch size q.N.
         dataset_size = getattr(self.source, "dataset_size", 1_000_000)
+
+        # -- memory plan (MemConfig) -------------------------------------
+        # auto_microbatch: pick the largest microbatch (smallest grad_accum)
+        # whose estimated peak fits the HBM budget, *before* the capacity /
+        # step-fn construction below so the Poisson lcm rounding sees the
+        # chosen grad_accum (launch/memory.py owns the search)
+        self.mem_estimate = None
+        if train_cfg.mem.auto_microbatch and \
+                train_cfg.mem.hbm_budget_bytes > 0:
+            from repro.launch.memory import pick_grad_accum
+            accum, est = pick_grad_accum(model, train_cfg, shape,
+                                         dataset_size=dataset_size,
+                                         shards=batch_multiple)
+            if accum != train_cfg.grad_accum:
+                print(f"[trainer] auto_microbatch: grad_accum "
+                      f"{train_cfg.grad_accum} -> {accum} (estimated "
+                      f"per-device peak "
+                      f"{est['per_device_peak_bytes'] / 1e9:.3f} GB <= "
+                      f"budget "
+                      f"{train_cfg.mem.hbm_budget_bytes / 1e9:.3f} GB)")
+            train_cfg = dataclasses.replace(train_cfg, grad_accum=accum)
+            self.cfg = train_cfg
+            self.mem_estimate = est
+
         self.sampling = train_cfg.dp.sampling
         self.sample_rate = shape.global_batch / dataset_size
         # batch_multiple: the mesh's batch-axis device width (launchers) so
@@ -186,6 +210,43 @@ class Trainer:
             state = dataclasses.replace(state, step=state.step + token)
             return fn(state, batch, key)
         return wrapped
+
+    # -- memory ------------------------------------------------------------
+    def memory_report(self, state, batch, key, compile: bool = True) -> dict:
+        """Estimated vs compiled peak memory of the jitted step.
+
+        Returns the launch/memory.py estimate dict plus, when ``compile``
+        and the step is jitted, XLA's own ``memory_analysis`` numbers
+        (``xla_*`` keys) and the estimate/XLA ratio — the launcher logs
+        this once per launch so estimator drift is visible in every run.
+
+        Scale note: the estimate is *global* (pre-partitioning) while
+        XLA's numbers are *per device*, so on an N-device mesh a healthy
+        ratio approaches N where sharding is effective (``n_devices`` is
+        included in the dict for exactly this normalization).
+        """
+        from repro.launch.memory import abstract_like, estimate_train_memory
+        abstract = abstract_like(batch)
+        expected = (float(self.shape.global_batch)
+                    if self.sampling == "poisson" else None)
+        est = estimate_train_memory(self.model, self.cfg, abstract,
+                                    expected_batch_size=expected)
+        if compile and hasattr(self.step_fn, "lower"):
+            mem = self.step_fn.lower(state, batch, key).compile() \
+                      .memory_analysis()
+            if mem is not None:
+                xla_total = (mem.temp_size_in_bytes
+                             + mem.argument_size_in_bytes
+                             + mem.output_size_in_bytes)
+                est.update({
+                    "xla_temp_bytes": int(mem.temp_size_in_bytes),
+                    "xla_argument_bytes": int(mem.argument_size_in_bytes),
+                    "xla_output_bytes": int(mem.output_size_in_bytes),
+                    "xla_peak_bytes": int(xla_total),
+                    "n_devices": jax.device_count(),
+                    "estimate_vs_xla": est["peak_bytes"] / max(xla_total, 1),
+                })
+        return est
 
     # -- lifecycle ---------------------------------------------------------
     def init_state(self, key) -> TrainState:

@@ -10,13 +10,13 @@ from repro.core.context import DPContext
 from repro.models import build_model_for
 
 
-def tiny_model(name: str, dropless: bool = False):
+def tiny_model(name: str, dropless: bool = False, remat: str = "block"):
     arch = reduced(ARCHS[name])
     if dropless and arch.moe.enabled:
         cf = arch.moe.num_experts / arch.moe.top_k
         arch = replace(arch, moe=replace(arch.moe, capacity_factor=cf))
     return arch, build_model_for(arch, param_dtype="float32",
-                                 compute_dtype="float32")
+                                 compute_dtype="float32", remat=remat)
 
 
 def make_batch(arch, key, B=4, T=32):
@@ -44,6 +44,50 @@ def oracle_per_example_norms_sq(model, params, batch) -> np.ndarray:
     gb = jax.vmap(lambda ex: jax.grad(one_loss)(params, ex))(batch)
     return sum(np.sum(np.asarray(g, np.float64).reshape(B, -1) ** 2, -1)
                for g in jax.tree.leaves(gb))
+
+
+def step_peak_bytes(train_cfg, arch=None, B: int = 8, T: int = 32) -> dict:
+    """Estimated resident-memory footprint of one optimizer step for a
+    (reduced-scale) config — the launch/memory.py estimate dict, with
+    ``peak_bytes`` as the headline.  ``arch`` defaults to the reduced
+    variant of ``train_cfg.arch``.  Shared by tests/test_memory.py's
+    estimator cross-checks and footprint regression pins."""
+    from repro.launch.memory import abstract_batch, estimate_train_memory
+    if arch is None:
+        arch = reduced(ARCHS[train_cfg.arch])
+    model = build_model_for(arch, param_dtype=train_cfg.param_dtype,
+                            compute_dtype=train_cfg.compute_dtype,
+                            remat=train_cfg.remat)
+    return estimate_train_memory(model, train_cfg, abstract_batch(arch, B, T))
+
+
+def assert_identical_updates(got, want, boundary_rtol: float = 0.0,
+                             boundary_atol: float = 1e-7):
+    """Assert two update trees (grads or param deltas) are identical.
+
+    ``boundary_rtol == 0``: strict bitwise equality on every leaf — the
+    contract between remat="block" and remat="sites" (same inner
+    checkpoint structure, residuals saved vs recomputed to the same bits).
+
+    ``boundary_rtol > 0``: leaves must match to that relative tolerance
+    with an ``boundary_atol`` floor — used across checkpoint-structure
+    *changes* (remat="none" vs the checkpointing policies), where JAX's
+    transpose reassociates multi-use cotangent sums (``add_any`` ordering)
+    at the block boundary: the math is identical but the float summation
+    order is not, an ULP-scale effect this bound pins so real regressions
+    (a wrong residual, a changed rule) cannot hide under it.
+    """
+    flat_g = jax.tree_util.tree_flatten_with_path(got)[0]
+    flat_w = jax.tree.leaves(want)
+    assert len(flat_g) == len(flat_w)
+    for (path, a), b in zip(flat_g, flat_w):
+        a, b = np.asarray(a), np.asarray(b)
+        label = jax.tree_util.keystr(path)
+        if boundary_rtol == 0.0:
+            np.testing.assert_array_equal(a, b, err_msg=label)
+        else:
+            np.testing.assert_allclose(a, b, rtol=boundary_rtol,
+                                       atol=boundary_atol, err_msg=label)
 
 
 def side_channel_norms_sq(model, params, batch, strategy="auto",

@@ -73,6 +73,24 @@ def test_dpsgd_equals_reweighted_variants(name, variant, key):
                                    rtol=1e-3, atol=1e-7)
 
 
+def test_dpsgd_equals_reweighted_under_sites_remat(key):
+    """One remat="sites" point in the tier-1 identity sweep: the named-
+    checkpoint policy (save exactly the site operands the norm rules
+    consume, recompute the rest) must preserve the three-algo equality —
+    the full policy matrix lives in tests/test_memory.py."""
+    arch, model = tiny_model("phi3-mini-3.8b", remat="sites")
+    params = model.init(key)
+    batch = make_batch(arch, key)
+    kw = dict(clip_norm=0.02, noise_multiplier=0.5)
+    fa = make_noisy_grad_fn(model.loss_fn, DPConfig(algo="dpsgd", **kw))
+    fb = make_noisy_grad_fn(model.loss_fn, DPConfig(algo="dpsgd_r", **kw))
+    ga, _ = fa(params, batch, jax.random.PRNGKey(7))
+    gb, _ = fb(params, batch, jax.random.PRNGKey(7))
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-7)
+
+
 def test_grad_accum_invariance(key):
     arch, model = tiny_model("phi3-mini-3.8b")
     params = model.init(key)

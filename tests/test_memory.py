@@ -1,0 +1,415 @@
+"""Memory-capacity subsystem: remat-identity matrix + estimator checks.
+
+Two suites lock the subsystem down:
+
+**Remat identity** — activation checkpointing must never change a single
+bit of any private update.  Comparisons run under ``jax.disable_jit()``
+(op-by-op execution), which removes XLA whole-program fusion from the
+picture and makes the claim exactly testable:
+
+* ``remat="block"`` vs ``remat="sites"`` — strict BITWISE equality of the
+  full optimizer step (gradients, metrics, updated params) for every
+  family x algorithm, incl. Poisson-masked batches and the Pallas-kernel
+  norm path.  The two policies share the checkpoint structure and differ
+  only in which residuals are saved vs recomputed; deterministic recompute
+  must reproduce the saved values to the bit.
+* ``remat="none"`` vs the checkpointing policies — losses and per-example
+  norms identical; updates within an ULP-scale pin (JAX's transpose
+  reassociates multi-use cotangent sums — ``add_any`` ordering — when the
+  checkpoint *structure* changes; measured max |diff| is ~5e-7 at these
+  scales, the pin is rtol=1e-5 / atol=2e-6 so any real semantic change
+  cannot hide under it).
+
+**Estimator** — launch/memory.py's peak-live-bytes estimate must stay
+within its documented ``TOLERANCE_FACTOR`` of XLA's
+``memory_analysis()`` total on small CPU configs; the DP-vs-SGD footprint
+gap must keep accounting the per-example-grad side channel (pinned
+against ``sim/dataflow.pegrad_spill_bytes`` — the cross-check between the
+jax-side and analytical-model accountings); and MemConfig's
+auto-microbatch search must respect budgets and the Poisson capacity's
+lcm rounding.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES
+from repro.configs.base import (DPConfig, MemConfig, OptimConfig,
+                                ShapeConfig, TrainConfig, validate_remat)
+from repro.core import make_noisy_grad_fn
+from repro.launch.memory import (TOLERANCE_FACTOR, abstract_batch,
+                                 estimate_train_memory, jaxpr_peak_bytes,
+                                 pick_grad_accum)
+from repro.optim import make_optimizer
+from repro.sim.dataflow import pegrad_spill_bytes
+
+from helpers import (assert_identical_updates, make_batch, step_peak_bytes,
+                     tiny_model)
+
+FAMILY_ARCHS = {"dense": "phi3-mini-3.8b", "ssm": "mamba2-1.3b",
+                "moe": "deepseek-moe-16b", "cnn": "cnn-cifar10"}
+ALGOS = ("sgd", "dpsgd", "dpsgd_r", "dpsgd_r1f")
+REMATS = ("none", "block", "sites")
+
+# ULP-scale pin for checkpoint-structure changes (see module docstring)
+BOUNDARY_RTOL, BOUNDARY_ATOL = 1e-5, 2e-6
+
+# fast representative diagonal (one algo per family); the rest of the
+# 4x4 matrix rides in the slow tier
+_FAST = {("dense", "dpsgd_r"), ("ssm", "dpsgd_r1f"), ("moe", "dpsgd"),
+         ("cnn", "sgd")}
+MATRIX = [pytest.param(fam, algo,
+                       marks=() if (fam, algo) in _FAST
+                       else pytest.mark.slow)
+          for fam in FAMILY_ARCHS for algo in ALGOS]
+
+
+def _one_step(name, algo, remat, key, masked=False, use_kernels=False,
+              B=4, T=16):
+    """One full optimizer step (grads -> adamw apply), op-by-op."""
+    arch, model = tiny_model(name, remat=remat)
+    params = model.init(key)
+    batch = make_batch(arch, key, B=B, T=T)
+    if masked:
+        batch = dict(batch)
+        batch["mask"] = jnp.asarray([True, False, True, True][:B])
+    dp = DPConfig(algo=algo, clip_norm=0.1, noise_multiplier=0.5,
+                  use_kernels=use_kernels)
+    grad_fn = make_noisy_grad_fn(model.loss_fn, dp)
+    opt = make_optimizer(OptimConfig(name="adamw"))
+    grads, metrics = grad_fn(params, batch, jax.random.PRNGKey(7))
+    new_params, _ = opt.apply(grads, opt.init(params), params,
+                              jnp.zeros((), jnp.int32))
+    delta = jax.tree.map(lambda n, o: n - o, new_params, params)
+    return grads, delta, metrics
+
+
+@pytest.mark.parametrize("family,algo", MATRIX)
+def test_remat_identity_matrix(family, algo, key):
+    """block == sites to the bit; none within the reassociation pin."""
+    name = FAMILY_ARCHS[family]
+    with jax.disable_jit():
+        out = {r: _one_step(name, algo, r, key) for r in REMATS}
+    # forward pass & per-example norms: identical across ALL policies
+    for r in ("block", "sites"):
+        for k in ("loss", "realized_batch"):
+            assert float(out[r][2][k]) == float(out["none"][2][k]), (r, k)
+    # the new policy vs the existing one: bit-identical optimizer step
+    assert_identical_updates(out["sites"][0], out["block"][0])
+    assert_identical_updates(out["sites"][1], out["block"][1])
+    for k, v in out["sites"][2].items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(out["block"][2][k]),
+                                      err_msg=k)
+    # checkpointing on/off: same math, pinned reassociation only
+    assert_identical_updates(out["none"][0], out["block"][0],
+                             boundary_rtol=BOUNDARY_RTOL,
+                             boundary_atol=BOUNDARY_ATOL)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_remat_identity_poisson_masked(family, key):
+    """Masked (Poisson-padded) batches keep the bitwise contract."""
+    name = FAMILY_ARCHS[family]
+    algo = "dpsgd_r" if family in ("dense", "cnn") else "dpsgd_r1f"
+    with jax.disable_jit():
+        out = {r: _one_step(name, algo, r, key, masked=True)
+               for r in REMATS}
+    assert float(out["block"][2]["realized_batch"]) == 3.0
+    assert_identical_updates(out["sites"][0], out["block"][0])
+    assert_identical_updates(out["none"][0], out["block"][0],
+                             boundary_rtol=BOUNDARY_RTOL,
+                             boundary_atol=BOUNDARY_ATOL)
+
+
+@pytest.mark.slow           # interpret-mode Pallas kernels
+def test_remat_identity_kernel_path(key):
+    """The fused-kernel norm route is remat-invariant too.  Runs eager
+    (not under disable_jit — Pallas interpret mode recurses there): each
+    primitive still executes as its own program, and the block/sites
+    bitwise contract holds unchanged."""
+    out = {r: _one_step("phi3-mini-3.8b", "dpsgd_r", r, key,
+                        use_kernels=True, B=2, T=8)
+           for r in REMATS}
+    assert_identical_updates(out["sites"][0], out["block"][0])
+    assert_identical_updates(out["none"][0], out["block"][0],
+                             boundary_rtol=BOUNDARY_RTOL,
+                             boundary_atol=BOUNDARY_ATOL)
+
+
+# ---------------------------------------------------------------------------
+# remat validation (the silent-no-op fix)
+# ---------------------------------------------------------------------------
+
+def test_unknown_remat_raises_listing_policies():
+    from repro.models import build_model_for
+    arch, _ = tiny_model("phi3-mini-3.8b")
+    with pytest.raises(ValueError, match="supports.*block"):
+        build_model_for(arch, remat="blocks")          # the historical typo
+    with pytest.raises(ValueError, match="known policies"):
+        TrainConfig(remat="full")
+    cnn_arch, _ = tiny_model("cnn-cifar10")
+    with pytest.raises(ValueError, match="family 'cnn' supports"):
+        build_model_for(cnn_arch, remat="nope")
+    assert validate_remat("dense", "sites") == "sites"
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_every_family_honors_every_policy(family, key):
+    """Estimator-visible proof the policy is wired: at activation-dominated
+    shapes, storing everything needs more bytes than checkpointing, and
+    "sites" (block boundaries + saved site operands) sits above "block".
+    The CNN runs the *full* cnn-cifar10 arch — tracing is allocation-free,
+    and the reduced 8x8 CNN is genuinely too shallow for remat to pay
+    (XLA's own memory_analysis agrees there)."""
+    name = FAMILY_ARCHS[family]
+    peaks = {}
+    for remat in REMATS:
+        cfg = TrainConfig(arch=name, remat=remat, param_dtype="float32",
+                          compute_dtype="float32",
+                          dp=DPConfig(algo="dpsgd_r"))
+        if family == "cnn":
+            from repro.configs import ARCHS
+            from repro.models import build_model_for
+            arch = ARCHS[name]
+            model = build_model_for(arch, param_dtype="float32",
+                                    compute_dtype="float32", remat=remat)
+            B, T = 32, 0
+        else:
+            arch, model = tiny_model(name, remat=remat)
+            B, T = 8, 64
+        est = estimate_train_memory(model, cfg, abstract_batch(arch, B, T))
+        peaks[remat] = est["peak_bytes"]
+    assert peaks["none"] >= peaks["sites"] >= peaks["block"], peaks
+
+
+# ---------------------------------------------------------------------------
+# estimator vs XLA cross-check
+# ---------------------------------------------------------------------------
+
+CROSS_CELLS = [("phi3-mini-3.8b", "dpsgd_r", "block"),
+               ("phi3-mini-3.8b", "dpsgd", "none"),
+               ("mamba2-1.3b", "sgd", "none"),
+               ("cnn-cifar10", "dpsgd_r1f", "sites")]
+
+
+def _xla_total(model, cfg, batch_abs):
+    from repro.launch.memory import abstract_step_args
+    from repro.train.trainer import make_train_step
+    step = make_train_step(model, cfg)
+    state_abs, key_abs = abstract_step_args(model, cfg)
+    mem = jax.jit(step).lower(state_abs, batch_abs,
+                              key_abs).compile().memory_analysis()
+    return (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+            + mem.output_size_in_bytes)
+
+
+@pytest.mark.parametrize("name,algo,remat", CROSS_CELLS)
+def test_estimate_within_documented_tolerance(name, algo, remat):
+    arch, model = tiny_model(name, remat=remat)
+    cfg = TrainConfig(arch=name, remat=remat, param_dtype="float32",
+                      compute_dtype="float32", dp=DPConfig(algo=algo))
+    batch_abs = abstract_batch(arch, 8, 32)
+    est = estimate_train_memory(model, cfg, batch_abs)
+    xla = _xla_total(model, cfg, batch_abs)
+    ratio = est["peak_bytes"] / xla
+    assert 1 / TOLERANCE_FACTOR <= ratio <= TOLERANCE_FACTOR, (
+        f"{name}/{algo}/{remat}: estimate {est['peak_bytes']} vs XLA {xla} "
+        f"(ratio {ratio:.2f}) outside the documented factor "
+        f"{TOLERANCE_FACTOR}")
+
+
+def test_dp_footprint_ratio_regression_pin():
+    """Per-example-grad accounting cannot silently regress: vanilla
+    DP-SGD's estimated transient must exceed SGD's by at least the spilled
+    per-example gradients — the same quantity the analytical accelerator
+    model prices as DRAM spill (sim/dataflow.pegrad_spill_bytes)."""
+    B = 16
+    ests = {}
+    for algo in ("sgd", "dpsgd", "dpsgd_r"):
+        cfg = TrainConfig(arch="phi3-mini-3.8b", remat="block",
+                          param_dtype="float32", compute_dtype="float32",
+                          dp=DPConfig(algo=algo))
+        ests[algo] = step_peak_bytes(cfg, B=B, T=32)
+    param_elems = ests["sgd"]["grad_bytes"] // 4
+    spill = pegrad_spill_bytes(B, param_elems)
+    # the estimate dict's side-channel figure IS the sim's spill figure
+    assert ests["dpsgd"]["per_example_grad_bytes"] == int(spill)
+    assert ests["dpsgd_r"]["per_example_grad_bytes"] == 4 * B
+    assert ests["sgd"]["per_example_grad_bytes"] == 0
+    # and the jaxpr walk actually sees those bytes live
+    gap = ests["dpsgd"]["transient_bytes"] - ests["sgd"]["transient_bytes"]
+    assert gap >= 0.8 * spill, (gap, spill)
+    # headline ratio pin (paper §III: DP-SGD's capacity blowup)
+    ratio = ests["dpsgd"]["peak_bytes"] / ests["sgd"]["peak_bytes"]
+    assert ratio >= 1.3, ratio
+
+
+def test_estimator_scan_and_remat_shapes():
+    """Structural properties on one model: remat="none" must estimate
+    strictly more transient than remat="block" (saved residuals vs
+    everything), and a grad_accum split must shrink the estimate."""
+    cfg = TrainConfig(arch="phi3-mini-3.8b", remat="none",
+                      param_dtype="float32", compute_dtype="float32",
+                      dp=DPConfig(algo="dpsgd"))
+    full = step_peak_bytes(cfg, B=16, T=32)
+    ck = step_peak_bytes(dataclasses.replace(cfg, remat="block"),
+                         B=16, T=32)
+    assert full["transient_bytes"] > ck["transient_bytes"]
+    split = step_peak_bytes(dataclasses.replace(cfg, grad_accum=4),
+                            B=16, T=32)
+    assert split["peak_bytes"] < full["peak_bytes"]
+
+
+def test_jaxpr_peak_bytes_donation():
+    """Donated args drop out of the resident floor."""
+    def f(a, b):
+        return a * 2.0 + b
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    keep = jaxpr_peak_bytes(f, x, x)
+    don = jaxpr_peak_bytes(f, x, x, donate_argnums=(0,))
+    assert don.arg_bytes == keep.arg_bytes - 1024 * 1024 * 4
+    assert don.donated_bytes == 1024 * 1024 * 4
+    assert don.peak_bytes < keep.peak_bytes
+
+
+# ---------------------------------------------------------------------------
+# budget-driven auto-microbatching
+# ---------------------------------------------------------------------------
+
+def _train_cfg(name="phi3-mini-3.8b", **kw):
+    return TrainConfig(arch=name, param_dtype="float32",
+                       compute_dtype="float32", steps=1, log_every=1,
+                       ckpt_every=10**9, ckpt_async=False, **kw)
+
+
+def test_auto_microbatch_budget_too_small_raises(key):
+    arch, model = tiny_model("phi3-mini-3.8b")
+    shape = ShapeConfig("t", 16, 8, "train")
+    cfg = _train_cfg(mem=MemConfig(hbm_budget_bytes=1,
+                                   auto_microbatch=True))
+    with pytest.raises(ValueError, match="no microbatch split fits"):
+        pick_grad_accum(model, cfg, shape)
+
+
+def test_auto_microbatch_unlimited_budget_is_noop(key):
+    """MemConfig contract: budget 0 = unlimited, never raises — the
+    trainer skips the search entirely."""
+    from repro.train.trainer import Trainer
+    arch, model = tiny_model("phi3-mini-3.8b")
+    shape = ShapeConfig("t", 16, 4, "train")
+    cfg = _train_cfg(mem=MemConfig(auto_microbatch=True))
+    trainer = Trainer(model, cfg, shape, jit_step=False)
+    assert trainer.cfg.grad_accum == 1
+    assert trainer.mem_estimate is None
+
+
+def test_auto_microbatch_divisibility_error_is_distinct(key):
+    """An impossible batch/mesh/microbatch combination must not be blamed
+    on the budget."""
+    arch, model = tiny_model("phi3-mini-3.8b")
+    shape = ShapeConfig("t", 16, 8, "train")
+    cfg = _train_cfg(dp=DPConfig(algo="dpsgd", microbatch=3),
+                     mem=MemConfig(hbm_budget_bytes=10**12,
+                                   auto_microbatch=True))
+    with pytest.raises(ValueError, match="no feasible grad_accum"):
+        pick_grad_accum(model, cfg, shape)
+
+
+def test_auto_microbatch_picks_largest_fitting_split(key):
+    arch, model = tiny_model("phi3-mini-3.8b")
+    shape = ShapeConfig("t", 16, 8, "train")
+    # estimate the whole-batch and fully-split peaks, aim between them
+    base = _train_cfg(dp=DPConfig(algo="dpsgd"))
+    peak1 = estimate_train_memory(
+        model, base, abstract_batch(arch, 8, 16))["peak_bytes"]
+    peak8 = estimate_train_memory(
+        model, dataclasses.replace(base, grad_accum=8),
+        abstract_batch(arch, 8, 16))["peak_bytes"]
+    assert peak8 < peak1
+    budget = (peak1 + peak8) // 2
+    cfg = _train_cfg(dp=DPConfig(algo="dpsgd"),
+                     mem=MemConfig(hbm_budget_bytes=int(budget),
+                                   auto_microbatch=True))
+    g, est = pick_grad_accum(model, cfg, shape)
+    assert 1 < g <= 8
+    assert est["peak_bytes"] <= budget
+    # the pick is maximal-microbatch: one step fewer accum must not fit
+    smaller = [c for c in (1, 2, 4, 8) if c < g]
+    if smaller:
+        prev = estimate_train_memory(
+            model, dataclasses.replace(base, grad_accum=smaller[-1]),
+            abstract_batch(arch, 8, 16))["peak_bytes"]
+        assert prev > budget
+
+
+def test_auto_microbatch_respects_poisson_lcm_rounding(key):
+    """The chosen split keeps the padded Poisson capacity divisible by
+    grad_accum x microbatch x batch-axis width (PR-3 rounding).  The
+    budget is per device, so the whole-batch baseline is normalized over
+    the 3-wide batch axis before aiming just below it."""
+    from repro.launch.memory import per_device_peak_bytes
+    from repro.train.trainer import Trainer, physical_batch_size
+    arch, model = tiny_model("phi3-mini-3.8b")
+    shape = ShapeConfig("t", 16, 8, "train")
+    base = _train_cfg(dp=DPConfig(algo="dpsgd_r", sampling="poisson"))
+    est1 = estimate_train_memory(
+        model, base,
+        abstract_batch(arch, physical_batch_size(base, shape, 1_000_000,
+                                                 shards=3), 16),
+        expected_batch_size=8.0)
+    peak1 = per_device_peak_bytes(est1, 3)
+    cfg = _train_cfg(dp=DPConfig(algo="dpsgd_r", sampling="poisson"),
+                     mem=MemConfig(hbm_budget_bytes=int(peak1 * 0.98),
+                                   auto_microbatch=True))
+    trainer = Trainer(model, cfg, shape, jit_step=False, batch_multiple=3)
+    g = trainer.cfg.grad_accum
+    assert g > 1
+    assert trainer.capacity % (g * 3) == 0, (trainer.capacity, g)
+    # and the loop runs with the chosen split
+    state = trainer.init_state(key)
+    trainer.run(state, steps=1, install_signals=False)
+
+
+def test_per_device_normalization():
+    """Budget comparisons are per device: params/opt-state replicated,
+    batch-proportional bytes divided by the batch-axis width."""
+    from repro.launch.memory import per_device_peak_bytes
+    est = {"peak_bytes": 100, "params_bytes": 10, "opt_state_bytes": 30}
+    assert per_device_peak_bytes(est, 1) == 100
+    assert per_device_peak_bytes(est, 4) == 40 + 15
+    # never below the replicated resident floor
+    assert per_device_peak_bytes(est, 1000) == 41
+
+
+def test_trainer_auto_microbatch_fixed_sampling(key):
+    from repro.train.trainer import Trainer
+    arch, model = tiny_model("cnn-cifar10")
+    shape = ShapeConfig("t", 16, 8, "train")
+    base = _train_cfg("cnn-cifar10", dp=DPConfig(algo="dpsgd"))
+    peak1 = estimate_train_memory(
+        model, base, abstract_batch(arch, 8, 16))["peak_bytes"]
+    cfg = _train_cfg("cnn-cifar10", dp=DPConfig(algo="dpsgd"),
+                     mem=MemConfig(hbm_budget_bytes=int(peak1 * 0.95),
+                                   auto_microbatch=True))
+    trainer = Trainer(model, cfg, shape, jit_step=False)
+    assert trainer.cfg.grad_accum > 1
+    assert 8 % trainer.cfg.grad_accum == 0
+    assert trainer.mem_estimate["peak_bytes"] <= cfg.mem.hbm_budget_bytes
+
+
+def test_trainer_memory_report(key):
+    from repro.train.trainer import Trainer
+    arch, model = tiny_model("phi3-mini-3.8b")
+    shape = ShapeConfig("t", 16, 4, "train")
+    trainer = Trainer(model, _train_cfg(), shape)
+    state = trainer.init_state(key)
+    batch = trainer.shard_batch(trainer.make_batch(0))
+    rep = trainer.memory_report(state, batch, jax.random.PRNGKey(0))
+    assert rep["peak_bytes"] > 0
+    assert "xla_peak_bytes" in rep
+    r = rep["estimate_vs_xla"]
+    assert 1 / TOLERANCE_FACTOR <= r <= TOLERANCE_FACTOR, r
