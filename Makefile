@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dp test-sites test-mem test-multidevice bench-smoke bench-serve dryrun-smoke
+.PHONY: test test-fast test-dp test-sites test-mem test-kernels test-kernels-fast test-multidevice bench-smoke bench-serve bench-kernels dryrun-smoke
 
 # tier-1 verify: the gate for every change
 test:
@@ -34,6 +34,20 @@ test-sites:
 test-mem:
 	$(PY) -m pytest -x -q -m "not slow" tests/test_memory.py
 
+# the kernel gate: differential-oracle layer for the fused DP side-channel
+# (norm_strategy="fused") plus the separate-pass Pallas kernels -- fused
+# dense/conv/flash-bwd vs the kernels/ref.py float64 oracles, masked-row
+# parity, and the three-algo fused/gram/materialize identity.  The fast
+# split keeps the registry/XLA-route/identity checks (what CI runs);
+# the full target adds the interpret-mode kernel sweeps (@slow).
+test-kernels:
+	$(PY) -m pytest -x -q tests/test_fused_norms.py tests/test_kernels.py \
+	    tests/test_norm_rules.py
+
+test-kernels-fast:
+	$(PY) -m pytest -x -q -m "not slow" \
+	    tests/test_fused_norms.py tests/test_norm_rules.py
+
 # fast tier (~4 min vs ~7 for full): skips the interpret-mode Pallas
 # kernel sweeps and the jamba-398b heavies (@pytest.mark.slow); this is
 # what CI runs on push
@@ -54,6 +68,11 @@ bench-smoke:
 # serving: host-loop reference vs fully-jitted engine -> BENCH_serve.json
 bench-serve:
 	$(PY) -m benchmarks.serve_bench
+
+# fused-vs-separate DP side-channel kernels -> BENCH_kernels.json; exits
+# non-zero if any gated fused cell is slower than its two-launch baseline
+bench-kernels:
+	$(PY) -m benchmarks.kernel_bench
 
 # one compile-only distribution cell with batch-local ops (artifact under
 # results/dryrun)

@@ -300,13 +300,18 @@ class DPConfig:
     ``norm_strategy`` — per-example-norm rule name, resolved *per site*
     against that site's registered rules: ``"materialize"`` (outer-product
     GEMM reduced on the fly), ``"gram"`` (ghost norm, never forms the
-    weight-shaped object), or ``"auto"`` (each site picks its cheapest
-    exact rule by its own registered FLOP formulas — the Book-Keeping
-    trick).  Single-rule sites (embed/tap/bias) ignore the setting; an
+    weight-shaped object), ``"fused"`` (the norm computed *jointly with
+    the activation gradient* in one backward sweep — the DiVa dataflow;
+    with ``use_kernels`` this is the single-pass Pallas kernels in
+    kernels/fused_bwd.py + the flash-attention backward, otherwise XLA
+    ops bit-identical to ``materialize``), or ``"auto"`` (each site picks
+    its cheapest exact rule by its own registered FLOP formulas — the
+    Book-Keeping trick; never resolves to ``fused``, which is an explicit
+    opt-in).  Single-rule sites (embed/tap/bias) ignore the setting; an
     unknown name raises, listing the site's registered strategies.
 
-    ``use_kernels`` — take each site's registered fused-Pallas kernel
-    route (kernels/pegrad_norm.py, kernels/gram_norm.py) instead of the
+    ``use_kernels`` — take each site's registered Pallas kernel route
+    (kernels/pegrad_norm.py, gram_norm.py, fused_bwd.py) instead of the
     chunked XLA rules; interpret-mode on CPU, Mosaic on TPU.
     """
     enabled: bool = True
@@ -316,7 +321,7 @@ class DPConfig:
     delta: float = 1e-5
     sampling: str = "fixed"        # fixed | poisson (see docstring)
     microbatch: int = 0            # vanilla dpsgd: vmap chunk (0 = whole batch)
-    norm_strategy: str = "auto"    # auto | materialize | gram
+    norm_strategy: str = "auto"    # auto | materialize | gram | fused
     use_kernels: bool = False      # route norm rules through Pallas kernels
 
 

@@ -44,6 +44,15 @@ is agnostic.  The three private algos produce *identical* updates for the
 same (params, batch, key) — property-tested in tests/test_dp_core.py and,
 under random masks, tests/test_dp_properties.py.
 
+``dp.norm_strategy`` flows into the pass-1 ``DPContext`` untouched: the
+side-channel algos (``dpsgd_r``/``dpsgd_r1f``) work identically under
+``"materialize"``/``"gram"``/``"auto"`` and under ``"fused"``, where each
+site's backward produces the activation gradient and the norm² in one
+sweep (core/sites.py ``fused_bwd``; kernels/fused_bwd.py) instead of
+rule-after-backward — identity across strategies is pinned in
+tests/test_fused_norms.py.  ``"dpsgd"`` never consults the strategy (it
+materializes per-example grads by construction).
+
 loss_fn contract: ``loss_fn(params, batch, ctx) -> (per_example_losses, ctx)``
 with ``per_example_losses: (B,) float32``.
 """

@@ -119,6 +119,15 @@ class DPContext:
             return p, self       # no broadcast in off mode (historical)
         return self.site("tap", p, meta=(nexp, batch))
 
+    def attention(self, q, k, v, causal: bool = True, block_q: int = 512,
+                  remat: str = "block") -> Tuple[jax.Array, "DPContext"]:
+        """Causal attention as a registered site: parameter-free (its norm²
+        contribution is exactly zero) but carrying the fused Pallas
+        flash-backward route used by norm_strategy="fused".
+        q: (B,T,KV,rep,hd); k/v: (B,S,KV,hd)."""
+        return self.site("attention", q, k, v,
+                         meta=(bool(causal), int(block_q), str(remat)))
+
     def conv2d(self, x, w, stride: int = 1,
                padding: str = "SAME") -> Tuple[jax.Array, "DPContext"]:
         """y = conv2d(x, w) in NHWC/HWIO layout; x: (B, H, W, Cin),

@@ -15,6 +15,16 @@ weight gradients in HBM*.  Two exact strategies exist for a dense site
 
 ``auto`` picks the cheaper one per call site (the Book-Keeping trick).
 
+A third strategy, ``fused``, computes the *materialize* mathematics jointly
+with the activation gradient inside one backward sweep (the DiVa dataflow
+proper): the registry's ``fused_bwd`` route in core/sites.py dispatches to
+the single-pass Pallas kernels (kernels/fused_bwd.py, flash_attn.py) when
+``use_kernels`` and to XLA ops bit-identical to the separate
+``materialize`` path otherwise.  Its cost formula is ``flops_fused`` below
+(== materialize: the extra work over plain backprop is the same wgrad-tile
+sweep), so ``auto`` — which breaks ties toward the first-registered rule —
+never silently selects it; ``fused`` is an explicit opt-in.
+
 The pure-XLA implementations below are **internally chunked** (lax.scan over
 tiles) so the transient intermediate stays under ``MAX_CHUNK_ELEMS`` global
 elements no matter the model scale — the same blocking the Pallas kernels
@@ -67,6 +77,14 @@ def flops_gram(xs, gys) -> int:
     b, g, t, di = xs
     do = gys[-1]
     return 2 * b * g * t * t * (di + do)
+
+
+def flops_fused(xs, gys) -> int:
+    """FLOPs of the ``fused`` strategy's *norm side-channel*: identical to
+    ``materialize`` (the same wgrad-tile sweep, merged into the dgrad
+    kernel).  The dgrad MACs themselves are backprop's own work, not an
+    incremental cost of the side-channel, so they are not counted here."""
+    return flops_materialize(xs, gys)
 
 
 def pick_strategy(strategy: str, x_shape, gy_shape) -> str:

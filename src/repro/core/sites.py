@@ -37,7 +37,9 @@ Contracts every entry must satisfy (tests/test_sites_registry.py):
 
 Built-in sites: ``dense`` / ``moe_dense`` / ``embed`` / ``tap`` (the
 transformer stack) plus ``conv2d`` (im2col materialize + spatial ghost
-norm) and ``bias`` — the CNN workload of models/cnn.py.
+norm) and ``bias`` — the CNN workload of models/cnn.py — and the
+parameter-free ``attention`` site that carries the fused flash-backward
+kernel route (norm_strategy="fused"; see the entry below).
 """
 from __future__ import annotations
 
@@ -103,8 +105,16 @@ class SiteDef:
     ``nsq_rules[name](spec, operands, gy) -> (B,) f32`` — exact norm rules.
     ``bwd(spec, operands, gy) -> operand cotangents`` — optional; ``None``
       autodiffs ``fwd`` (``nondiff_operands`` get a ``None`` cotangent).
-    ``kernel_route[name]`` — fused-kernel variant of the same-named rule,
+    ``kernel_route[name]`` — Pallas-kernel variant of the same-named rule,
       used when ``SiteSpec.use_kernels`` (falls back to ``nsq_rules``).
+    ``fused_bwd[name](spec, operands, gy) -> (grads, nsq)`` — optional
+      *joint* backward for the same-named strategy: one callback produces
+      the operand cotangents AND the per-example norm² together, replacing
+      the separate ``bwd``-then-``nsq_rules`` dispatch in
+      ``_site_call_bwd``.  This is how ``"fused"`` routes into the
+      single-sweep kernels (kernels/fused_bwd.py, flash_attn.py) instead
+      of a second pass.  Must satisfy the same exactness and masked-batch
+      contracts as the rules.
     ``flops[name](operand_shapes, gy_shape) -> float`` — analytic FLOPs of
       the same-named rule; drives ``"auto"`` strategy resolution and the
       cost/benchmark tooling.
@@ -120,6 +130,7 @@ class SiteDef:
     nsq_rules: Mapping[str, Callable]
     bwd: Optional[Callable] = None
     kernel_route: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
+    fused_bwd: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
     flops: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
     nondiff_operands: Tuple[int, ...] = ()
     save_operands: Tuple[int, ...] = (0,)
@@ -133,6 +144,7 @@ def register_site(kind: str, *, fwd: Callable,
                   nsq_rules: Mapping[str, Callable],
                   bwd: Optional[Callable] = None,
                   kernel_route: Optional[Mapping[str, Callable]] = None,
+                  fused_bwd: Optional[Mapping[str, Callable]] = None,
                   flops: Optional[Mapping[str, Callable]] = None,
                   nondiff_operands: Sequence[int] = (),
                   save_operands: Sequence[int] = (0,),
@@ -150,10 +162,12 @@ def register_site(kind: str, *, fwd: Callable,
                          f"pass overwrite=True to replace it")
     site = SiteDef(kind=kind, fwd=fwd, nsq_rules=dict(nsq_rules), bwd=bwd,
                    kernel_route=dict(kernel_route or {}),
+                   fused_bwd=dict(fused_bwd or {}),
                    flops=dict(flops or {}),
                    nondiff_operands=tuple(nondiff_operands),
                    save_operands=tuple(save_operands))
     for field_name, mapping in (("kernel_route", site.kernel_route),
+                                ("fused_bwd", site.fused_bwd),
                                 ("flops", site.flops)):
         unknown = set(mapping) - set(site.nsq_rules)
         if unknown:
@@ -257,8 +271,15 @@ def _site_call_fwd(spec, acc, *operands):
 
 def _site_call_bwd(spec, operands, cots):
     gy, gacc = cots
-    grads = _operand_grads(get_site(spec.kind), spec, operands, gy)
-    nsq = site_nsq(spec, operands, gy)
+    site = get_site(spec.kind)
+    shapes = tuple(getattr(o, "shape", ()) for o in operands)
+    strat = resolve_strategy(spec.kind, spec.strategy, shapes, gy.shape)
+    fused = site.fused_bwd.get(strat)
+    if fused is not None:
+        grads, nsq = fused(spec, operands, gy)
+    else:
+        grads = _operand_grads(site, spec, operands, gy)
+        nsq = site_nsq(spec, operands, gy)
     return (gacc + nsq,) + tuple(grads)
 
 
@@ -354,18 +375,81 @@ def _dense_flops_gram(operand_shapes, gy_shape):
                             _canon4_shape(gy_shape))
 
 
+def _dense_flops_fused(operand_shapes, gy_shape):
+    return norms.flops_fused(_canon4_shape(operand_shapes[0]),
+                             _canon4_shape(gy_shape))
+
+
+# --- the "fused" strategy -------------------------------------------------
+#
+# Same mathematics as "materialize" (the wgrad-tile sweep), but computed
+# *jointly with the activation gradient* in one pass: the fused_bwd entry
+# replaces the bwd-then-rule dispatch in _site_call_bwd.  With use_kernels
+# it is the single-sweep Pallas kernel kernels/fused_bwd.py (x/gy read
+# once, no second launch); without kernels it runs the identical XLA ops
+# as the separate path, so the fused XLA route is bit-identical to
+# "materialize".  The summed weight gradient stays an einsum *outside* the
+# kernel so DP-SGD(R) pass 1 can DCE it.  Its FLOP entry equals
+# materialize's — the extra work over plain backprop is the same wgrad-tile
+# sweep — and since "auto" resolves ties to the first-registered rule by a
+# strict <, "auto" never silently picks "fused": it is an explicit opt-in
+# (DPConfig.norm_strategy = "fused").
+
+def _dense_rule_fused(spec, operands, gy):
+    # norm-only evaluation (site_nsq): same math as materialize
+    return _dense_rule_materialize(spec, operands, gy)
+
+
+def _dense_kernel_fused(spec, operands, gy):
+    from repro.kernels import ops as kops
+    _, nsq = kops.dense_bwd_norm(norms.canon4(operands[0]), norms.canon4(gy),
+                                 operands[1])
+    return nsq
+
+
+def _dense_fused_bwd(spec, operands, gy):
+    x, w = operands
+    if spec.use_kernels:
+        from repro.kernels import ops as kops
+        gx4, nsq = kops.dense_bwd_norm(norms.canon4(x), norms.canon4(gy), w)
+        gx = gx4.reshape(x.shape).astype(x.dtype)
+    else:
+        gx = jnp.einsum("...o,io->...i", gy, w).astype(x.dtype)
+        nsq = _dense_rule_materialize(spec, operands, gy)
+    gw = jnp.einsum("...i,...o->io", x, gy).astype(w.dtype)
+    return (gx, gw), nsq
+
+
+def _moe_dense_fused_bwd(spec, operands, gy):
+    x, w = operands                       # x (B,E,C,di), w (E,di,do)
+    if spec.use_kernels:
+        from repro.kernels import ops as kops
+        gx4, nsq = kops.dense_bwd_norm(x, gy, w)
+        gx = gx4.astype(x.dtype)
+    else:
+        gx = jnp.einsum("beco,eio->beci", gy, w).astype(x.dtype)
+        nsq = _dense_rule_materialize(spec, operands, gy)
+    gw = jnp.einsum("beci,beco->eio", x, gy).astype(w.dtype)
+    return (gx, gw), nsq
+
+
 _DENSE_RULES = dict(materialize=_dense_rule_materialize,
-                    gram=_dense_rule_gram)
+                    gram=_dense_rule_gram,
+                    fused=_dense_rule_fused)
 _DENSE_KERNELS = dict(materialize=_dense_kernel_materialize,
-                      gram=_dense_kernel_gram)
+                      gram=_dense_kernel_gram,
+                      fused=_dense_kernel_fused)
 _DENSE_FLOPS = dict(materialize=_dense_flops_materialize,
-                    gram=_dense_flops_gram)
+                    gram=_dense_flops_gram,
+                    fused=_dense_flops_fused)
 
 register_site("dense", fwd=_dense_fwd, bwd=_dense_bwd,
               nsq_rules=_DENSE_RULES, kernel_route=_DENSE_KERNELS,
+              fused_bwd={"fused": _dense_fused_bwd},
               flops=_DENSE_FLOPS)
 register_site("moe_dense", fwd=_moe_dense_fwd, bwd=_moe_dense_bwd,
               nsq_rules=_DENSE_RULES, kernel_route=_DENSE_KERNELS,
+              fused_bwd={"fused": _moe_dense_fused_bwd},
               flops=_DENSE_FLOPS)
 
 
@@ -523,13 +607,131 @@ def _conv_flops_gram(operand_shapes, gy_shape):
     return norms.flops_gram((b, 1, p, d_in), (b, 1, p, d_out))
 
 
+def _conv_flops_fused(operand_shapes, gy_shape):
+    b, p, d_in, d_out = conv_norm_dims(operand_shapes, gy_shape)
+    return norms.flops_fused((b, 1, p, d_in), (b, 1, p, d_out))
+
+
+# conv "fused": the im2col view makes the conv site *exactly* a dense site,
+# so the fused dense kernel applies: one sweep over the patch tensors
+# yields the patch-space activation gradient AND the per-example norm²;
+# dx is then the patches-extraction transpose (col2im, an XLA scatter) of
+# that patch gradient, and dw the usual patch einsum (DCE'd in pass 1).
+# conv_general_dilated_patches orders the feature axis Cin-major —
+# (Cin, kh, kw) — so the flat weight view must match for y == pat @ wf.
+
+def _conv_wflat(w):
+    kh, kw, cin, cout = w.shape
+    return w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+
+
+def _conv_rule_fused(spec, operands, gy):
+    return _conv_rule_materialize(spec, operands, gy)
+
+
+def _conv_kernel_fused(spec, operands, gy):
+    from repro.kernels import ops as kops
+    _, nsq = kops.dense_bwd_norm(*_conv_pair4(spec, operands, gy),
+                                 _conv_wflat(operands[1]))
+    return nsq
+
+
+def _conv_fused_bwd(spec, operands, gy):
+    x, w = operands
+    if not spec.use_kernels:
+        # identical XLA ops as the separate route: autodiff grads +
+        # materialize rule (bit-identical to strategy="materialize")
+        grads = _operand_grads(get_site(spec.kind), spec, operands, gy)
+        return tuple(grads), _conv_rule_materialize(spec, operands, gy)
+    from repro.kernels import ops as kops
+    pat = _conv_patches(spec, x, w)
+    B, cout = x.shape[0], gy.shape[-1]
+    pat4 = pat.reshape(B, 1, -1, pat.shape[-1])
+    gy4 = gy.reshape(B, 1, -1, cout)
+    gpat4, nsq = kops.dense_bwd_norm(pat4, gy4, _conv_wflat(w))
+    _, pull = jax.vjp(lambda xx: _conv_patches(spec, xx, w), x)
+    (gx,) = pull(gpat4.reshape(pat.shape).astype(pat.dtype))
+    kh, kw, cin = w.shape[0], w.shape[1], w.shape[2]
+    gwf = jnp.einsum("bpi,bpo->io", pat4[:, 0], gy4[:, 0])
+    gw = gwf.reshape(cin, kh, kw, cout).transpose(1, 2, 0, 3).astype(w.dtype)
+    return (gx.astype(x.dtype), gw), nsq
+
+
 register_site("conv2d", fwd=_conv2d_fwd,
               nsq_rules={"materialize": _conv_rule_materialize,
-                         "gram": _conv_rule_gram},
+                         "gram": _conv_rule_gram,
+                         "fused": _conv_rule_fused},
               kernel_route={"materialize": _conv_kernel_materialize,
-                            "gram": _conv_kernel_gram},
+                            "gram": _conv_kernel_gram,
+                            "fused": _conv_kernel_fused},
+              fused_bwd={"fused": _conv_fused_bwd},
               flops={"materialize": _conv_flops_materialize,
-                     "gram": _conv_flops_gram})
+                     "gram": _conv_flops_gram,
+                     "fused": _conv_flops_fused})
+
+
+# ---------------------------------------------------------------------------
+# attention: parameter-free site carrying the fused flash-backward kernel
+# ---------------------------------------------------------------------------
+#
+# Attention owns no parameters, so its per-example norm² contribution is
+# *exactly zero* — registering it as a site changes no norm and trivially
+# satisfies the masked-batch contract.  What the site buys is dataflow:
+# under norm_strategy="fused" models/layers.py routes attention through
+# here, and the backward dispatches to the Pallas flash-attention backward
+# (kernels/flash_attn.py) that recomputes the (bq, bk) probability tiles
+# online from the saved row logsumexp — no B×L×L materialization, no
+# second pass — instead of the blocked-XLA autodiff backward.  Layouts:
+# q (B, T, KV, rep, hd); k/v (B, S, KV, hd); meta = (causal, block_q,
+# remat) mirroring models/layers.attn_apply.
+
+def _attn_meta(spec):
+    causal, block_q, remat = spec.meta if spec.meta else (True, 512, "block")
+    return bool(causal), int(block_q), str(remat)
+
+
+def _attention_fwd(spec, q, k, v):
+    causal, block_q, remat = _attn_meta(spec)
+    from repro.kernels import ops as kops
+    if kops.USE_FLASH:
+        from repro.dist import runtime
+        flash = runtime.attn_local(
+            lambda qq, kk, vv: kops.flash_attention(qq, kk, vv, causal),
+            k.shape[2])
+        return flash(q, k, v)
+    from repro.models.layers import _causal_blocked_attention
+    assert causal, "the blocked-XLA attention path is causal-only"
+    return _causal_blocked_attention(q, k, v, block_q, remat)
+
+
+def _attention_rule_fused(spec, operands, gy):
+    return jnp.zeros((operands[0].shape[0],), F32)
+
+
+def _attention_fused_bwd(spec, operands, gy):
+    q, k, v = operands
+    causal, _, _ = _attn_meta(spec)
+    nsq = jnp.zeros((q.shape[0],), F32)
+    if spec.use_kernels:
+        from repro.kernels import ops as kops
+        dq, dk, dv = kops.flash_attention_bwd(q, k, v, gy, causal)
+        return (dq.astype(q.dtype), dk.astype(k.dtype),
+                dv.astype(v.dtype)), nsq
+    grads = _operand_grads(get_site(spec.kind), spec, operands, gy)
+    return tuple(grads), nsq
+
+
+def _attention_flops(operand_shapes, gy_shape):
+    return 0.0     # no parameters -> no incremental norm-rule FLOPs
+
+
+# rules consume nothing (norm² ≡ 0): nothing for the sites remat policy to
+# save — q/k/v stay transient exactly as on the non-site attention path
+register_site("attention", fwd=_attention_fwd,
+              nsq_rules={"fused": _attention_rule_fused},
+              fused_bwd={"fused": _attention_fused_bwd},
+              flops={"fused": _attention_flops},
+              save_operands=())
 
 
 # ---------------------------------------------------------------------------

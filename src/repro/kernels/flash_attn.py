@@ -7,9 +7,14 @@ HBM-traffic term of the blocked-XLA attention (EXPERIMENTS.md §Perf) and,
 on real TPUs, `pl.when`-predicated fully-masked tiles skip their DMA+MXU
 work, halving causal FLOPs.
 
-The backward pass is a blocked pure-jnp recompute (standard flash-bwd
-equations) wired through ``ops.flash_attention``'s custom_vjp — exact, and
-memory-bounded by block size.
+Two backward passes coexist behind ``ops.flash_attention``'s custom_vjp:
+the original blocked pure-jnp recompute (exact, memory-bounded, default),
+and the Pallas kernels below (``flash_attn_bwd``) — the fused DP route.
+Both recompute the (bq, bk) probability tile online from the saved row
+logsumexp; the Pallas pair keeps it in VMEM and is what the ``"fused"``
+norm strategy's attention site dispatches to (core/sites.py), since
+attention itself is parameter-free and contributes an exact zero to the
+per-example norm² side-channel.
 """
 from __future__ import annotations
 
@@ -110,6 +115,157 @@ def flash_attn_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret=interpret,
     )(qp, kp, vp)
     return o[:, :T, :hd], lse[:, :T]
+
+
+# ---------------------------------------------------------------------------
+# backward: dk/dv kernel (k-stationary) + dq kernel (q-stationary)
+# ---------------------------------------------------------------------------
+#
+# Standard flash backward from the saved row logsumexp:
+#   p  = exp(s - lse),  ds = p ∘ (do·vᵀ - delta) · scale,  delta = Σ do∘o.
+# The (bq, bk) p/ds tiles live only in VMEM — no B×L×L materialization and
+# no second pass over the scores.  Masking: key-side padding and causality
+# are folded into s (as in the forward); query-side padding rows are zeroed
+# on p directly (their lse slots are meaningless, so exp(s - lse) must not
+# feed the accumulators).  All-zero do rows (masked Poisson examples)
+# annihilate delta, dp, ds and hence all three gradients exactly.
+
+
+def _p_ds(q, k, v, do, lse, delta, qi, ki, *, bq, bk, seq_q, seq_k, causal,
+          scale):
+    """The shared tile recompute: (p, ds), query-padding rows zeroed."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * scale
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < seq_k
+    if causal:
+        mask = jnp.logical_and(mask, kpos <= qpos)
+    s = jnp.where(mask, s, NEG)
+    rows = qpos < seq_q
+    p = jnp.where(rows, jnp.exp(s - lse[:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32)
+    ds = p * (dp - delta[:, None]) * scale
+    return p, ds
+
+
+def _bwd_kv_kernel(q_ref, do_ref, lse_ref, delta_ref, k_ref, v_ref,
+                   dk_ref, dv_ref, dkacc_ref, dvacc_ref, *, bq: int, bk: int,
+                   n_q: int, seq_q: int, seq_k: int, causal: bool,
+                   scale: float):
+    ki, qi = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dkacc_ref[...] = jnp.zeros_like(dkacc_ref)
+        dvacc_ref[...] = jnp.zeros_like(dvacc_ref)
+
+    run = jnp.logical_or(not causal, ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q, do = q_ref[0], do_ref[0]
+        p, ds = _p_ds(q, k_ref[0], v_ref[0], do, lse_ref[0], delta_ref[0],
+                      qi, ki, bq=bq, bk=bk, seq_q=seq_q, seq_k=seq_k,
+                      causal=causal, scale=scale)
+        dvacc_ref[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=F32)
+        dkacc_ref[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())), preferred_element_type=F32)
+
+    @pl.when(qi == n_q - 1)
+    def _drain():
+        dk_ref[0] = dkacc_ref[...]
+        dv_ref[0] = dvacc_ref[...]
+
+
+def _bwd_q_kernel(q_ref, do_ref, lse_ref, delta_ref, k_ref, v_ref,
+                  dq_ref, dqacc_ref, *, bq: int, bk: int, n_k: int,
+                  seq_q: int, seq_k: int, causal: bool, scale: float):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dqacc_ref[...] = jnp.zeros_like(dqacc_ref)
+
+    run = jnp.logical_or(not causal, ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        _, ds = _p_ds(q_ref[0], k_ref[0], v_ref[0], do_ref[0], lse_ref[0],
+                      delta_ref[0], qi, ki, bq=bq, bk=bk, seq_q=seq_q,
+                      seq_k=seq_k, causal=causal, scale=scale)
+        dqacc_ref[...] += jax.lax.dot_general(
+            ds, k_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=F32)
+
+    @pl.when(ki == n_k - 1)
+    def _drain():
+        dq_ref[0] = dqacc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "rep", "bq", "bk", "interpret"))
+def flash_attn_bwd(q: jax.Array, k: jax.Array, v: jax.Array, o: jax.Array,
+                   lse: jax.Array, do: jax.Array, *, causal: bool = True,
+                   rep: int = 1, bq: int = 128, bk: int = 128,
+                   interpret: bool = True):
+    """q/o/do: (BH, T, hd); k/v: (BH // rep, S, hd); lse: (BH, T) f32 from
+    ``flash_attn_fwd``.  Returns f32 (dq (BH,T,hd), dk, dv (BH//rep,S,hd));
+    GQA partial dk/dv are computed per query head and rep-summed here.
+    """
+    BH, T, hd = q.shape
+    S = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    delta = jnp.sum(do.astype(F32) * o.astype(F32), axis=-1)      # (BH, T)
+    bq = min(bq, _rup(T, 8))
+    bk = min(bk, _rup(S, 8))
+    hdp = _rup(hd, 128)
+    qp, dop = _pad(q, _rup(T, bq), hdp), _pad(do, _rup(T, bq), hdp)
+    kp, vp = _pad(k, _rup(S, bk), hdp), _pad(v, _rup(S, bk), hdp)
+    Tp, Sp = qp.shape[1], kp.shape[1]
+    lsep = _pad2(lse.astype(F32), Tp)
+    deltap = _pad2(delta, Tp)
+    n_q, n_k = Tp // bq, Sp // bk
+    kw = dict(bq=bq, bk=bk, seq_q=T, seq_k=S, causal=causal, scale=scale)
+
+    qspec = pl.BlockSpec((1, bq, hdp), lambda b, x, y: (b, y, 0))
+    rspec = pl.BlockSpec((1, bq), lambda b, x, y: (b, y))
+    kspec = pl.BlockSpec((1, bk, hdp), lambda b, x, y: (b // rep, x, 0))
+    dkh, dvh = pl.pallas_call(
+        functools.partial(_bwd_kv_kernel, n_q=n_q, **kw),
+        grid=(BH, n_k, n_q),
+        in_specs=[qspec, qspec, rspec, rspec, kspec, kspec],
+        out_specs=[pl.BlockSpec((1, bk, hdp), lambda b, x, y: (b, x, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((BH, Sp, hdp), F32)] * 2,
+        scratch_shapes=[_vmem((bk, hdp), F32)] * 2,
+        interpret=interpret,
+    )(qp, dop, lsep, deltap, kp, vp)
+
+    qspec2 = pl.BlockSpec((1, bq, hdp), lambda b, x, y: (b, x, 0))
+    rspec2 = pl.BlockSpec((1, bq), lambda b, x, y: (b, x))
+    kspec2 = pl.BlockSpec((1, bk, hdp), lambda b, x, y: (b // rep, y, 0))
+    dq = pl.pallas_call(
+        functools.partial(_bwd_q_kernel, n_k=n_k, **kw),
+        grid=(BH, n_q, n_k),
+        in_specs=[qspec2, qspec2, rspec2, rspec2, kspec2, kspec2],
+        out_specs=pl.BlockSpec((1, bq, hdp), lambda b, x, y: (b, x, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tp, hdp), F32),
+        scratch_shapes=[_vmem((bq, hdp), F32)],
+        interpret=interpret,
+    )(qp, dop, lsep, deltap, kp, vp)
+
+    dk = dkh[:, :S, :hd].reshape(BH // rep, rep, S, hd).sum(axis=1)
+    dv = dvh[:, :S, :hd].reshape(BH // rep, rep, S, hd).sum(axis=1)
+    return dq[:, :T, :hd], dk, dv
+
+
+def _pad2(a, t):
+    BH, T = a.shape
+    if t == T:
+        return a
+    return jnp.pad(a, ((0, 0), (0, t - T)))
 
 
 def _vmem(shape, dtype):

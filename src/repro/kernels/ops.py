@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import clip_reduce as _cr
+from repro.kernels import fused_bwd as _fb
 from repro.kernels import gram_norm as _gn
 from repro.kernels import pegrad_norm as _pn
 
@@ -58,6 +59,31 @@ def gram_norm(x4: jax.Array, gy4: jax.Array,
 def clip_reduce(g: jax.Array, c: jax.Array) -> jax.Array:
     """(B, N), (B,) -> (N,) Σ_b c_b g_b."""
     return _cr.clip_reduce(g, c, interpret=INTERPRET)
+
+
+def dense_bwd_norm(x4: jax.Array, gy4: jax.Array, w: jax.Array):
+    """Fused dense backward (norm_strategy="fused", use_kernels=True):
+    (B,G,T,di), (B,G,T,do), w (di,do) or (G,di,do) ->
+    (gx4 (B,G,T,di), nsq (B,) f32) in one kernel sweep
+    (kernels/fused_bwd.py)."""
+    B, G, T, di = x4.shape
+    do = gy4.shape[-1]
+    wE = w if w.ndim == 3 else w[None]
+    gx, nsq = _fb.dense_bwd_norm(x4.reshape(B * G, T, di),
+                                 gy4.reshape(B * G, T, do), wE,
+                                 interpret=INTERPRET)
+    return gx.reshape(x4.shape), nsq.reshape(B, G).sum(axis=1)
+
+
+def dense_dgrad(gy4: jax.Array, w: jax.Array) -> jax.Array:
+    """Separate-pass dgrad baseline: (B,G,T,do), w (di,do)|(G,di,do) ->
+    gx4 (B,G,T,di).  Paired with ``pegrad_norm`` in
+    benchmarks/kernel_bench.py as the two-launch baseline the fusion is
+    gated against."""
+    B, G, T, do = gy4.shape
+    wE = w if w.ndim == 3 else w[None]
+    gx = _fb.dense_dgrad(gy4.reshape(B * G, T, do), wE, interpret=INTERPRET)
+    return gx.reshape(B, G, T, wE.shape[1])
 
 
 # ---------------------------------------------------------------------------
@@ -101,10 +127,49 @@ def _flash_vjp_fwd(q, k, v, causal, bwd_block):
     return o, (q, k, v, o, lse)
 
 
+# which backward implements flash_attention's custom_vjp: "jnp" (blocked
+# pure-jnp, default) or "pallas" (the kernels in flash_attn.py — same math,
+# VMEM-resident tiles).  The fused norm strategy reaches the Pallas pair
+# directly via flash_attention_bwd below regardless of this flag.
+FLASH_BWD = os.environ.get("REPRO_FLASH_BWD", "jnp")
+
+
+def _flash_bwd_pallas(q, k, v, o, lse, do, causal):
+    """5-D layout shim over flash_attn.flash_attn_bwd.  Returns f32
+    (dq, dk, dv) with dq: (B,T,KV,rep,hd), dk/dv: (B,S,KV,hd)."""
+    B, T, KV, rep, hd = q.shape
+    S = k.shape[1]
+    flat_q = lambda a: a.transpose(0, 2, 3, 1, 4).reshape(B * KV * rep, T, hd)
+    flat_kv = lambda a: a.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    dqf, dkf, dvf = _fa.flash_attn_bwd(
+        flat_q(q), flat_kv(k), flat_kv(v), flat_q(o),
+        lse.reshape(B * KV * rep, T), flat_q(do), causal=causal, rep=rep,
+        interpret=INTERPRET)
+    dq = dqf.reshape(B, KV, rep, T, hd).transpose(0, 3, 1, 2, 4)
+    dk = dkf.reshape(B, KV, S, hd).transpose(0, 2, 1, 3)
+    dv = dvf.reshape(B, KV, S, hd).transpose(0, 2, 1, 3)
+    return dq, dk, dv
+
+
+def flash_attention_bwd(q, k, v, do, causal: bool = True):
+    """One-call Pallas flash backward: recomputes (o, lse) with the forward
+    kernel, then runs the dk/dv and dq kernels.  The attention site's
+    ``"fused"`` route (core/sites.py) — per-example norm² contribution of
+    the parameter-free attention op is exactly zero, so the fused content
+    here is the kernelized backward itself.  Layouts as in
+    ``flash_attention``; returns f32 grads."""
+    o, lse = _flash_fwd_impl(q, k, v, causal)
+    return _flash_bwd_pallas(q, k, v, o, lse, do, causal)
+
+
 def _flash_vjp_bwd(causal, bwd_block, res, do):
     """Standard flash-attention backward, blocked over query chunks in pure
-    jnp (exact recompute from the saved row logsumexp)."""
+    jnp (exact recompute from the saved row logsumexp); the Pallas kernel
+    pair when FLASH_BWD == "pallas"."""
     q, k, v, o, lse = res
+    if FLASH_BWD == "pallas":
+        dq, dk, dv = _flash_bwd_pallas(q, k, v, o, lse, do, causal)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
     B, T, KV, rep, hd = q.shape
     S = k.shape[1]
     scale = 1.0 / (hd ** 0.5)

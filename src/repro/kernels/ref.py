@@ -1,9 +1,13 @@
-"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
-are allclose-tested against across shape/dtype sweeps)."""
+"""Pure-jnp / numpy oracles for every Pallas kernel and norm rule — the
+single ground truth the kernels are tested against across shape/dtype
+sweeps (tests/test_kernels.py, tests/test_fused_norms.py) and that the
+unit tests of core/norms.py reuse (tests/test_norm_rules.py).  Reference
+math lives here, not inline in test modules."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 F32 = jnp.float32
 
@@ -50,3 +54,51 @@ def flash_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkrts,bskh->btkrh", p.astype(v.dtype), v)
     return o
+
+
+def dense_bwd_ref(x: jax.Array, gy: jax.Array, w: jax.Array):
+    """Oracle for the fused dense backward (kernels/fused_bwd.py).
+
+    x: (BG, T, di), gy: (BG, T, do), w: (di, do) or (E, di, do) with row b
+    using group ``b % E``.  Returns (gx (BG,T,di) f32, nsq (BG,) f32)."""
+    if w.ndim == 2:
+        gx = jnp.einsum("bto,io->bti", gy, w, preferred_element_type=F32)
+    else:
+        wb = w[jnp.arange(x.shape[0]) % w.shape[0]]
+        gx = jnp.einsum("bto,bio->bti", gy, wb, preferred_element_type=F32)
+    return gx, pegrad_norm_ref(x, gy)
+
+
+def flash_attn_bwd_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                       do: jax.Array, causal: bool = True):
+    """(dq, dk, dv) by autodiff of the plain-softmax oracle; layouts as in
+    ``flash_attn_ref``."""
+    _, pull = jax.vjp(lambda qq, kk, vv: flash_attn_ref(qq, kk, vv, causal),
+                      q, k, v)
+    return pull(do)
+
+
+def dense_nsq_brute(x4, gy4) -> np.ndarray:
+    """Float64 brute force: n_b = Σ_g ‖x_bgᵀ gy_bg‖²_F via explicit
+    materialization.  x4/gy4: (B, G, T, d)."""
+    B, G = x4.shape[0], x4.shape[1]
+    out = np.zeros(B)
+    for b in range(B):
+        for g in range(G):
+            m = np.asarray(x4[b, g], np.float64).T @ np.asarray(gy4[b, g],
+                                                                np.float64)
+            out[b] += (m ** 2).sum()
+    return out
+
+
+def embed_table_nsq_ref(ids, gy, vocab: int) -> np.ndarray:
+    """Per-example embedding-table grad norm² by explicit scatter.
+    ids: (B, T) int, gy: (B, T, d) -> (B,) float64."""
+    B, T = np.asarray(ids).shape
+    out = np.zeros(B)
+    for b in range(B):
+        tab = np.zeros((vocab, np.asarray(gy).shape[-1]))
+        for t in range(T):
+            tab[int(ids[b, t])] += np.asarray(gy[b, t], np.float64)
+        out[b] = (tab ** 2).sum()
+    return out

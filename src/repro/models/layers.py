@@ -202,7 +202,13 @@ def attn_apply(p, x, ctx: DPContext, cfg, pos, block_q: int = 512,
         k = rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
     qg = q.reshape(B, T, KV, H // KV, hd)
     from repro.kernels import ops as kops
-    if kops.USE_FLASH:
+    if ctx.mode == "norm" and ctx.strategy == "fused":
+        # the fused DP side-channel routes attention through its registry
+        # site: forward unchanged, backward = the Pallas flash-bwd kernels
+        # (use_kernels) with an exact-zero norm² contribution
+        o, ctx = ctx.attention(qg, k, v, causal=True, block_q=block_q,
+                               remat=remat)
+    elif kops.USE_FLASH:
         from repro.dist import runtime
         flash = runtime.attn_local(
             lambda qq, kk, vv: kops.flash_attention(qq, kk, vv, True), KV)

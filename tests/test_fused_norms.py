@@ -1,0 +1,488 @@
+"""The differential-oracle test layer for the fused DP side-channel
+(norm_strategy="fused"): the single-sweep Pallas kernels
+(kernels/fused_bwd.py, flash_attn.py backward) and the registry route that
+dispatches to them (core/sites.py ``fused_bwd``) against the kernels/ref.py
+oracles, the vmap-grad autodiff oracle, and the other strategies.
+
+Layout: registry-resolution and XLA-route tests run in the fast tier; the
+interpret-mode kernel sweeps and full-model kernel routes carry
+@pytest.mark.slow (the `make test-kernels` / CI kernels-job split).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import DPConfig
+from repro.core import DPContext, make_noisy_grad_fn, norms, sites
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.flash_attn import flash_attn_bwd, flash_attn_fwd
+from repro.kernels.fused_bwd import dense_bwd_norm, dense_dgrad
+
+from helpers import (assert_identical_updates, make_batch,
+                     oracle_per_example_norms_sq, side_channel_norms_sq,
+                     tiny_model)
+
+F32 = jnp.float32
+
+
+def _rand(key, shape, dtype=F32):
+    return jax.random.normal(key, shape, F32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# registry resolution: "fused" is a real route, and "auto" never takes it
+# ---------------------------------------------------------------------------
+
+def test_fused_resolves_through_registry():
+    for kind, op_shapes, gy_shape in [
+            ("dense", ((2, 16, 8), (8, 4)), (2, 16, 4)),
+            ("moe_dense", ((2, 4, 8, 16), (4, 16, 8)), (2, 4, 8, 8)),
+            ("conv2d", ((2, 8, 8, 3), (3, 3, 3, 5)), (2, 8, 8, 5)),
+            ("attention", ((2, 8, 2, 1, 4), (2, 8, 2, 4), (2, 8, 2, 4)),
+             (2, 8, 2, 1, 4))]:
+        assert sites.resolve_strategy(kind, "fused", op_shapes,
+                                      gy_shape) == "fused"
+        assert "fused" in sites.get_site(kind).nsq_rules
+    # the attention site is single-rule: any strategy resolves to fused
+    assert sites.resolve_strategy("attention", "gram", ((2, 8, 2, 1, 4),),
+                                  (2, 8, 2, 1, 4)) == "fused"
+    # fused declares a FLOP formula == materialize's (the same wgrad sweep)
+    shp = ((2, 16, 8), (8, 4))
+    assert sites.site_flops("dense", "fused", shp, (2, 16, 4)) \
+        == sites.site_flops("dense", "materialize", shp, (2, 16, 4))
+    assert sites.site_flops("attention",
+                            "fused", ((2, 8, 2, 1, 4),), (2, 8, 2, 1, 4)) == 0
+
+
+def test_auto_never_picks_fused():
+    # ties break to the first-registered rule by strict <, so "auto" keeps
+    # resolving exactly as before this strategy existed
+    assert sites.resolve_strategy("dense", "auto", ((1, 1000, 8),),
+                                  (1, 1000, 8)) == "materialize"
+    assert sites.resolve_strategy("dense", "auto", ((1, 4, 512),),
+                                  (1, 4, 512)) == "gram"
+    assert norms.pick_strategy("auto", (1, 1, 1000, 8),
+                               (1, 1, 1000, 8)) == "materialize"
+
+
+def test_unknown_strategy_error_lists_fused():
+    with pytest.raises(ValueError, match="fused"):
+        sites.resolve_strategy("dense", "nope", ((2, 4, 8),), (2, 4, 8))
+
+
+# ---------------------------------------------------------------------------
+# XLA fused route: bit-identical to "materialize" by construction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["cnn-cifar10", "deepseek-moe-16b"])
+def test_fused_xla_bitwise_equals_materialize(arch, key):
+    arch_cfg, model = tiny_model(arch)
+    params = model.init(key)
+    batch = make_batch(arch_cfg, key, B=2, T=16)
+    got = side_channel_norms_sq(model, params, batch, strategy="fused")
+    want = side_channel_norms_sq(model, params, batch, strategy="materialize")
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "cnn-cifar10"])
+def test_fused_xla_matches_vmap_grad_oracle(arch, key):
+    arch_cfg, model = tiny_model(arch)
+    params = model.init(key)
+    batch = make_batch(arch_cfg, key, B=2, T=16)
+    want = oracle_per_example_norms_sq(model, params, batch)
+    got = side_channel_norms_sq(model, params, batch, strategy="fused")
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+def test_fused_under_sites_remat(key):
+    arch_cfg, model = tiny_model("phi3-mini-3.8b", remat="sites")
+    params = model.init(key)
+    batch = make_batch(arch_cfg, key, B=2, T=16)
+    want = oracle_per_example_norms_sq(model, params, batch)
+    got = side_channel_norms_sq(model, params, batch, strategy="fused")
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# three-algo identity: dpsgd / dpsgd_r / dpsgd_r1f steps agree across
+# "fused" vs "gram" vs "materialize" (transformer + cnn, incl. sites remat)
+# ---------------------------------------------------------------------------
+
+def _step(model, params, batch, algo, strategy, use_kernels=False):
+    dp = DPConfig(algo=algo, clip_norm=0.02, noise_multiplier=0.5,
+                  norm_strategy=strategy, use_kernels=use_kernels)
+    g, _ = make_noisy_grad_fn(model.loss_fn, dp)(params, batch,
+                                                 jax.random.PRNGKey(7))
+    return g
+
+
+@pytest.mark.parametrize("arch,remat", [("phi3-mini-3.8b", "block"),
+                                        ("cnn-cifar10", "block"),
+                                        ("phi3-mini-3.8b", "sites")])
+@pytest.mark.parametrize("algo", ["dpsgd", "dpsgd_r", "dpsgd_r1f"])
+def test_three_algo_identity_fused_vs_others(arch, remat, algo, key):
+    arch_cfg, model = tiny_model(arch, remat=remat)
+    params = model.init(key)
+    batch = make_batch(arch_cfg, key, B=4, T=16)
+    fused = _step(model, params, batch, algo, "fused")
+    # dpsgd never consults the strategy; for the side-channel algos the
+    # fused XLA backward runs the identical ops as materialize -> bitwise
+    assert_identical_updates(fused,
+                             _step(model, params, batch, algo, "materialize"))
+    # gram is different float math: ULP-scale reassociation only
+    assert_identical_updates(fused, _step(model, params, batch, algo, "gram"),
+                             boundary_rtol=1e-3, boundary_atol=1e-7)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "cnn-cifar10"])
+@pytest.mark.parametrize("algo", ["dpsgd_r", "dpsgd_r1f"])
+def test_three_algo_identity_fused_kernels(arch, algo, key):
+    """The Pallas fused route (use_kernels=True) against the XLA
+    materialize step: same update to kernel-parity tolerance."""
+    arch_cfg, model = tiny_model(arch)
+    params = model.init(key)
+    batch = make_batch(arch_cfg, key, B=4, T=16)
+    fused_k = _step(model, params, batch, algo, "fused", use_kernels=True)
+    want = _step(model, params, batch, algo, "materialize")
+    assert_identical_updates(fused_k, want, boundary_rtol=1e-3,
+                             boundary_atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp gradient check: the fused site backward vs the autodiff oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_fused_site_gradients_vs_autodiff(use_kernels, key):
+    """jax.grad through the fused dense site (custom_vjp fused_bwd route)
+    must match autodiff of the plain einsum for x AND w."""
+    B, T, di, do = 3, 9, 10, 6
+    x = _rand(key, (B, T, di))
+    w = _rand(jax.random.fold_in(key, 1), (di, do))
+
+    def via_site(x, w):
+        ctx = DPContext.norm_mode(B, strategy="fused",
+                                  use_kernels=use_kernels)
+        y, ctx = ctx.dense(x, w)
+        # nonlinear readout so gy is non-trivial; ignore the accumulator
+        return jnp.sum(jnp.sin(y))
+
+    def plain(x, w):
+        return jnp.sum(jnp.sin(jnp.einsum("bti,io->bto", x, w)))
+
+    gx, gw = jax.grad(via_site, argnums=(0, 1))(x, w)
+    gxr, gwr = jax.grad(plain, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, gxr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gw, gwr, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_fused_conv_site_gradients_vs_autodiff(use_kernels, key):
+    B, H, C, Cout = 2, 6, 3, 5
+    x = _rand(key, (B, H, H, C))
+    w = _rand(jax.random.fold_in(key, 1), (3, 3, C, Cout))
+
+    def via_site(x, w):
+        ctx = DPContext.norm_mode(B, strategy="fused",
+                                  use_kernels=use_kernels)
+        y, ctx = ctx.conv2d(x, w)
+        return jnp.sum(jnp.sin(y))
+
+    def plain(x, w):
+        y = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jnp.sum(jnp.sin(y))
+
+    gx, gw = jax.grad(via_site, argnums=(0, 1))(x, w)
+    gxr, gwr = jax.grad(plain, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, gxr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gw, gwr, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_attention_site_gradients_vs_autodiff(key):
+    """Gradient through the attention site (Pallas flash bwd kernels) vs
+    autodiff of the plain-softmax oracle."""
+    B, T, KV, rep, hd = 2, 12, 2, 2, 8
+    q = _rand(key, (B, T, KV, rep, hd)) * 0.5
+    k = _rand(jax.random.fold_in(key, 1), (B, T, KV, hd)) * 0.5
+    v = _rand(jax.random.fold_in(key, 2), (B, T, KV, hd)) * 0.5
+
+    def via_site(q, k, v):
+        ctx = DPContext.norm_mode(B, strategy="fused", use_kernels=True)
+        o, ctx = ctx.attention(q, k, v)
+        return jnp.sum(jnp.sin(o))
+
+    def plain(q, k, v):
+        return jnp.sum(jnp.sin(ref.flash_attn_ref(q, k, v, causal=True)))
+
+    got = jax.grad(via_site, argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(plain, argnums=(0, 1, 2))(q, k, v)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, rtol=3e-4, atol=3e-5)
+
+
+def test_attention_site_nsq_contribution_is_exact_zero(key):
+    """Attention is parameter-free: routing it through the site must add
+    exactly zero to every example's norm² accumulator."""
+    B, T, KV, rep, hd = 3, 8, 2, 1, 4
+    q = _rand(key, (B, T, KV, rep, hd))
+    k = _rand(jax.random.fold_in(key, 1), (B, T, KV, hd))
+    v = _rand(jax.random.fold_in(key, 2), (B, T, KV, hd))
+
+    def pass1(acc0):
+        ctx = dataclasses.replace(
+            DPContext.norm_mode(B, strategy="fused"), acc=acc0)
+        o, ctx = ctx.attention(q, k, v)
+        return jnp.sum(o.astype(F32)), ctx.acc
+
+    _, pull = jax.vjp(pass1, jnp.zeros((B,), F32))
+    (nsq,) = pull((jnp.ones(()), jnp.zeros((B,), F32)))
+    np.testing.assert_array_equal(np.asarray(nsq), np.zeros(B))
+
+
+# ---------------------------------------------------------------------------
+# fused dense kernel: parametrized sweep + masked rows (interpret mode)
+# ---------------------------------------------------------------------------
+
+FUSED_SHAPES = [(1, 8, 8, 8), (2, 32, 16, 24), (3, 7, 5, 200),
+                (2, 130, 128, 256), (1, 256, 130, 64)]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shape", FUSED_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_dense_kernel_sweep(shape, dtype, key):
+    BG, T, di, do = shape
+    x = _rand(key, (BG, T, di), dtype)
+    gy = _rand(jax.random.fold_in(key, 1), (BG, T, do), dtype)
+    w = _rand(jax.random.fold_in(key, 2), (di, do), dtype)
+    gx, nsq = dense_bwd_norm(x, gy, w[None], interpret=True)
+    gxr, nsqr = ref.dense_bwd_ref(x, gy, w)
+    rtol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(gx, np.float32), gxr, rtol=rtol,
+                               atol=1e-4)
+    np.testing.assert_allclose(nsq, nsqr, rtol=rtol)
+    # the dgrad half of the separate-pass baseline agrees too
+    gxd = dense_dgrad(gy, w[None], interpret=True)
+    np.testing.assert_allclose(np.asarray(gxd, np.float32), gxr, rtol=rtol,
+                               atol=1e-4)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("bt,bi,bj", [(8, 128, 128), (32, 128, 256),
+                                      (128, 256, 128)])
+def test_fused_dense_kernel_block_sizes(bt, bi, bj, key):
+    BG, T, di, do = 2, 48, 192, 160
+    x = _rand(key, (BG, T, di))
+    gy = _rand(jax.random.fold_in(key, 1), (BG, T, do))
+    w = _rand(jax.random.fold_in(key, 2), (di, do))
+    gx, nsq = dense_bwd_norm(x, gy, w[None], bt=bt, bi=bi, bj=bj,
+                             interpret=True)
+    gxr, nsqr = ref.dense_bwd_ref(x, gy, w)
+    np.testing.assert_allclose(gx, gxr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(nsq, nsqr, rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_fused_dense_kernel_grouped_moe(key):
+    B, E, C, di, do = 2, 4, 9, 16, 24
+    x = _rand(key, (B, E, C, di))
+    gy = _rand(jax.random.fold_in(key, 1), (B, E, C, do))
+    w = _rand(jax.random.fold_in(key, 2), (E, di, do))
+    gx, nsq = kops.dense_bwd_norm(x, gy, w)
+    gxr, nsqr = ref.dense_bwd_ref(x.reshape(B * E, C, di),
+                                  gy.reshape(B * E, C, do), w)
+    np.testing.assert_allclose(gx.reshape(B * E, C, di), gxr, rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(nsq, np.asarray(nsqr).reshape(B, E).sum(1),
+                               rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_fused_dense_kernel_masked_rows_exact_zero(key):
+    """Masked Poisson examples reach the kernel as all-zero gy rows: their
+    norm² AND their gx rows must be exact zeros, and real rows must equal
+    the compacted batch bit-for-bit (same tiles, same order)."""
+    BG, T, di, do = 6, 24, 40, 56
+    m = jnp.asarray([1, 0, 1, 1, 0, 1], F32)
+    x = _rand(key, (BG, T, di))
+    gy = _rand(jax.random.fold_in(key, 1), (BG, T, do)) * m[:, None, None]
+    w = _rand(jax.random.fold_in(key, 2), (di, do))
+    gx, nsq = dense_bwd_norm(x, gy, w[None], interpret=True)
+    keep = np.asarray(m) == 1
+    assert (np.asarray(nsq)[~keep] == 0.0).all()
+    assert (np.asarray(gx)[~keep] == 0.0).all()
+    gx_c, nsq_c = dense_bwd_norm(x[keep], gy[keep], w[None], interpret=True)
+    np.testing.assert_array_equal(np.asarray(gx)[keep], np.asarray(gx_c))
+    np.testing.assert_array_equal(np.asarray(nsq)[keep], np.asarray(nsq_c))
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(1, 33), di=st.integers(1, 40), do=st.integers(1, 40),
+       bt=st.sampled_from([8, 16, 128]), seed=st.integers(0, 2 ** 16))
+def test_fused_dense_kernel_property(t, di, do, bt, seed):
+    """Hypothesis sweep: any (T, d_in, d_out) × block size, fused kernel vs
+    oracle (runs where hypothesis is installed; skipped by the shim)."""
+    k = jax.random.PRNGKey(seed)
+    x = _rand(k, (2, t, di))
+    gy = _rand(jax.random.fold_in(k, 1), (2, t, do))
+    w = _rand(jax.random.fold_in(k, 2), (di, do))
+    gx, nsq = dense_bwd_norm(x, gy, w[None], bt=bt, interpret=True)
+    gxr, nsqr = ref.dense_bwd_ref(x, gy, w)
+    np.testing.assert_allclose(gx, gxr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(nsq, nsqr, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash-attention backward kernels vs the autodiff oracle
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, T, KV, rep, hd, causal)
+    (2, 16, 2, 2, 8, True),
+    (1, 33, 1, 1, 16, True),     # non-tile-aligned T
+    (2, 8, 2, 1, 4, False),
+    (1, 40, 2, 3, 8, True),      # GQA rep=3
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_bwd_kernel_vs_oracle(case, key):
+    B, T, KV, rep, hd, causal = case
+    q = _rand(key, (B, T, KV, rep, hd)) * 0.5
+    k = _rand(jax.random.fold_in(key, 1), (B, T, KV, hd)) * 0.5
+    v = _rand(jax.random.fold_in(key, 2), (B, T, KV, hd)) * 0.5
+    do = _rand(jax.random.fold_in(key, 3), (B, T, KV, rep, hd))
+    got = kops.flash_attention_bwd(q, k, v, do, causal)
+    want = ref.flash_attn_bwd_ref(q, k, v, do, causal)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.slow
+def test_flash_bwd_kernel_matches_jnp_bwd(key):
+    """The Pallas backward and the blocked-jnp backward are two
+    implementations of the same recompute-from-lse equations; pin them to
+    each other through the custom_vjp."""
+    B, T, KV, rep, hd = 2, 24, 2, 2, 8
+    q = _rand(key, (B, T, KV, rep, hd)) * 0.5
+    k = _rand(jax.random.fold_in(key, 1), (B, T, KV, hd)) * 0.5
+    v = _rand(jax.random.fold_in(key, 2), (B, T, KV, hd)) * 0.5
+
+    def f(q, k, v):
+        return jnp.sum(jnp.sin(kops.flash_attention(q, k, v, True)))
+
+    want = jax.grad(f, argnums=(0, 1, 2))(q, k, v)   # jnp custom_vjp bwd
+    o, lse = kops._flash_fwd_impl(q, k, v, True)
+    do = jnp.cos(o)
+    got = kops._flash_bwd_pallas(q, k, v, o, lse, do, True)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.slow
+def test_flash_bwd_masked_rows_parity(key):
+    """Masked-row parity for the fused attention path: examples with
+    all-zero do must produce exactly-zero dq/dk/dv, and real examples must
+    match the compacted batch."""
+    B, T, KV, rep, hd = 4, 16, 2, 2, 8
+    m = jnp.asarray([1, 0, 1, 0], F32)
+    q = _rand(key, (B, T, KV, rep, hd)) * 0.5
+    k = _rand(jax.random.fold_in(key, 1), (B, T, KV, hd)) * 0.5
+    v = _rand(jax.random.fold_in(key, 2), (B, T, KV, hd)) * 0.5
+    do = _rand(jax.random.fold_in(key, 3), (B, T, KV, rep, hd)) \
+        * m[:, None, None, None, None]
+    dq, dk, dv = kops.flash_attention_bwd(q, k, v, do, True)
+    keep = np.asarray(m) == 1
+    for g in (dq, dk, dv):
+        assert (np.asarray(g)[~keep] == 0.0).all()
+    dq_c, dk_c, dv_c = kops.flash_attention_bwd(q[keep], k[keep], v[keep],
+                                                do[keep], True)
+    np.testing.assert_array_equal(np.asarray(dq)[keep], np.asarray(dq_c))
+    np.testing.assert_array_equal(np.asarray(dk)[keep], np.asarray(dk_c))
+    np.testing.assert_array_equal(np.asarray(dv)[keep], np.asarray(dv_c))
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(2, 24), hd=st.sampled_from([4, 8]),
+       rep=st.sampled_from([1, 2]), causal=st.booleans(),
+       bq=st.sampled_from([8, 16, 128]), mask_seed=st.integers(0, 2 ** 16))
+def test_flash_bwd_property(t, hd, rep, causal, bq, mask_seed):
+    """Hypothesis sweep: seq len × block size × causal × random Poisson
+    masks, Pallas flash bwd vs the autodiff oracle with zero rows exact."""
+    k = jax.random.PRNGKey(mask_seed)
+    B, KV = 2, 2
+    m = jax.random.bernoulli(jax.random.fold_in(k, 9), 0.7, (B,)).astype(F32)
+    q = _rand(k, (B, t, KV, rep, hd)) * 0.5
+    kk = _rand(jax.random.fold_in(k, 1), (B, t, KV, hd)) * 0.5
+    v = _rand(jax.random.fold_in(k, 2), (B, t, KV, hd)) * 0.5
+    do = _rand(jax.random.fold_in(k, 3), (B, t, KV, rep, hd)) \
+        * m[:, None, None, None, None]
+    flat_q = lambda a: a.transpose(0, 2, 3, 1, 4).reshape(B * KV * rep, t, hd)
+    flat_kv = lambda a: a.transpose(0, 2, 1, 3).reshape(B * KV, t, hd)
+    o, lse = flash_attn_fwd(flat_q(q), flat_kv(kk), flat_kv(v),
+                            causal=causal, rep=rep, bq=bq, bk=bq,
+                            interpret=True)
+    dq, dk, dv = flash_attn_bwd(flat_q(q), flat_kv(kk), flat_kv(v), o, lse,
+                                flat_q(do), causal=causal, rep=rep, bq=bq,
+                                bk=bq, interpret=True)
+    dqr, dkr, dvr = ref.flash_attn_bwd_ref(q, kk, v, do, causal)
+    np.testing.assert_allclose(
+        dq.reshape(B, KV, rep, t, hd).transpose(0, 3, 1, 2, 4), dqr,
+        rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(
+        dk.reshape(B, KV, t, hd).transpose(0, 2, 1, 3), dkr,
+        rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(
+        dv.reshape(B, KV, t, hd).transpose(0, 2, 1, 3), dvr,
+        rtol=3e-4, atol=3e-5)
+    masked = np.asarray(m) == 0
+    assert (np.asarray(dq.reshape(B, KV, rep, t, hd))[masked] == 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# full-model fused kernel route (slow): side-channel + masked e2e
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "cnn-cifar10",
+                                  "deepseek-moe-16b"])
+def test_fused_kernel_route_matches_oracle(arch, key):
+    arch_cfg, model = tiny_model(arch)
+    params = model.init(key)
+    batch = make_batch(arch_cfg, key, B=2, T=16)
+    want = oracle_per_example_norms_sq(model, params, batch)
+    got = side_channel_norms_sq(model, params, batch, strategy="fused",
+                                use_kernels=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4)
+
+
+@pytest.mark.slow
+def test_fused_kernel_route_masked_batch_exact_zero(key):
+    """End-to-end masked Poisson batch through the fused kernel route:
+    padded rows' norms² are exact zeros, real rows match the oracle."""
+    arch_cfg, model = tiny_model("phi3-mini-3.8b")
+    params = model.init(key)
+    B = 4
+    batch = make_batch(arch_cfg, key, B=B, T=16)
+    m = jnp.asarray([1, 0, 1, 0], F32)
+
+    def pass1(p, acc0):
+        ctx = DPContext(acc=acc0, mode="norm", strategy="fused",
+                        use_kernels=True)
+        losses, ctx = model.loss_fn(p, batch, ctx)
+        return (jnp.sum(m * losses), ctx.acc), losses
+
+    acc0 = jnp.zeros((B,), F32)
+    _, pull, _ = jax.vjp(pass1, params, acc0, has_aux=True)
+    _, nsq = pull((jnp.ones(()), jnp.zeros((B,), F32)))
+    nsq = np.asarray(nsq)
+    assert (nsq[np.asarray(m) == 0] == 0.0).all()
+    assert (nsq[np.asarray(m) == 1] > 0.0).all()

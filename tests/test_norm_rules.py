@@ -1,4 +1,6 @@
-"""Unit tests for the per-site norm rules in core/norms.py."""
+"""Unit tests for the per-site norm rules in core/norms.py, pinned against
+the float64 oracles in kernels/ref.py (the single reference implementation
+shared with test_kernels.py and test_fused_norms.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,18 +8,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import norms
-
-
-def _brute_force(x, gy):
-    """n_b = sum_g || x_bg^T gy_bg ||_F^2 via explicit materialization."""
-    B, G, T, di = x.shape
-    out = np.zeros(B)
-    for b in range(B):
-        for g in range(G):
-            m = np.asarray(x[b, g], np.float64).T @ np.asarray(gy[b, g],
-                                                               np.float64)
-            out[b] += (m ** 2).sum()
-    return out
+from repro.kernels import ref
 
 
 @pytest.mark.parametrize("shape", [(2, 1, 8, 5, 7), (3, 4, 6, 9, 3),
@@ -26,7 +17,7 @@ def test_strategies_equal_brute_force(shape, key):
     B, G, T, di, do = shape
     x = jax.random.normal(key, (B, G, T, di))
     gy = jax.random.normal(jax.random.fold_in(key, 1), (B, G, T, do))
-    want = _brute_force(x, gy)
+    want = ref.dense_nsq_brute(x, gy)
     np.testing.assert_allclose(norms.dense_nsq_materialize(x, gy), want,
                                rtol=1e-5)
     np.testing.assert_allclose(norms.dense_nsq_gram(x, gy), want, rtol=1e-5)
@@ -38,7 +29,7 @@ def test_chunked_paths_hit(key, monkeypatch):
     B, G, T, di, do = 2, 1, 12, 10, 6
     x = jax.random.normal(key, (B, G, T, di))
     gy = jax.random.normal(jax.random.fold_in(key, 1), (B, G, T, do))
-    want = _brute_force(x, gy)
+    want = ref.dense_nsq_brute(x, gy)
     np.testing.assert_allclose(norms.dense_nsq_materialize(x, gy), want,
                                rtol=1e-5)
     np.testing.assert_allclose(norms.dense_nsq_gram(x, gy), want, rtol=1e-5)
@@ -49,12 +40,7 @@ def test_embed_rule_vs_scatter_oracle(key):
     ids = jax.random.randint(key, (B, T), 0, V)
     gy = jax.random.normal(jax.random.fold_in(key, 1), (B, T, d))
     got = norms.embed_nsq(ids, gy)
-    want = np.zeros(B)
-    for b in range(B):
-        tab = np.zeros((V, d))
-        for t in range(T):
-            tab[int(ids[b, t])] += np.asarray(gy[b, t])
-        want[b] = (tab ** 2).sum()
+    want = ref.embed_table_nsq_ref(ids, gy, V)
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
 
 
@@ -66,12 +52,7 @@ def test_embed_rule_property(b, t, v, d, seed):
     ids = jax.random.randint(k, (b, t), 0, v)
     gy = jax.random.normal(jax.random.fold_in(k, 1), (b, t, d))
     got = np.asarray(norms.embed_nsq(ids, gy))
-    want = np.zeros(b)
-    for i in range(b):
-        tab = np.zeros((v, d))
-        for tt in range(t):
-            tab[int(ids[i, tt])] += np.asarray(gy[i, tt])
-        want[i] = (tab ** 2).sum()
+    want = ref.embed_table_nsq_ref(ids, gy, v)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
 
 
@@ -81,6 +62,11 @@ def test_auto_picks_cheaper():
         == "materialize"
     assert norms.pick_strategy("auto", (1, 1, 4, 512), (1, 1, 4, 512)) \
         == "gram"
+
+
+def test_fused_flops_equal_materialize():
+    xs, gys = (3, 2, 16, 8), (3, 2, 16, 12)
+    assert norms.flops_fused(xs, gys) == norms.flops_materialize(xs, gys)
 
 
 def test_canon4():
