@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dp test-sites test-mem test-kernels test-kernels-fast test-multidevice bench-smoke bench-serve bench-kernels dryrun-smoke
+.PHONY: test test-fast test-dp test-sites test-mem test-kernels test-kernels-fast test-recipe test-multidevice bench-smoke bench-serve bench-kernels bench-dp dryrun-smoke
 
 # tier-1 verify: the gate for every change
 test:
@@ -48,6 +48,14 @@ test-kernels-fast:
 	$(PY) -m pytest -x -q -m "not slow" \
 	    tests/test_fused_norms.py tests/test_norm_rules.py
 
+# the DP-recipe gate: the augmentation-multiplicity dataflow (K-view
+# batches, fold-into-contraction norms² vs the float64 vmap-over-K
+# oracle, K=1 bit-identity), quantile-adaptive clipping + its ε_clip
+# accountant charge, and the ViT site family end to end
+test-recipe:
+	$(PY) -m pytest -x -q -m "not slow" \
+	    tests/test_augmult.py tests/test_adaptive_clip.py tests/test_vit.py
+
 # fast tier (~4 min vs ~7 for full): skips the interpret-mode Pallas
 # kernel sweeps and the jamba-398b heavies (@pytest.mark.slow); this is
 # what CI runs on push
@@ -73,6 +81,12 @@ bench-serve:
 # non-zero if any gated fused cell is slower than its two-launch baseline
 bench-kernels:
 	$(PY) -m benchmarks.kernel_bench
+
+# DP recipe curves (eps/utility/throughput across augmult K in {1,4,8})
+# -> BENCH_dp_bench.json; exits non-zero if a K-view compiled step is
+# more than 1.15x K slower than the K=1 step
+bench-dp:
+	$(PY) -m benchmarks.dp_bench
 
 # one compile-only distribution cell with batch-local ops (artifact under
 # results/dryrun)

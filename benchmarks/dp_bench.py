@@ -1,0 +1,163 @@
+"""DP-recipe benchmark: epsilon / utility / throughput across augmult.
+
+Trains the reduced ViT-CIFAR10 workload end-to-end through the real
+Trainer (registry sites, Poisson sampling, adaptive clipping, composed
+accountant) at augmentation multiplicity K in {1, 4, 8} and records one
+curve per K into ``BENCH_dp_bench.json``:
+
+* ``eps`` / ``eps_grad`` / ``eps_clip`` — the composed privacy spend per
+  logged step (identical across K: augmult never changes the accounting);
+* ``loss`` trajectory + final synthetic-holdout ``accuracy`` (utility);
+* ``step_time_s`` / ``examples_per_s`` (throughput; the K views of one
+  example ride in the same step).
+
+Regression gate: a K-view step does K times the forward/backward work of
+a single-view step, so the *compiled step* (timed on a prebuilt batch —
+host-side view augmentation is data-pipeline work, recorded separately as
+``batch_build_s``) must stay within ``GATE_FACTOR``·K of the K=1 step —
+more than that means the K axis stopped folding into the contraction
+(e.g. a vmap-over-K crept in) and the process exits non-zero, same
+contract as benchmarks/kernel_bench.py.  The norm strategy is pinned to
+``materialize`` so every cell pays the same per-row side-channel cost:
+under ``auto`` the K=1 cell's short contraction (T < d·d/(d+d)) picks the
+cheaper gram rule while folded K·T cells pick materialize — each cell
+optimal, but the cross-K ratio then super-linear by construction.
+
+Usage:  python -m benchmarks.dp_bench  [--steps N] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+AUGMULTS = (1, 4, 8)
+GATE_FACTOR = 1.15
+OUT = "BENCH_dp_bench.json"
+
+
+def _build(steps: int):
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import (DPConfig, OptimConfig, ShapeConfig,
+                                    TrainConfig)
+    from repro.models import build_model_for
+
+    arch = reduced(ARCHS["vit-cifar10"])
+    model = build_model_for(arch, param_dtype="float32",
+                            compute_dtype="float32", remat="block")
+    shape = ShapeConfig("dp_bench", 0, 8, "train")
+
+    def cfg_for(k: int) -> TrainConfig:
+        return TrainConfig(
+            arch=arch.name, shape=shape.name, steps=steps, log_every=1,
+            ckpt_every=10 * steps, ckpt_dir=tempfile.mkdtemp(),
+            remat="block", param_dtype="float32", compute_dtype="float32",
+            dp=DPConfig(enabled=True, algo="dpsgd_r", clip_norm=1.0,
+                        noise_multiplier=1.0, sampling="poisson",
+                        norm_strategy="materialize",
+                        augmult=k, adaptive_clip=True,
+                        clip_count_noise=4.0),
+            optim=OptimConfig(lr=5e-3, warmup_steps=1, total_steps=steps,
+                              schedule="constant"))
+
+    return arch, model, shape, cfg_for
+
+
+def _accuracy(model, params, batch) -> float:
+    from repro.core.context import DPContext
+    logits, _ = model._forward(params, batch["images"], DPContext.off())
+    pred = np.asarray(jnp.argmax(logits, axis=-1))
+    return float(np.mean(pred == np.asarray(batch["labels"])))
+
+
+def _time_step(tr, state, iters: int = 8):
+    """Best-of-N time of the compiled train step on one prebuilt batch
+    (min, the standard for timing gates: least scheduler noise), plus the
+    host-side batch-build time (augmentation pipeline) measured once."""
+    t0 = time.perf_counter()
+    raw = tr.make_batch(0)
+    build_s = time.perf_counter() - t0
+    batch = tr.shard_batch(raw)
+    key = jax.random.PRNGKey(7)
+    new_state, metrics = tr.step_fn(state, batch, key)   # compile + warm
+    jax.block_until_ready(metrics["loss"])
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _, metrics = tr.step_fn(state, batch, key)
+        jax.block_until_ready(metrics["loss"])
+        best = min(best, time.perf_counter() - t0)
+    return best, build_s
+
+
+def run(steps: int) -> dict:
+    from repro.data import batch_for
+    from repro.train.trainer import Trainer
+
+    arch, model, shape, cfg_for = _build(steps)
+    curves = []
+    for k in AUGMULTS:
+        cfg = cfg_for(k)
+        tr = Trainer(model, cfg, shape)
+        state = tr.init_state(jax.random.PRNGKey(0))
+        step_time, build_s = _time_step(tr, state)
+        state = tr.run(state, install_signals=False)
+        # synthetic holdout: a (seed, step)-keyed batch past the train steps
+        eval_batch = jax.tree.map(
+            jnp.asarray, batch_for(tr.source, arch, shape, steps + 1000))
+        curves.append({
+            "augmult": k,
+            "steps": steps,
+            "eps": [h["eps_total"] for h in tr.history],
+            "eps_grad": [h["eps_grad"] for h in tr.history],
+            "eps_clip": [h["eps_clip"] for h in tr.history],
+            "loss": [h["loss"] for h in tr.history],
+            "clip_norm": [h.get("clip_norm") for h in tr.history],
+            "accuracy": _accuracy(model, state.params, eval_batch),
+            "step_time_s": step_time,
+            "batch_build_s": build_s,
+            "examples_per_s": shape.global_batch / step_time,
+        })
+        c = curves[-1]
+        print(f"[dp_bench] K={k}: eps={c['eps'][-1]:.3f} "
+              f"loss={c['loss'][-1]:.4f} acc={c['accuracy']:.3f} "
+              f"step={step_time * 1e3:.1f} ms", flush=True)
+
+    # ---- throughput gate: t(K) <= GATE_FACTOR * K * t(1) ----------------
+    t1 = curves[0]["step_time_s"]
+    gate = {"factor": GATE_FACTOR, "ok": True, "cells": []}
+    for c in curves[1:]:
+        k = c["augmult"]
+        limit = GATE_FACTOR * k * t1
+        ok = c["step_time_s"] <= limit
+        gate["cells"].append({"augmult": k, "step_time_s": c["step_time_s"],
+                              "limit_s": limit, "ok": ok})
+        gate["ok"] = gate["ok"] and ok
+        status = "OK" if ok else "REGRESSION"
+        print(f"[dp_bench] gate K={k}: {c['step_time_s'] * 1e3:.1f} ms vs "
+              f"limit {limit * 1e3:.1f} ms ({GATE_FACTOR}x·K·t1) {status}",
+              flush=True)
+    return {"workload": arch.name, "global_batch": shape.global_batch,
+            "algo": "dpsgd_r", "sampling": "poisson", "adaptive_clip": True,
+            "curves": curves, "gate": gate}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+    rec = run(args.steps)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[dp_bench] wrote {args.out}", flush=True)
+    raise SystemExit(0 if rec["gate"]["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

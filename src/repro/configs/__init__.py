@@ -7,7 +7,7 @@ from typing import Dict, List
 from repro.configs.base import (ATTN, MAMBA, ArchConfig, CNNConfig, DPConfig,
                                 MambaConfig, MeshConfig, MoEConfig,
                                 OptimConfig, SHAPES, ShapeConfig, TrainConfig,
-                                apply_overrides, parse_set_args,
+                                ViTConfig, apply_overrides, parse_set_args,
                                 shape_applicable)
 
 from repro.configs.phi3_mini_3_8b import ARCH as _phi3
@@ -21,11 +21,13 @@ from repro.configs.grok_1_314b import ARCH as _grok1
 from repro.configs.deepseek_moe_16b import ARCH as _dsmoe
 from repro.configs.jamba_1_5_large_398b import ARCH as _jamba
 from repro.configs.cnn_cifar10 import ARCH as _cnn_cifar10
+from repro.configs.vit_cifar10 import ARCH as _vit_cifar10
 
 ARCHS: Dict[str, ArchConfig] = {
     a.name: a
     for a in (_phi3, _stablelm, _starcoder2, _chatglm3, _musicgen,
-              _mamba2, _chameleon, _grok1, _dsmoe, _jamba, _cnn_cifar10)
+              _mamba2, _chameleon, _grok1, _dsmoe, _jamba, _cnn_cifar10,
+              _vit_cifar10)
 }
 
 
@@ -53,6 +55,18 @@ def reduced(arch: ArchConfig) -> ArchConfig:
                             8 * (i + 1) for i in
                             range(min(len(arch.cnn.stage_channels), 2))),
                         blocks_per_stage=1),
+        )
+    if arch.family == "vit":
+        return replace(
+            arch,
+            name=arch.name + "-reduced",
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=4,
+            head_dim=16,
+            d_ff=128,
+            vit=replace(arch.vit, image_size=8, patch_size=2),
         )
     n_layers = len(arch.layer_pattern) if arch.layer_pattern else 2
     n_heads = 4 if arch.n_heads else 0
@@ -85,6 +99,7 @@ def reduced(arch: ArchConfig) -> ArchConfig:
 __all__ = [
     "ARCHS", "get_arch", "list_archs", "reduced", "shape_applicable",
     "ArchConfig", "ShapeConfig", "MeshConfig", "DPConfig", "TrainConfig",
-    "OptimConfig", "MoEConfig", "MambaConfig", "CNNConfig", "SHAPES",
+    "OptimConfig", "MoEConfig", "MambaConfig", "CNNConfig", "ViTConfig",
+    "SHAPES",
     "ATTN", "MAMBA", "apply_overrides", "parse_set_args",
 ]

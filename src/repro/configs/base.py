@@ -51,6 +51,32 @@ class CNNConfig:
     stage_channels: Tuple[int, ...] = (16, 32, 64)   # one entry per stage
     blocks_per_stage: int = 2                        # residual blocks/stage
     kernel: int = 3
+    # classifier width; 0 = inherit ``ArchConfig.vocab`` (the PR-4 behavior,
+    # where vocab doubled as the class count).  Read via ``arch.n_classes``.
+    num_classes: int = 0
+
+
+@dataclass(frozen=True)
+class ViTConfig:
+    """Vision-transformer workload (family="vit") — patch-embed (a conv2d
+    site with VALID padding and stride = patch size), transformer blocks
+    (dense + attention sites), mean-pool head.  Transformer dims come from
+    the owning ``ArchConfig`` (d_model / n_heads / d_ff / n_layers);
+    this holds only the image frontend."""
+    image_size: int = 32
+    in_channels: int = 3
+    patch_size: int = 4
+    num_classes: int = 0            # 0 = inherit ArchConfig.vocab
+
+    @property
+    def grid(self) -> int:
+        assert self.image_size % self.patch_size == 0, (
+            self.image_size, self.patch_size)
+        return self.image_size // self.patch_size
+
+    @property
+    def n_patches(self) -> int:
+        return self.grid * self.grid
 
 
 @dataclass(frozen=True)
@@ -72,7 +98,7 @@ class MambaConfig:
 @dataclass(frozen=True)
 class ArchConfig:
     name: str
-    family: str             # dense | ssm | moe | hybrid | audio | vlm | cnn
+    family: str             # dense | ssm | moe | hybrid | audio | vlm | cnn | vit
     n_layers: int
     d_model: int
     n_heads: int                    # query heads (0 for attn-free)
@@ -92,6 +118,7 @@ class ArchConfig:
     moe: MoEConfig = field(default_factory=MoEConfig)
     mamba: MambaConfig = field(default_factory=MambaConfig)
     cnn: CNNConfig = field(default_factory=CNNConfig)  # family == "cnn" only
+    vit: ViTConfig = field(default_factory=ViTConfig)  # family == "vit" only
     # modality frontend stub: inputs are precomputed embeddings, not token ids
     embed_stub: bool = False
     # memory plan: shard params/opt-state over data axis too (FSDP/ZeRO-3-lite)
@@ -100,6 +127,20 @@ class ArchConfig:
     source: str = ""                # provenance note
 
     # -- derived ---------------------------------------------------------
+    @property
+    def n_classes(self) -> int:
+        """Classifier width for image families.  Explicit ``num_classes``
+        wins; 0 falls back to ``vocab`` (backward compat with the PR-4
+        configs where vocab doubled as the class count)."""
+        if self.family == "vit":
+            return self.vit.num_classes or self.vocab
+        return self.cnn.num_classes or self.vocab
+
+    def image_shape(self) -> Tuple[int, int, int]:
+        """(H, W, C) input geometry for image families (cnn / vit)."""
+        c = self.vit if self.family == "vit" else self.cnn
+        return (c.image_size, c.image_size, c.in_channels)
+
     @property
     def hd(self) -> int:
         if self.head_dim:
@@ -128,6 +169,8 @@ class ArchConfig:
         import jax
         if self.family == "cnn":
             from repro.models.cnn import abstract_params  # lazy, avoids cycle
+        elif self.family == "vit":
+            from repro.models.vit import abstract_params
         else:
             from repro.models.transformer import abstract_params
         tree = abstract_params(self)
@@ -183,9 +226,12 @@ SHAPES: Dict[str, ShapeConfig] = {
 LONG_OK_FAMILIES = ("ssm", "hybrid")
 
 
+IMAGE_FAMILIES = ("cnn", "vit")
+
+
 def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> bool:
-    if arch.family == "cnn":
-        return shape.kind == "train"   # CNNs neither prefill nor decode
+    if arch.family in IMAGE_FAMILIES:
+        return shape.kind == "train"   # image models neither prefill nor decode
     if shape.name == "long_500k":
         return arch.family in LONG_OK_FAMILIES
     return True
@@ -232,6 +278,7 @@ FAMILY_REMAT_POLICIES: Dict[str, Tuple[str, ...]] = {
     "audio": ("none", "block", "sites"),
     "vlm": ("none", "block", "sites"),
     "cnn": ("none", "block", "sites"),
+    "vit": ("none", "block", "sites"),
 }
 
 REMAT_POLICIES: Tuple[str, ...] = ("none", "block", "sites")
@@ -313,16 +360,39 @@ class DPConfig:
     ``use_kernels`` — take each site's registered Pallas kernel route
     (kernels/pegrad_norm.py, gram_norm.py, fused_bwd.py) instead of the
     chunked XLA rules; interpret-mode on CPU, Mosaic on TPU.
+
+    ``augmult`` — augmentation multiplicity K ("Toward Training at
+    ImageNet Scale with DP"): each example contributes K augmented views
+    whose gradients are *averaged before clipping*, so the example stays
+    one privacy unit and the accounting is unchanged.  The batch contract
+    is B·K rows, b-major/k-minor (view k of example b at row b·K + k);
+    the per-example norm is the norm of the K-averaged gradient, computed
+    by every norm rule / kernel route without materializing it (the K
+    axis folds into the contraction axis with 1/K-scaled cotangents).
+    ``augmult=1`` is bit-identical to the single-view dataflow.
+
+    ``adaptive_clip`` — quantile-based adaptive clip norm (Andrew et al.;
+    core/adaptive_clip.py): each step privately estimates the fraction of
+    examples with norm ≤ C via a noisy count (stddev ``clip_count_noise``)
+    and updates C ← C·exp(−clip_lr·(b̃ − clip_quantile)).  The count is a
+    second Poisson-subsampled Gaussian mechanism (sensitivity 1) composed
+    into the accountant — trainer logs report ε_grad / ε_clip / ε_total.
+    ``clip_norm`` becomes the *initial* C.
     """
     enabled: bool = True
     algo: str = "dpsgd_r"          # sgd | dpsgd | dpsgd_r | dpsgd_r1f
-    clip_norm: float = 1.0         # C
+    clip_norm: float = 1.0         # C (initial C under adaptive_clip)
     noise_multiplier: float = 1.0  # sigma
     delta: float = 1e-5
     sampling: str = "fixed"        # fixed | poisson (see docstring)
     microbatch: int = 0            # vanilla dpsgd: vmap chunk (0 = whole batch)
     norm_strategy: str = "auto"    # auto | materialize | gram | fused
     use_kernels: bool = False      # route norm rules through Pallas kernels
+    augmult: int = 1               # K augmented views per example (see above)
+    adaptive_clip: bool = False    # quantile-adaptive C (see above)
+    clip_quantile: float = 0.5     # target quantile γ of unclipped norms
+    clip_lr: float = 0.2           # geometric update rate η for C
+    clip_count_noise: float = 10.0  # σ_b of the noisy below-C count
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,29 @@
+"""CIFAR-10-scale vision transformer — the registry-backed ViT workload.
+
+A small ViT (patch 4 over 32×32×3 → 64 patches, 8 layers × d_model 256 —
+the scale of the DP-vision-transformer studies the augmult recipe comes
+from).  Transformer dims live on the ``ArchConfig`` as for every text
+family; ``ViTConfig`` holds only the image frontend, and ``num_classes``
+is explicit (models/vit.py reads ``arch.n_classes``).
+"""
+from repro.configs.base import ArchConfig, ViTConfig
+
+ARCH = ArchConfig(
+    name="vit-cifar10",
+    family="vit",
+    n_layers=8,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=1024,
+    vocab=10,          # kept in sync with num_classes (data sources use it)
+    mlp_act="gelu",
+    rotary_pct=0.0,    # positions come from the learned embedding
+    vit=ViTConfig(
+        image_size=32,
+        in_channels=3,
+        patch_size=4,
+        num_classes=10,
+    ),
+    source="ViT-S/4-style CIFAR-10 ViT (DP augmult recipe scale)",
+)

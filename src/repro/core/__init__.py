@@ -1,5 +1,6 @@
 """DP-SGD core: the paper's contribution as a composable JAX module."""
-from repro.core.accountant import PrivacyAccountant, compute_epsilon
+from repro.core.accountant import (Mechanism, PrivacyAccountant,
+                                   compute_epsilon, compute_epsilon_composed)
 from repro.core.algo import (list_algos, make_clipped_sum_fn,
                              make_noisy_grad_fn, register_algo,
                              unregister_algo)
@@ -11,6 +12,7 @@ from repro.core.sites import (SiteSpec, get_site, list_sites,
                               unregister_site)
 
 __all__ = [
+    "Mechanism", "compute_epsilon_composed",
     "PrivacyAccountant", "compute_epsilon", "make_noisy_grad_fn",
     "make_clipped_sum_fn", "register_algo", "unregister_algo", "list_algos",
     "clip_and_sum", "clip_factors", "tree_per_example_norm_sq",

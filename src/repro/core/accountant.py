@@ -28,7 +28,7 @@ Pure Python/math — runs on the host, no jax required.  The trainer reports
 from __future__ import annotations
 
 import math
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 # Dense low-order coverage (the optimum for practical (q, σ) almost always
 # lies below 128), then geometric tail for tiny-ε / huge-σ regimes.
@@ -129,28 +129,42 @@ def _extend_orders(orders: Sequence[int]) -> Tuple[int, ...]:
     return tuple(orders) + tuple(new)
 
 
-def compute_epsilon_from_rate(
-        steps: int, sample_rate: float, noise_multiplier: float, delta: float,
+class Mechanism(NamedTuple):
+    """One Poisson-subsampled Gaussian mechanism running every step.
+
+    RDP composes additively per order, so a training step that runs several
+    private queries (the noisy gradient sum; the adaptive-clip noisy count,
+    core/adaptive_clip.py) is priced by summing their per-step RDP curves
+    before the order optimization — strictly tighter than optimizing each
+    mechanism's ε separately and adding."""
+    name: str
+    sample_rate: float
+    noise_multiplier: float
+
+
+def compute_epsilon_composed(
+        steps: int, mechanisms: Sequence[Mechanism], delta: float,
         orders: Sequence[int] = DEFAULT_ORDERS,
         conversion=rdp_to_eps,
         rdp1_cache: Optional[Dict[int, float]] = None) -> Tuple[float, int]:
-    """(ε, best_order) after ``steps`` Poisson-subsampled Gaussian steps at
-    the *true* per-step sample rate ``q`` and noise multiplier σ.
+    """(ε, best_order) after ``steps`` composed steps, each running every
+    mechanism in ``mechanisms`` once.  Per-step RDP(a) = Σᵢ RDPᵢ(a).
 
     The order grid self-extends while the optimum sits on its upper edge;
-    the winning order's RDP is re-derived through an independent numerical
-    path as a self-consistency check (plus local grid-minimality against
-    the neighbouring orders).
+    the winning order's composed RDP is re-derived through an independent
+    numerical path as a self-consistency check (plus local grid-minimality
+    against the neighbouring orders).
 
-    ``rdp1_cache``: optional {order: per-step RDP} dict for repeated
-    queries at fixed (q, σ) — per-step RDP is steps-independent, so a
-    caller polling ε every log step (``PrivacyAccountant``) pays the
-    binomial sums only once per order."""
+    ``rdp1_cache``: optional {order: per-step composed RDP} dict for
+    repeated queries at a fixed mechanism set — per-step RDP is
+    steps-independent, so a caller polling ε every log step
+    (``PrivacyAccountant``) pays the binomial sums only once per order."""
     if steps < 0:
         raise ValueError(f"steps={steps} < 0")
-    if steps == 0 or sample_rate == 0.0:
+    mechs = [m for m in mechanisms if m.sample_rate != 0.0]
+    if steps == 0 or not mechs:
         return 0.0, int(orders[0])
-    if noise_multiplier <= 0:
+    if any(m.noise_multiplier <= 0 for m in mechs):
         return math.inf, int(orders[0])
 
     grid = tuple(sorted({int(a) for a in orders}))
@@ -159,7 +173,9 @@ def compute_epsilon_from_rate(
     def rdp1(a: int) -> float:
         if rdp1_cache is not None and a in rdp1_cache:
             return rdp1_cache[a]
-        r = rdp_subsampled_gaussian(sample_rate, noise_multiplier, a)
+        r = math.fsum(rdp_subsampled_gaussian(m.sample_rate,
+                                              m.noise_multiplier, a)
+                      for m in mechs)
         if rdp1_cache is not None:
             rdp1_cache[a] = r
         return r
@@ -197,12 +213,14 @@ def compute_epsilon_from_rate(
             lo = m1
     best_a = min(range(lo, hi + 1), key=eps_at)
     best_eps = eps_at(best_a)
-    # -- self-consistency: re-derive the winning order's RDP through an
-    # INDEPENDENT numerical path (exact binomials + compensated linear-
-    # space summation vs the production logsumexp); skipped only where the
-    # linear-space evaluation would overflow float64
-    direct = _rdp_direct_sum(sample_rate, noise_multiplier, best_a)
-    if direct is not None:
+    # -- self-consistency: re-derive the winning order's composed RDP
+    # through an INDEPENDENT numerical path (exact binomials + compensated
+    # linear-space summation vs the production logsumexp), per mechanism;
+    # skipped only where the linear-space evaluation would overflow float64
+    directs = [_rdp_direct_sum(m.sample_rate, m.noise_multiplier, best_a)
+               for m in mechs]
+    if all(d is not None for d in directs):
+        direct = math.fsum(directs)
         r = rdp1(best_a)
         # abs_tol floor: at tiny RDP both paths hit the same log1p-scale
         # cancellation (~1e-16 absolute), which 1e-9 comfortably covers
@@ -219,6 +237,19 @@ def compute_epsilon_from_rate(
     return best_eps, best_a
 
 
+def compute_epsilon_from_rate(
+        steps: int, sample_rate: float, noise_multiplier: float, delta: float,
+        orders: Sequence[int] = DEFAULT_ORDERS,
+        conversion=rdp_to_eps,
+        rdp1_cache: Optional[Dict[int, float]] = None) -> Tuple[float, int]:
+    """(ε, best_order) after ``steps`` Poisson-subsampled Gaussian steps at
+    the *true* per-step sample rate ``q`` and noise multiplier σ — the
+    single-mechanism case of ``compute_epsilon_composed``."""
+    return compute_epsilon_composed(
+        steps, (Mechanism("grad", sample_rate, noise_multiplier),), delta,
+        orders=orders, conversion=conversion, rdp1_cache=rdp1_cache)
+
+
 def compute_epsilon(steps: int, batch_size: int, dataset_size: int,
                     noise_multiplier: float, delta: float,
                     orders: Sequence[int] = DEFAULT_ORDERS) -> Tuple[float, int]:
@@ -229,13 +260,22 @@ def compute_epsilon(steps: int, batch_size: int, dataset_size: int,
 
 
 class PrivacyAccountant:
-    """Stateful wrapper used by the trainer (state = just the step count,
-    so checkpoint/restore is trivial and retried steps are idempotent).
+    """Stateful wrapper used by the trainer (state = just the step count
+    and the mechanism list, so checkpoint/restore is trivial and retried
+    steps are idempotent).
 
     ``sample_rate`` (the true per-step Poisson rate) takes precedence over
     the ``batch_size / dataset_size`` fallback — under
     ``DPConfig.sampling="poisson"`` the trainer passes the exact rate its
-    sampler draws with, so the priced mechanism IS the executed one."""
+    sampler draws with, so the priced mechanism IS the executed one.
+
+    The accountant starts with the gradient mechanism ("grad") and
+    additional per-step mechanisms compose in via ``compose`` — e.g. the
+    adaptive-clip noisy count (sensitivity 1, noise ``clip_count_noise``,
+    same sampling rate; core/adaptive_clip.py).  ``epsilon_at`` prices the
+    composed RDP (summed per order, then optimized — tighter than adding
+    per-mechanism ε); ``epsilon_breakdown`` reports each mechanism alone
+    plus the composed total (the trainer's ε_grad / ε_clip / ε_total)."""
 
     def __init__(self, batch_size: int, dataset_size: int,
                  noise_multiplier: float, delta: float,
@@ -246,15 +286,40 @@ class PrivacyAccountant:
         self.delta = delta
         self.sample_rate = (sample_rate if sample_rate is not None
                             else batch_size / dataset_size)
-        # per-step RDP is steps-independent at fixed (q, sigma): cache it
-        # so the trainer's every-log-step polling pays the binomial sums
-        # only once per order
-        self._rdp1_cache: Dict[int, float] = {}
+        self.mechanisms: List[Mechanism] = [
+            Mechanism("grad", self.sample_rate, noise_multiplier)]
+        # per-step RDP is steps-independent at a fixed mechanism set: cache
+        # it (keyed by the set) so the trainer's every-log-step polling
+        # pays the binomial sums only once per order
+        self._caches: Dict[tuple, Dict[int, float]] = {}
 
-    def epsilon_at(self, step: int) -> float:
+    def compose(self, mechanism: Mechanism) -> None:
+        """Add a per-step mechanism to the composition (idempotent by
+        name: re-composing a name replaces it — a restarted trainer can
+        rebuild its mechanism set without double-charging)."""
+        if any(m.name == mechanism.name for m in self.mechanisms):
+            self.mechanisms = [mechanism if m.name == mechanism.name else m
+                               for m in self.mechanisms]
+        else:
+            self.mechanisms = self.mechanisms + [mechanism]
+
+    def _epsilon(self, step: int, mechs: Tuple[Mechanism, ...]) -> float:
         if step <= 0:
             return 0.0
-        eps, _ = compute_epsilon_from_rate(step, self.sample_rate,
-                                           self.noise_multiplier, self.delta,
-                                           rdp1_cache=self._rdp1_cache)
+        key = tuple((m.sample_rate, m.noise_multiplier) for m in mechs)
+        cache = self._caches.setdefault(key, {})
+        eps, _ = compute_epsilon_composed(step, mechs, self.delta,
+                                          rdp1_cache=cache)
         return eps
+
+    def epsilon_at(self, step: int) -> float:
+        """ε of the full composition after ``step`` steps."""
+        return self._epsilon(step, tuple(self.mechanisms))
+
+    def epsilon_breakdown(self, step: int) -> Dict[str, float]:
+        """{"eps_<name>": ε of that mechanism alone, ..., "eps_total": ε of
+        the composition}.  With a single mechanism, eps_grad == eps_total."""
+        out = {f"eps_{m.name}": self._epsilon(step, (m,))
+               for m in self.mechanisms}
+        out["eps_total"] = self.epsilon_at(step)
+        return out

@@ -1,0 +1,80 @@
+"""Quantile-based adaptive clip norm (Andrew et al. 2021, the recipe
+"Toward Training at ImageNet Scale with DP" uses).
+
+Each step privately estimates the fraction b̃ of examples whose unclipped
+per-example gradient norm is at most the current clip norm C, then moves C
+geometrically toward the configured quantile γ:
+
+    b̃   = (Σᵢ mᵢ·1[nᵢ ≤ C]  +  N(0, σ_b²)) / expected_batch
+    C'  = C · exp(−η · (b̃ − γ))
+
+The count has add/remove-one sensitivity 1, so the noisy count is itself a
+Poisson-subsampled Gaussian mechanism with noise multiplier σ_b
+(``DPConfig.clip_count_noise``) at the same sampling rate as the gradient
+mechanism — ``mechanism(dp, q)`` below returns the ``accountant.Mechanism``
+the trainer composes so the charge shows up as ε_clip in the per-mechanism
+breakdown ("How to DP-fy ML": the quantile estimate is a private query and
+must be paid for).
+
+The per-example norms the estimate consumes are free: DP-SGD(R)'s
+side-channel (or vanilla DP-SGD's explicit norms) already produces them.
+Division is by the *expected* batch size, never the realized Poisson draw.
+
+State is one scalar, carried inside the optimizer state (train/trainer.py
+wraps opt_state as ``{"opt": ..., "clip": {"clip_norm": C}}``), so
+checkpoint/resume restores the exact clip trajectory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accountant import Mechanism
+
+# opt_state dict key the trainer stores the clip state under (mirrors the
+# "grad_err" wrapping of compress_pod_grads)
+CLIP_STATE_KEY = "clip"
+
+
+def init_state(dp) -> dict:
+    """Initial clip state: C starts at ``dp.clip_norm``."""
+    return {"clip_norm": jnp.asarray(dp.clip_norm, jnp.float32)}
+
+
+def noisy_fraction_below(nsq: jax.Array, mask: jax.Array, clip_norm,
+                         count_noise: float, expected_batch: float,
+                         key: jax.Array) -> jax.Array:
+    """Privatized fraction of (real) examples with norm ≤ C.
+
+    ``nsq``/``mask``: (B,) per-example squared norms and 0/1 validity
+    (padded Poisson rows carry mask 0 AND exact-zero nsq — they are
+    excluded by the mask term, not by luck).  ``expected_batch`` is q·N,
+    a Python float — normalizing by the realized count would leak it."""
+    n = jnp.sqrt(jnp.maximum(nsq, 0.0))
+    below = jnp.sum(mask * (n <= clip_norm).astype(jnp.float32))
+    noisy = below + float(count_noise) * jax.random.normal(key, (), jnp.float32)
+    return noisy / float(expected_batch)
+
+
+def updated_clip(clip_norm, frac_below, quantile: float, lr: float):
+    """Geometric quantile step: C' = C·exp(−η(b̃ − γ)).  Multiplicative, so
+    C stays positive regardless of the noise in b̃."""
+    return clip_norm * jnp.exp(-float(lr) * (frac_below - float(quantile)))
+
+
+def update(state: dict, nsq: jax.Array, mask: jax.Array, dp,
+           expected_batch: float, key: jax.Array):
+    """One adaptive-clip step: (new_state, b̃).  Pure function of traced
+    values — lives inside the jitted train step."""
+    c = state["clip_norm"]
+    frac = noisy_fraction_below(nsq, mask, c, dp.clip_count_noise,
+                                expected_batch, key)
+    return {"clip_norm": updated_clip(c, frac, dp.clip_quantile,
+                                      dp.clip_lr)}, frac
+
+
+def mechanism(dp, sample_rate: float) -> Mechanism:
+    """The accountant entry for the noisy below-C count: sensitivity-1
+    Gaussian with σ_b absolute noise ⇒ noise multiplier σ_b, at the same
+    per-step sampling rate as the gradient mechanism."""
+    return Mechanism("clip", float(sample_rate), float(dp.clip_count_noise))

@@ -34,10 +34,31 @@ exact); the mask is chunked alongside the data.  Noise is added once per
 step, after the full-batch reduction — identical privacy accounting and
 identical update to grad_accum=1.
 
-``expected_batch_size``: the normalizer of the private update.  Defaults to
-the physical batch size (fixed-size mode); under Poisson sampling the
-trainer passes the *expected* sample size q·N (Algorithm 1 line 24's lot
-size) — never the realized draw, which would leak the sample size.
+``expected_batch_size``: the normalizer of the private update, counted in
+*examples* (privacy units).  Defaults to the physical example count
+(fixed-size mode); under Poisson sampling the trainer passes the
+*expected* sample size q·N (Algorithm 1 line 24's lot size) — never the
+realized draw, which would leak the sample size.
+
+Augmentation multiplicity (``dp.augmult = K > 1``): every batch leaf
+carries B·K rows — K augmented views of each example, b-major/k-minor
+(view k of example b at row b·K + k; data/pipeline.py ``augment_expand``)
+— and the ``"mask"`` leaf is broadcast over K (an example is present with
+all its views or none).  The per-example gradient is the **mean over the
+K views**, clipped once per example: the algos implement this by seeding
+every backward pass with ``m/K``-scaled loss cotangents, so the pulled-
+back parameter cotangent of example b is exactly its K-averaged gradient
+and — through the augmult-aware site rules (core/sites.py, which fold the
+K views into each rule's contraction axis) — the side-channel accumulator
+holds ‖mean-over-K grad‖² per *example*, shape (B,).  ``augmult=1`` is
+bit-identical to the single-view dataflow.  The clipped-sum contract is
+therefore: ``losses`` stay per-row (B·K,), ``nsq`` is per-example (B,).
+
+Adaptive clipping: a batch may carry a ``"clip_norm"`` leaf — a traced
+scalar overriding ``dp.clip_norm`` (injected by ``make_noisy_grad_fn``
+from the trainer's clip state; core/adaptive_clip.py).  ``split_clip``
+below is the single place the override is resolved, so registered algos
+stay free of adaptive-clip conditionals.
 
 All four produce gradients in the same tree/dtype (f32), so the optimizer
 is agnostic.  The three private algos produce *identical* updates for the
@@ -68,6 +89,7 @@ from repro.core import clipping, noise
 from repro.core.context import DPContext
 
 MASK_KEY = "mask"
+CLIP_KEY = "clip_norm"
 
 
 def _batch_size(batch) -> int:
@@ -75,30 +97,71 @@ def _batch_size(batch) -> int:
 
 
 def split_mask(batch) -> Tuple[dict, Optional[jax.Array]]:
-    """Split the optional ``"mask"`` leaf off a batch.  Returns
-    (model inputs, f32 (B,) 0/1 mask or None)."""
-    if isinstance(batch, dict) and MASK_KEY in batch:
-        data = {k: v for k, v in batch.items() if k != MASK_KEY}
-        return data, batch[MASK_KEY].astype(jnp.float32)
-    return batch, None
+    """Split the optional ``"mask"`` (and ``"clip_norm"``) leaves off a
+    batch.  Returns (model inputs, f32 (B·K,) 0/1 mask or None)."""
+    data, mask, _ = split_clip(batch)
+    return data, mask
+
+
+def split_clip(batch):
+    """(model inputs, mask or None, clip-norm override or None): strips
+    both auxiliary leaves so model code never sees them."""
+    if not isinstance(batch, dict):
+        return batch, None, None
+    aux = {MASK_KEY, CLIP_KEY}
+    if not (aux & set(batch)):
+        return batch, None, None
+    data = {k: v for k, v in batch.items() if k not in aux}
+    mask = batch.get(MASK_KEY)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+    return data, mask, batch.get(CLIP_KEY)
 
 
 def _ones_if_none(mask, B: int) -> jax.Array:
     return jnp.ones((B,), jnp.float32) if mask is None else mask
 
 
-def _metrics(losses, nsq, clip_norm, mask):
-    """Mask-weighted metrics: padded rows carry exact-zero norms² but
-    garbage losses, so every mean/frac is taken over real rows only."""
+def _views(dp: DPConfig) -> int:
+    return max(1, int(getattr(dp, "augmult", 1)))
+
+
+def _example_mask(m_rows: jax.Array, k: int) -> jax.Array:
+    """(B·K,) row mask -> (B,) per-example mask (views share the mask:
+    an example is present with all K views or with none)."""
+    if k == 1:
+        return m_rows
+    return m_rows.reshape(-1, k)[:, 0]
+
+
+def _view_seed(m_rows: jax.Array, k: int) -> jax.Array:
+    """Loss-cotangent seed: the row mask scaled 1/K so pulled-back grads
+    (and the side-channel norms²) are means over the K views.  K=1 keeps
+    the mask untouched (bit-identity)."""
+    return m_rows if k == 1 else m_rows / k
+
+
+def _expand_rows(c_ex: jax.Array, k: int) -> jax.Array:
+    """(B,) per-example weights -> (B·K,) row weights carrying the 1/K
+    view averaging (pass-2 seeds: Σ_b c_b · mean_k L_bk)."""
+    return c_ex if k == 1 else jnp.repeat(c_ex, k) / k
+
+
+def _metrics(losses, nsq, clip_norm, mask_rows, mask_ex):
+    """Mask-weighted metrics: padded rows/examples carry exact-zero norms²
+    but garbage losses, so every mean/frac is taken over real entries only.
+    ``losses``/``mask_rows`` are per-row (B·K,); ``nsq``/``mask_ex`` are
+    per-example (B,)."""
     n = jnp.sqrt(jnp.maximum(nsq, 0.0))
-    count = jnp.maximum(jnp.sum(mask), 1.0)
+    count_rows = jnp.maximum(jnp.sum(mask_rows), 1.0)
+    count_ex = jnp.maximum(jnp.sum(mask_ex), 1.0)
     return {
-        "loss": jnp.sum(losses * mask) / count,
-        "grad_norm_mean": jnp.sum(n * mask) / count,
-        "grad_norm_max": jnp.max(n * mask),
-        "clipped_frac": jnp.sum((n > clip_norm).astype(jnp.float32) * mask)
-                        / count,
-        "realized_batch": jnp.sum(mask),
+        "loss": jnp.sum(losses * mask_rows) / count_rows,
+        "grad_norm_mean": jnp.sum(n * mask_ex) / count_ex,
+        "grad_norm_max": jnp.max(n * mask_ex),
+        "clipped_frac": jnp.sum((n > clip_norm).astype(jnp.float32) * mask_ex)
+                        / count_ex,
+        "realized_batch": jnp.sum(mask_ex),
     }
 
 
@@ -125,19 +188,26 @@ def _sgd_sum(loss_fn):
 
 def _dpsgd_sum(loss_fn, dp: DPConfig):
     def fn(params, batch):
-        data, mask = split_mask(batch)
-        B = _batch_size(data)
-        m = _ones_if_none(mask, B)
-        mb = dp.microbatch or B
-        assert B % mb == 0, (B, mb)
+        data, mask, clip = split_clip(batch)
+        R = _batch_size(data)
+        K = _views(dp)
+        assert R % K == 0, (R, K)
+        B = R // K                         # examples (privacy units)
+        m = _ones_if_none(mask, R)
+        me = _example_mask(m, K)
+        C = dp.clip_norm if clip is None else clip
+        # microbatch counts *examples* (each example carries its K views)
+        mbe = dp.microbatch or B
+        assert B % mbe == 0, (B, mbe, K)
 
         def one_example_grad(p, ex, mi):
+            # ex leaves: (K, ...) — the K views of one example
             def l(p_):
-                ex1 = jax.tree.map(lambda a: a[None], ex)
-                losses, _ = loss_fn(p_, ex1, DPContext.off())
+                losses, _ = loss_fn(p_, ex, DPContext.off())
                 # mask at the loss: padded rows backprop an exact-zero
-                # cotangent -> zero per-example grad, zero norm
-                return mi * losses[0], losses[0]
+                # cotangent -> zero per-example grad, zero norm; mean over
+                # the K views = the augmult-averaged per-example grad
+                return mi * jnp.mean(losses), losses
             (_, raw), g = jax.value_and_grad(l, has_aux=True)(p)
             return raw, g
 
@@ -145,45 +215,58 @@ def _dpsgd_sum(loss_fn, dp: DPConfig):
             cdata, cm = chunk
             losses, gb = jax.vmap(
                 lambda ex, mi: one_example_grad(params, ex, mi))(cdata, cm)
-            summed, nsq = clipping.clip_and_sum(gb, dp.clip_norm, mask=cm)
+            summed, nsq = clipping.clip_and_sum(gb, C, mask=cm)
             acc = jax.tree.map(lambda a, s: a + s.astype(jnp.float32),
                                acc, summed)
             return acc, (losses, nsq)
 
         zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        chunks = jax.tree.map(lambda a: a.reshape((B // mb, mb) + a.shape[1:]),
-                              (data, m))
-        summed, (losses, nsq) = jax.lax.scan(microbatch_step, zeros, chunks)
+        # (B, K, ...) example-major chunks: scan over microbatches of
+        # examples, vmap per example, each example carrying its K views
+        chunks = jax.tree.map(
+            lambda a: a.reshape((B // mbe, mbe, K) + a.shape[1:]), data)
+        summed, (losses, nsq) = jax.lax.scan(
+            microbatch_step, zeros,
+            (chunks, me.reshape(B // mbe, mbe)))
         return summed, (losses.reshape(-1), nsq.reshape(-1))
     return fn
 
 
 def _dpsgd_r_sum(loss_fn, dp: DPConfig):
     def fn(params, batch):
-        data, mask = split_mask(batch)
-        B = _batch_size(data)
-        m = _ones_if_none(mask, B)
+        data, mask, clip = split_clip(batch)
+        R = _batch_size(data)
+        K = _views(dp)
+        assert R % K == 0, (R, K)
+        B = R // K
+        m = _ones_if_none(mask, R)
+        me = _example_mask(m, K)
+        C = dp.clip_norm if clip is None else clip
+        seed = _view_seed(m, K)
 
         # ---- pass 1: per-example grad norms via the side-channel --------
-        # Seeding Σ mᵢLᵢ (not Σ Lᵢ) makes every padded row's gy — and hence
-        # its norms² through all DPContext sites — an exact zero.
+        # Seeding Σ (mᵢ/K)·Lᵢ (not Σ Lᵢ) makes every padded row's gy — and
+        # hence its norms² through all DPContext sites — an exact zero, and
+        # scales the cotangents so the (B,) accumulator holds the squared
+        # norm of each example's K-averaged gradient.
         def pass1(p, acc0):
             ctx = DPContext(acc=acc0, mode="norm", strategy=dp.norm_strategy,
-                            use_kernels=dp.use_kernels)
+                            use_kernels=dp.use_kernels, augmult=K)
             losses, ctx = loss_fn(p, data, ctx)
-            return (jnp.sum(m * losses), ctx.acc), losses
+            return (jnp.sum(seed * losses), ctx.acc), losses
 
         acc0 = jnp.zeros((B,), jnp.float32)
         _, pull, losses = jax.vjp(pass1, params, acc0, has_aux=True)
         # params cotangent is discarded -> its weight-grad GEMMs are DCE'd.
         _, nsq = pull((jnp.ones(()), jnp.zeros((B,), jnp.float32)))
 
-        c = clipping.clip_factors(nsq, dp.clip_norm) * m       # line 35
+        c = clipping.clip_factors(nsq, C) * me                 # line 35
+        crow = _expand_rows(c, K)          # Σ_b c_b · mean_k L_bk
 
         # ---- pass 2: backprop of the reweighted loss --------------------
         def reweighted_loss(p):
             ls, _ = loss_fn(p, data, DPContext.off())
-            return jnp.sum(jax.lax.stop_gradient(c) * ls)      # line 36
+            return jnp.sum(jax.lax.stop_gradient(crow) * ls)   # line 36
 
         grads = jax.grad(reweighted_loss)(params)              # line 39
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
@@ -209,22 +292,27 @@ def _dpsgd_r1f_sum(loss_fn, dp: DPConfig):
     identical update to ``dpsgd_r``/``dpsgd`` (tested to equality).
     """
     def fn(params, batch):
-        data, mask = split_mask(batch)
-        B = _batch_size(data)
-        m = _ones_if_none(mask, B)
+        data, mask, clip = split_clip(batch)
+        R = _batch_size(data)
+        K = _views(dp)
+        assert R % K == 0, (R, K)
+        B = R // K
+        m = _ones_if_none(mask, R)
+        me = _example_mask(m, K)
+        C = dp.clip_norm if clip is None else clip
 
         def both(p, acc0):
             ctx = DPContext(acc=acc0, mode="norm", strategy=dp.norm_strategy,
-                            use_kernels=dp.use_kernels)
+                            use_kernels=dp.use_kernels, augmult=K)
             losses, ctx = loss_fn(p, data, ctx)
             return (losses, ctx.acc), losses
 
         acc0 = jnp.zeros((B,), jnp.float32)
         _, pull, losses = jax.vjp(both, params, acc0, has_aux=True)
         zero_acc = jnp.zeros((B,), jnp.float32)
-        _, nsq = pull((m, zero_acc))
-        c = clipping.clip_factors(nsq, dp.clip_norm) * m
-        grads, _ = pull((jax.lax.stop_gradient(c), zero_acc))
+        _, nsq = pull((_view_seed(m, K), zero_acc))
+        c = clipping.clip_factors(nsq, C) * me
+        grads, _ = pull((jax.lax.stop_gradient(_expand_rows(c, K)), zero_acc))
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         return grads, (losses, nsq)
     return fn
@@ -306,21 +394,41 @@ def make_noisy_grad_fn(loss_fn: Callable, dp: DPConfig,
     """
     csum = make_clipped_sum_fn(loss_fn, dp)
     private = algo_is_private(dp.algo, dp.enabled)
+    K = _views(dp)
 
-    def fn(params, batch, key):
+    def fn(params, batch, key, clip_norm=None):
+        """``clip_norm``: optional traced override of ``dp.clip_norm`` —
+        the trainer's adaptive-clip state (core/adaptive_clip.py).  It is
+        injected into the (chunked) batch as the ``"clip_norm"`` leaf, so
+        registered algos pick it up through ``split_clip`` with no
+        signature change.  When given under ``dp.adaptive_clip``, metrics
+        additionally carry clip_norm / clip_frac_below / clip_norm_next."""
         _, mask = split_mask(batch)
-        B = _batch_size(batch)
-        full_mask = _ones_if_none(mask, B)
+        R = _batch_size(batch)
+        assert R % K == 0, (R, K)
+        full_mask = _ones_if_none(mask, R)
+        mask_ex = _example_mask(full_mask, K)
+        adaptive = dp.adaptive_clip and private and clip_norm is not None
+        if adaptive:
+            key, clip_key = jax.random.split(key)
+
+        def with_clip(b):
+            if clip_norm is None:
+                return b
+            assert isinstance(b, dict), "clip_norm override needs dict batches"
+            return dict(b, **{CLIP_KEY: clip_norm})
+
         if grad_accum == 1:
-            summed, (losses, nsq) = csum(params, batch)
+            summed, (losses, nsq) = csum(params, with_clip(batch))
         else:
-            assert B % grad_accum == 0, (B, grad_accum)
+            assert R % grad_accum == 0, (R, grad_accum)
+            assert (R // grad_accum) % K == 0, (R, grad_accum, K)
             chunks = jax.tree.map(
-                lambda a: a.reshape((grad_accum, B // grad_accum)
+                lambda a: a.reshape((grad_accum, R // grad_accum)
                                     + a.shape[1:]), batch)
 
             def body(acc, chunk):
-                s, (l, n) = csum(params, chunk)
+                s, (l, n) = csum(params, with_clip(chunk))
                 return jax.tree.map(jnp.add, acc, s), (l, n)
 
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
@@ -329,11 +437,19 @@ def make_noisy_grad_fn(loss_fn: Callable, dp: DPConfig,
             losses, nsq = losses.reshape(-1), nsq.reshape(-1)
 
         if private:
+            C = dp.clip_norm if clip_norm is None else clip_norm
             denom = (float(expected_batch_size)
-                     if expected_batch_size is not None else B)
+                     if expected_batch_size is not None else R // K)
             grads = noise.add_noise(summed, key, dp.noise_multiplier,
-                                    dp.clip_norm, denom)       # lines 24/41
-            metrics = _metrics(losses, nsq, dp.clip_norm, full_mask)
+                                    C, denom)                  # lines 24/41
+            metrics = _metrics(losses, nsq, C, full_mask, mask_ex)
+            if adaptive:
+                from repro.core import adaptive_clip
+                state, frac = adaptive_clip.update(
+                    {"clip_norm": C}, nsq, mask_ex, dp, denom, clip_key)
+                metrics["clip_norm"] = jnp.asarray(C, jnp.float32)
+                metrics["clip_frac_below"] = frac
+                metrics["clip_norm_next"] = state["clip_norm"]
         else:
             count = jnp.maximum(jnp.sum(full_mask), 1.0)
             grads = jax.tree.map(lambda g: g / count, summed)

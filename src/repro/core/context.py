@@ -55,6 +55,11 @@ class DPContext:
     mode: str = dataclasses.field(default="off", metadata=dict(static=True))
     strategy: str = dataclasses.field(default="auto", metadata=dict(static=True))
     use_kernels: bool = dataclasses.field(default=False, metadata=dict(static=True))
+    # augmentation multiplicity K: the model sees B·K rows (b-major,
+    # k-minor) but ``acc`` stays (B,) — one privacy unit per *example*.
+    # Every site rule reduces its wgrad over the K views (mean-over-K,
+    # via the 1/K-scaled loss cotangents the algos seed) *before* squaring.
+    augmult: int = dataclasses.field(default=1, metadata=dict(static=True))
 
     # -- constructors ----------------------------------------------------
     @staticmethod
@@ -63,13 +68,17 @@ class DPContext:
 
     @staticmethod
     def norm_mode(batch: int, strategy: str = "auto",
-                  use_kernels: bool = False) -> "DPContext":
+                  use_kernels: bool = False, augmult: int = 1) -> "DPContext":
+        """``batch`` counts *examples* (the accumulator length); the model
+        is fed ``batch * augmult`` rows."""
         return DPContext(acc=jnp.zeros((batch,), F32), mode="norm",
-                         strategy=strategy, use_kernels=use_kernels)
+                         strategy=strategy, use_kernels=use_kernels,
+                         augmult=augmult)
 
     def _spec(self, kind: str, meta: tuple = ()) -> SiteSpec:
         return SiteSpec(kind=kind, strategy=self.strategy,
-                        use_kernels=self.use_kernels, meta=tuple(meta))
+                        use_kernels=self.use_kernels, meta=tuple(meta),
+                        augmult=self.augmult)
 
     def _with(self, acc) -> "DPContext":
         return dataclasses.replace(self, acc=acc)

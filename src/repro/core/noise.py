@@ -29,7 +29,9 @@ def add_noise(grads, key: jax.Array, noise_multiplier: float, clip_norm: float,
     out = []
     for g, k in zip(leaves, keys):
         g = g.astype(jnp.float32)
-        if std > 0.0:
+        # gate on the python-float multiplier, not std: under adaptive
+        # clipping ``clip_norm`` is a traced array and cannot be branched on
+        if noise_multiplier > 0.0:
             g = g + std * jax.random.normal(k, g.shape, jnp.float32)
         out.append(g / denom)
     return jax.tree.unflatten(treedef, out)

@@ -62,6 +62,51 @@ def canon4(x: jax.Array) -> jax.Array:
     raise ValueError(f"dense site operand must be 2/3/4-D, got {x.shape}")
 
 
+def fold_views4(x4: jax.Array, k: int) -> jax.Array:
+    """Fold the augmentation-multiplicity axis of a canon4 operand into the
+    contraction axis: ``(B·K, G, T, d) -> (B, G, K·T, d)`` with rows b-major
+    / k-minor (view k of example b at row b·K + k).
+
+    Why this is the whole K-reduction: the per-example gradient under
+    augmentation multiplicity is the *mean over K views*, and a dense-site
+    wgrad is a sum over the contraction axis — so the K-averaged wgrad of
+    example b is exactly ``Σ_{k,t} x[bk,t] ⊗ (gy[bk,t] / K)``, i.e. the
+    ordinary single-view wgrad of a length-K·T sequence with 1/K-scaled
+    cotangents.  The algos seed backprop with ``m/K`` per view, so after
+    this fold **every existing norm rule and Pallas kernel computes
+    ‖mean-over-K wgrad‖² unchanged** (mean-then-norm², never norm²-over-B·K).
+
+    ``k == 1`` returns the input unchanged (bit-identity of the degenerate
+    path)."""
+    if k == 1:
+        return x4
+    R, G, T, d = x4.shape
+    assert R % k == 0, (R, k)
+    B = R // k
+    if G == 1:
+        # contiguous: (B, K, 1, T, d) and (B, 1, K*T, d) are the same layout
+        return x4.reshape(B, G, k * T, d)
+    return (x4.reshape(B, k, G, T, d)
+            .transpose(0, 2, 1, 3, 4)
+            .reshape(B, G, k * T, d))
+
+
+def unfold_views4(x4: jax.Array, k: int) -> jax.Array:
+    """Inverse of ``fold_views4``: ``(B, G, K·T, d) -> (B·K, G, T, d)``.
+    Used by fused kernel routes that compute the activation gradient on the
+    folded layout and must hand it back in row layout."""
+    if k == 1:
+        return x4
+    B, G, KT, d = x4.shape
+    assert KT % k == 0, (KT, k)
+    T = KT // k
+    if G == 1:
+        return x4.reshape(B * k, G, T, d)
+    return (x4.reshape(B, G, k, T, d)
+            .transpose(0, 2, 1, 3, 4)
+            .reshape(B * k, G, T, d))
+
+
 def flops_materialize(xs, gys) -> int:
     """FLOPs of the ``materialize`` rule: one (d_in, d_out) outer-product
     GEMM per (example, group) — ``2·B·G·T·d_in·d_out``.  Linear in T."""

@@ -90,11 +90,22 @@ class SiteSpec:
 
     ``meta`` carries per-call static extras a site's callbacks may need
     (e.g. ``tap``'s ``(nexp, batch)``, ``conv2d``'s ``(stride, padding)``).
+
+    ``augmult`` is the augmentation-multiplicity K of the batch contract:
+    operands carry B·K rows (b-major, k-minor) while the norm accumulator
+    stays (B,).  Rules must return the squared norm of the **K-averaged**
+    per-example gradient — mean-over-K *then* norm², never norm² over B·K
+    rows.  The algos pre-scale the loss cotangents by 1/K, so a rule
+    implements this by folding the K views into its contraction axis
+    (``norms.fold_views4``) — the K-averaged wgrad is then the ordinary
+    wgrad of the folded problem and every existing rule/kernel applies
+    unchanged.  ``augmult=1`` must be bit-identical to the pre-K contract.
     """
     kind: str
     strategy: str = "auto"
     use_kernels: bool = False
     meta: tuple = ()
+    augmult: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -346,23 +357,32 @@ def _moe_dense_bwd(spec, operands, gy):
     return gx, gw
 
 
+def _dense_pair4(spec, operands, gy):
+    """Canonicalized (x4, gy4) with the augmult views folded into the
+    contraction axis: (B·K, G, T, d) -> (B, G, K·T, d).  With the algos'
+    1/K-scaled cotangents, the downstream rule then computes the exact
+    ‖mean-over-K wgrad‖² per example.  K=1 is the identity."""
+    k = spec.augmult
+    return (norms.fold_views4(norms.canon4(operands[0]), k),
+            norms.fold_views4(norms.canon4(gy), k))
+
+
 def _dense_rule_materialize(spec, operands, gy):
-    return norms.dense_nsq_materialize(norms.canon4(operands[0]),
-                                       norms.canon4(gy))
+    return norms.dense_nsq_materialize(*_dense_pair4(spec, operands, gy))
 
 
 def _dense_rule_gram(spec, operands, gy):
-    return norms.dense_nsq_gram(norms.canon4(operands[0]), norms.canon4(gy))
+    return norms.dense_nsq_gram(*_dense_pair4(spec, operands, gy))
 
 
 def _dense_kernel_materialize(spec, operands, gy):
     from repro.kernels import ops as kops
-    return kops.pegrad_norm(norms.canon4(operands[0]), norms.canon4(gy))
+    return kops.pegrad_norm(*_dense_pair4(spec, operands, gy))
 
 
 def _dense_kernel_gram(spec, operands, gy):
     from repro.kernels import ops as kops
-    return kops.gram_norm(norms.canon4(operands[0]), norms.canon4(gy))
+    return kops.gram_norm(*_dense_pair4(spec, operands, gy))
 
 
 def _dense_flops_materialize(operand_shapes, gy_shape):
@@ -411,8 +431,11 @@ def _dense_fused_bwd(spec, operands, gy):
     x, w = operands
     if spec.use_kernels:
         from repro.kernels import ops as kops
-        gx4, nsq = kops.dense_bwd_norm(norms.canon4(x), norms.canon4(gy), w)
-        gx = gx4.reshape(x.shape).astype(x.dtype)
+        # the kernel computes the dgrad rows AND the folded (= K-averaged)
+        # norm² in one sweep; unfold restores the (B·K)-row layout
+        gx4, nsq = kops.dense_bwd_norm(*_dense_pair4(spec, operands, gy), w)
+        gx = norms.unfold_views4(gx4, spec.augmult).reshape(x.shape)
+        gx = gx.astype(x.dtype)
     else:
         gx = jnp.einsum("...o,io->...i", gy, w).astype(x.dtype)
         nsq = _dense_rule_materialize(spec, operands, gy)
@@ -424,8 +447,8 @@ def _moe_dense_fused_bwd(spec, operands, gy):
     x, w = operands                       # x (B,E,C,di), w (E,di,do)
     if spec.use_kernels:
         from repro.kernels import ops as kops
-        gx4, nsq = kops.dense_bwd_norm(x, gy, w)
-        gx = gx4.astype(x.dtype)
+        gx4, nsq = kops.dense_bwd_norm(*_dense_pair4(spec, operands, gy), w)
+        gx = norms.unfold_views4(gx4, spec.augmult).astype(x.dtype)
     else:
         gx = jnp.einsum("beco,eio->beci", gy, w).astype(x.dtype)
         nsq = _dense_rule_materialize(spec, operands, gy)
@@ -465,12 +488,25 @@ def _embed_bwd(spec, operands, gy):
     return None, gt
 
 
+def _embed_fold(spec, ids, gy):
+    """Fold K views into the token axis: (B·K, T) -> (B, K·T).  Same-token
+    rows across views then combine in the segment sum *before* squaring —
+    exactly the K-averaged table gradient (gy arrives 1/K-scaled)."""
+    k = spec.augmult
+    if k == 1:
+        return ids, gy
+    B = ids.shape[0] // k
+    return ids.reshape(B, -1), gy.reshape(B, -1, gy.shape[-1])
+
+
 def _embed_rule(spec, operands, gy):
-    return norms.embed_nsq(operands[0], gy, use_kernels=False)
+    ids, gy = _embed_fold(spec, operands[0], gy)
+    return norms.embed_nsq(ids, gy, use_kernels=False)
 
 
 def _embed_kernel_rule(spec, operands, gy):
-    return norms.embed_nsq(operands[0], gy, use_kernels=True)
+    ids, gy = _embed_fold(spec, operands[0], gy)
+    return norms.embed_nsq(ids, gy, use_kernels=True)
 
 
 def _embed_flops(operand_shapes, gy_shape):
@@ -501,8 +537,13 @@ def _tap_bwd(spec, operands, gy):
 
 def _tap_rule(spec, operands, gy):
     (p,) = operands
-    nexp, batch = spec.meta
-    return norms.tap_nsq(gy.reshape((batch,) + p.shape))
+    nexp, batch = spec.meta              # batch counts rows (B·K)
+    gpb = gy.reshape((batch,) + p.shape)
+    if spec.augmult > 1:
+        # sum the K views' param grads (gy is 1/K-scaled -> mean) first
+        gpb = jnp.sum(gpb.reshape((batch // spec.augmult, spec.augmult)
+                                  + p.shape), axis=1)
+    return norms.tap_nsq(gpb)
 
 
 def _tap_flops(operand_shapes, gy_shape):
@@ -562,7 +603,9 @@ def _conv_patches(spec, x, w):
 def _conv_pair4(spec, operands, gy):
     x, w = operands[0], operands[1]
     pat = _conv_patches(spec, x, w)
-    B = x.shape[0]
+    # fold the K views into the position axis (a plain reshape: rows are
+    # b-major/k-minor and G == 1) -> per-example K-averaged norm²
+    B = x.shape[0] // spec.augmult
     x4 = pat.reshape(B, 1, -1, pat.shape[-1])
     gy4 = gy.reshape(B, 1, -1, gy.shape[-1])
     return x4, gy4
@@ -645,7 +688,10 @@ def _conv_fused_bwd(spec, operands, gy):
         return tuple(grads), _conv_rule_materialize(spec, operands, gy)
     from repro.kernels import ops as kops
     pat = _conv_patches(spec, x, w)
-    B, cout = x.shape[0], gy.shape[-1]
+    # folded layout (see _conv_pair4): K views share an example row, so the
+    # kernel's norm accumulates the K-averaged wgrad; the patch gradient is
+    # layout-identical either way (G == 1 -> plain reshape)
+    B, cout = x.shape[0] // spec.augmult, gy.shape[-1]
     pat4 = pat.reshape(B, 1, -1, pat.shape[-1])
     gy4 = gy.reshape(B, 1, -1, cout)
     gpat4, nsq = kops.dense_bwd_norm(pat4, gy4, _conv_wflat(w))
@@ -699,19 +745,20 @@ def _attention_fwd(spec, q, k, v):
             lambda qq, kk, vv: kops.flash_attention(qq, kk, vv, causal),
             k.shape[2])
         return flash(q, k, v)
-    from repro.models.layers import _causal_blocked_attention
-    assert causal, "the blocked-XLA attention path is causal-only"
+    from repro.models.layers import _causal_blocked_attention, _full_attention
+    if not causal:
+        return _full_attention(q, k, v)    # bidirectional (ViT) XLA path
     return _causal_blocked_attention(q, k, v, block_q, remat)
 
 
 def _attention_rule_fused(spec, operands, gy):
-    return jnp.zeros((operands[0].shape[0],), F32)
+    return jnp.zeros((operands[0].shape[0] // spec.augmult,), F32)
 
 
 def _attention_fused_bwd(spec, operands, gy):
     q, k, v = operands
     causal, _, _ = _attn_meta(spec)
-    nsq = jnp.zeros((q.shape[0],), F32)
+    nsq = jnp.zeros((q.shape[0] // spec.augmult,), F32)
     if spec.use_kernels:
         from repro.kernels import ops as kops
         dq, dk, dv = kops.flash_attention_bwd(q, k, v, gy, causal)
@@ -749,6 +796,10 @@ def _bias_bwd(spec, operands, gy):
 
 
 def _bias_rule(spec, operands, gy):
+    if spec.augmult > 1:
+        # fold views into the (summed-over) position axis: per-example bias
+        # grad = Σ over views and positions of the 1/K-scaled gy
+        gy = gy.reshape((gy.shape[0] // spec.augmult, -1, gy.shape[-1]))
     return norms.bias_nsq(gy)
 
 

@@ -1,6 +1,8 @@
-from repro.data.pipeline import (MemmapSource, SyntheticSource, batch_for,
-                                 make_source, poisson_batch_for,
-                                 poisson_capacity, poisson_sample_indices)
+from repro.data.pipeline import (MemmapSource, SyntheticSource,
+                                 augment_expand, batch_for, make_source,
+                                 poisson_batch_for, poisson_capacity,
+                                 poisson_sample_indices)
 
 __all__ = ["SyntheticSource", "MemmapSource", "make_source", "batch_for",
-           "poisson_batch_for", "poisson_capacity", "poisson_sample_indices"]
+           "augment_expand", "poisson_batch_for", "poisson_capacity",
+           "poisson_sample_indices"]

@@ -32,11 +32,16 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import IMAGE_FAMILIES, ArchConfig, ShapeConfig
 
 # stream tag for index-keyed (step-independent) example content; any fixed
 # value outside the per-step stream space works — it only has to be stable
 _EXAMPLE_STREAM_STEP = 0x0DA7A5E7
+
+# stream-space offset for augmentation draws (augment_expand): keeps the
+# (seed, step, k, row) augmentation keys disjoint from the per-example data
+# streams (which use small row-indexed streams) and the Poisson draw (0xB0)
+_AUG_STREAM_BASE = 0xA6000000
 
 
 def _rng(seed: int, step: int, stream: int) -> np.random.Generator:
@@ -185,11 +190,11 @@ def make_source(spec: str, vocab: int, seed: int = 0):
 def batch_for(source, arch: ArchConfig, shape: ShapeConfig, step: int,
               shard: int = 0, n_shards: int = 1) -> Dict[str, np.ndarray]:
     """Materialize this shard's slice of the global batch for (arch, shape)."""
-    if arch.family == "cnn":
-        c = arch.cnn
+    if arch.family in IMAGE_FAMILIES:
+        size, _, channels = arch.image_shape()
         return _image_source(source, arch).image_batch(
-            step, shape.global_batch, c.image_size, c.in_channels,
-            arch.vocab, shard, n_shards)
+            step, shape.global_batch, size, channels,
+            arch.n_classes, shard, n_shards)
     embed_dim = arch.d_model if arch.embed_stub else 0
     return source.batch(step, shape.global_batch, shape.seq_len,
                         shard, n_shards, embed_dim)
@@ -265,10 +270,10 @@ def poisson_batch_for(source, arch: ArchConfig, shape: ShapeConfig, step: int,
             f"the priced Poisson mechanism this step)", RuntimeWarning)
         idx = idx[:cap]
     mine = idx[lo:lo + per]                      # this shard's real rows
-    if arch.family == "cnn":
-        c = arch.cnn
+    if arch.family in IMAGE_FAMILIES:
+        size, _, channels = arch.image_shape()
         ex = _image_source(source, arch).image_examples(
-            mine, c.image_size, c.in_channels, arch.vocab)
+            mine, size, channels, arch.n_classes)
     else:
         embed_dim = arch.d_model if arch.embed_stub else 0
         ex = source.examples(mine, shape.seq_len, embed_dim)
@@ -281,4 +286,54 @@ def poisson_batch_for(source, arch: ArchConfig, shape: ShapeConfig, step: int,
     mask = np.zeros((per,), np.bool_)
     mask[:len(mine)] = True
     out["mask"] = mask
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Augmentation multiplicity (DPConfig.augmult = K)
+# ---------------------------------------------------------------------------
+
+def augment_expand(batch: Dict[str, np.ndarray], k: int, seed: int,
+                   step: int, pad: int = 4) -> Dict[str, np.ndarray]:
+    """Expand a (B, ...)-leaved batch to the (B·K, ...) augmult contract:
+    K views of each example, b-major/k-minor (view k of example b at row
+    b·K + k), the layout core/algo.py and the site rules reduce over.
+
+    View 0 is the example itself; views k ≥ 1 of an ``"images"`` leaf get
+    the standard CIFAR recipe — horizontal flip + pad-``pad`` random crop —
+    drawn from a dedicated ``(seed, step, k, row)``-keyed Philox stream, so
+    resume/retry reproduce the exact views and no draw is shared with the
+    data or Poisson streams.  Non-image leaves (tokens, labels, and the
+    Poisson ``"mask"``, which is per-*example*) are repeated over K: every
+    view carries its example's label and validity.  A padded (masked-out)
+    all-zero image row stays exactly zero under flip/crop, preserving the
+    masked-batch invariant for all K views.
+
+    ``k == 1`` returns the batch object unchanged — the bit-identical
+    degenerate path."""
+    if k <= 1:
+        return batch
+    out: Dict[str, np.ndarray] = {}
+    for name, v in batch.items():
+        if name == "images":
+            out[name] = _augment_images(v, k, seed, step, pad)
+        else:
+            out[name] = np.repeat(v, k, axis=0)
+    return out
+
+
+def _augment_images(imgs: np.ndarray, k: int, seed: int, step: int,
+                    pad: int) -> np.ndarray:
+    B, H, W, C = imgs.shape
+    out = np.empty((B * k, H, W, C), imgs.dtype)
+    padded = np.pad(imgs, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    for b in range(B):
+        out[b * k] = imgs[b]                     # view 0: identity
+        for kk in range(1, k):
+            g = _rng(seed, step, _AUG_STREAM_BASE + b * k + kk)
+            dy, dx = (int(x) for x in g.integers(0, 2 * pad + 1, 2))
+            view = padded[b, dy:dy + H, dx:dx + W]
+            if g.integers(0, 2):
+                view = view[:, ::-1]
+            out[b * k + kk] = view
     return out

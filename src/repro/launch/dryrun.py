@@ -72,16 +72,20 @@ DEFAULT_OUT = "results/dryrun"
 # input specs (ShapeDtypeStruct stand-ins; no allocation)
 # ---------------------------------------------------------------------------
 
-def input_specs(arch, shape):
-    """Abstract model inputs for a given cell."""
+def input_specs(arch, shape, augmult: int = 1):
+    """Abstract model inputs for a given cell.  ``augmult = K > 1``
+    multiplies the physical row count of a train cell by K (the trainer's
+    B·K-row view-expanded batch contract)."""
+    from repro.configs.base import IMAGE_FAMILIES
     B, T = shape.global_batch, shape.seq_len
-    if arch.family == "cnn":
+    rows = B * max(1, augmult) if shape.kind == "train" else B
+    if arch.family in IMAGE_FAMILIES:
         assert shape.kind == "train", (arch.name, shape.name)
-        c = arch.cnn
+        size, _, channels = arch.image_shape()
         return {"images": jax.ShapeDtypeStruct(
-                    (B, c.image_size, c.image_size, c.in_channels),
-                    jnp.bfloat16),
-                "labels": jax.ShapeDtypeStruct((B,), jnp.int32)}
+                    (rows, size, size, channels), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((rows,), jnp.int32)}
+    B = rows
     if shape.kind in ("train", "prefill"):
         if arch.embed_stub:
             batch = {"embeds": jax.ShapeDtypeStruct((B, T, arch.d_model),
@@ -116,7 +120,18 @@ def cell_norm_rules(arch, shape) -> list:
         rows = [(label, "conv2d", op_shapes, gy_shape)
                 for label, op_shapes, gy_shape in iter_conv_sites(arch, B)]
         rows.append(("head", "dense", ((B, arch.cnn.stage_channels[-1]),),
-                     (B, arch.vocab)))
+                     (B, arch.n_classes)))
+    elif arch.family == "vit":
+        v = arch.vit
+        d, p, T = arch.d_model, v.patch_size, v.n_patches
+        rows.append(("patch", "conv2d",
+                     ((B, v.image_size, v.image_size, v.in_channels),
+                      (p, p, v.in_channels, d)),
+                     (B, v.grid, v.grid, d)))
+        rows.append(("attn_q", "dense", ((B, T, d),),
+                     (B, T, arch.n_heads * arch.hd)))
+        rows.append(("mlp_w1", "dense", ((B, T, d),), (B, T, arch.d_ff)))
+        rows.append(("head", "dense", ((B, d),), (B, arch.n_classes)))
     else:
         d = arch.d_model
         if not arch.embed_stub:
@@ -159,25 +174,35 @@ def make_grad_accum(arch, shape, mesh) -> int:
 # ---------------------------------------------------------------------------
 
 def build_cell(arch_name: str, shape_name: str, mesh, dp_algo: str = "dpsgd_r",
-               norm_strategy: str = "auto", serve_fsdp: bool = True):
+               norm_strategy: str = "auto", serve_fsdp: bool = True,
+               augmult: int = 1, adaptive_clip: bool = False):
     """Returns (jitted_fn, abstract_args dict) for one cell.
 
     serve_fsdp=True keeps the paper-faithful baseline behavior (arch FSDP
-    flag leaks into serving); hillclimbed runs pass False (§Perf C1)."""
+    flag leaks into serving); hillclimbed runs pass False (§Perf C1).
+    ``augmult``/``adaptive_clip`` flow into the DPConfig of a train cell
+    (K·B-row batches; traced clip norm + the noisy-count update compiled
+    into the step) and are recorded in the cell artifact."""
     arch = get_arch(arch_name)
     shape = SHAPES[shape_name]
     model = build_model_for(arch)
-    batch_abs = input_specs(arch, shape)
+    batch_abs = input_specs(arch, shape, augmult=augmult)
 
     if shape.kind == "train":
         opt_name = "adam8bit" if arch.use_fsdp else "adamw"
-        dp = DPConfig(algo=dp_algo, norm_strategy=norm_strategy)
+        dp = DPConfig(algo=dp_algo, norm_strategy=norm_strategy,
+                      augmult=augmult, adaptive_clip=adaptive_clip)
         accum = make_grad_accum(arch, shape, mesh)
         grad_fn = make_noisy_grad_fn(model.loss_fn, dp, grad_accum=accum)
         opt = make_optimizer(OptimConfig(name=opt_name))
 
         def train_step(state, batch, key):
-            grads, metrics = grad_fn(state.params, batch, key)
+            # under adaptive_clip the clip norm is a traced scalar (here a
+            # constant seed value; the trainer threads the real state) so
+            # the compiled cell includes the noisy-count update
+            clip = jnp.float32(dp.clip_norm) if adaptive_clip else None
+            grads, metrics = grad_fn(state.params, batch, key,
+                                     clip_norm=clip)
             new_p, new_o = opt.apply(grads, state.opt_state, state.params,
                                      state.step)
             return TrainState(step=state.step + 1, params=new_p,
@@ -195,7 +220,15 @@ def build_cell(arch_name: str, shape_name: str, mesh, dp_algo: str = "dpsgd_r",
                                    NamedSharding(mesh, P())),
                      out_shardings=(state_sh, None))
         args = (state_abs, batch_abs, key_abs)
-        extra = {"grad_accum": accum, "optimizer": opt_name, "dp_algo": dp_algo}
+        extra = {"grad_accum": accum, "optimizer": opt_name,
+                 "dp_algo": dp_algo,
+                 # augmentation-multiplicity / adaptive-clip state of the
+                 # compiled cell (the artifact schema's DP-recipe record)
+                 "augmult": int(max(1, augmult)),
+                 "adaptive_clip": bool(adaptive_clip),
+                 "clip_quantile": dp.clip_quantile if adaptive_clip else None,
+                 "clip_count_noise":
+                     dp.clip_count_noise if adaptive_clip else None}
         return fn, args, model, extra
 
     params_abs = model.abstract_params()
@@ -224,7 +257,8 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
              out_dir: str, dp_algo: str = "dpsgd_r",
              norm_strategy: str = "auto", tag: str = "",
              mesh_shape: str = "", mesh_axes: str = "",
-             local_ops: bool = False, serve_fsdp: bool = True) -> dict:
+             local_ops: bool = False, serve_fsdp: bool = True,
+             augmult: int = 1, adaptive_clip: bool = False) -> dict:
     if mesh_shape:
         from repro.launch.mesh import make_mesh
         shape_t = tuple(int(s) for s in mesh_shape.split(","))
@@ -253,7 +287,9 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
         with mesh, lo:
             fn, args, model, extra = build_cell(arch_name, shape_name, mesh,
                                                 dp_algo, norm_strategy,
-                                                serve_fsdp)
+                                                serve_fsdp,
+                                                augmult=augmult,
+                                                adaptive_clip=adaptive_clip)
             rec.update(extra)
             if shape.kind == "train":
                 rec["norm_rules"] = cell_norm_rules(arch, shape)
@@ -352,6 +388,11 @@ def main() -> None:
                     help="shard_map batch-local dispatch/segment ops (§Perf)")
     ap.add_argument("--no-serve-fsdp", action="store_true",
                     help="serving params without FSDP sharding (§Perf C1)")
+    ap.add_argument("--augmult", type=int, default=1,
+                    help="augmentation multiplicity K for train cells")
+    ap.add_argument("--adaptive-clip", action="store_true",
+                    help="compile the quantile-adaptive clip update into "
+                         "train cells")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
@@ -377,7 +418,9 @@ def main() -> None:
                            args.dp_algo, args.norm_strategy, args.tag,
                            args.mesh_shape, args.mesh_axes,
                            local_ops=args.local_ops,
-                           serve_fsdp=not args.no_serve_fsdp)
+                           serve_fsdp=not args.no_serve_fsdp,
+                           augmult=args.augmult,
+                           adaptive_clip=args.adaptive_clip)
             n_fail += 0 if rec.get("ok") else 1
     print(f"[dryrun] done; {n_fail} failures", flush=True)
     raise SystemExit(1 if n_fail else 0)

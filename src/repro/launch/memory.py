@@ -259,22 +259,30 @@ def per_device_peak_bytes(est: dict, shards: int) -> int:
     return int(resident + -(-sharded // shards))
 
 
-def abstract_batch(arch, batch_size: int, seq_len: int) -> dict:
+def abstract_batch(arch, batch_size: int, seq_len: int,
+                   augmult: int = 1) -> dict:
     """ShapeDtypeStruct batch for a train cell of ``arch`` (images for
-    family="cnn", next-token text otherwise), f32 inputs."""
+    the image families, next-token text otherwise), f32 inputs.
+
+    ``batch_size`` counts *examples*; ``augmult = K > 1`` multiplies the
+    physical row count by K (K views per example, the trainer's
+    ``augment_expand`` layout) — this is how the memory estimator and the
+    auto-microbatch search see augmentation multiplicity's K-fold
+    activation footprint."""
     import jax.numpy as jnp
-    if arch.family == "cnn":
-        c = arch.cnn
+    from repro.configs.base import IMAGE_FAMILIES
+    rows = batch_size * max(1, augmult)
+    if arch.family in IMAGE_FAMILIES:
+        size, _, channels = arch.image_shape()
         return {"images": jax.ShapeDtypeStruct(
-                    (batch_size, c.image_size, c.image_size, c.in_channels),
-                    jnp.float32),
-                "labels": jax.ShapeDtypeStruct((batch_size,), jnp.int32)}
+                    (rows, size, size, channels), jnp.float32),
+                "labels": jax.ShapeDtypeStruct((rows,), jnp.int32)}
     if arch.embed_stub:
         return {"embeds": jax.ShapeDtypeStruct(
-                    (batch_size, seq_len, arch.d_model), jnp.float32),
-                "labels": jax.ShapeDtypeStruct((batch_size, seq_len),
+                    (rows, seq_len, arch.d_model), jnp.float32),
+                "labels": jax.ShapeDtypeStruct((rows, seq_len),
                                                jnp.int32)}
-    return {"tokens": jax.ShapeDtypeStruct((batch_size, seq_len + 1),
+    return {"tokens": jax.ShapeDtypeStruct((rows, seq_len + 1),
                                            jnp.int32)}
 
 
@@ -284,16 +292,21 @@ def per_example_grad_bytes(dp, batch_size: int, grad_accum: int,
     analytical accelerator model (sim/dataflow.py ``pegrad_spill_bytes``):
     vanilla DP-SGD materializes one f32 gradient per example of its vmap
     chunk; the reweighted algorithms carry only the (B,) f32 norm
-    accumulator."""
+    accumulator.  ``batch_size`` counts physical rows; under
+    ``dp.augmult = K`` the privacy unit is the example (rows/K) — the
+    side channel is per example, and vanilla DP-SGD's vmap chunk holds
+    one materialized gradient per *example* (its K views are reduced in
+    the per-example backward)."""
     from repro.sim.dataflow import pegrad_spill_bytes
     if not dp.enabled or dp.algo == "sgd":
         return 0
+    examples = batch_size // max(1, getattr(dp, "augmult", 1))
     if dp.algo == "dpsgd":
-        chunk = batch_size // max(1, grad_accum)
+        chunk = examples // max(1, grad_accum)
         if dp.microbatch:
             chunk = min(chunk, dp.microbatch)
         return int(pegrad_spill_bytes(chunk, param_elems))
-    return 4 * batch_size           # the (B,) f32 norm side channel
+    return 4 * examples             # the (B,) f32 norm side channel
 
 
 def abstract_step_args(model, train_cfg) -> tuple:
@@ -424,7 +437,8 @@ def pick_grad_accum(model, train_cfg, shape, dataset_size: int = 1_000_000,
     for g in candidates:
         cfg_g = dc.replace(train_cfg, grad_accum=g)
         cap = physical_batch_size(cfg_g, shape, dataset_size, shards=shards)
-        batch_abs = abstract_batch(model.arch, cap, shape.seq_len)
+        batch_abs = abstract_batch(model.arch, cap, shape.seq_len,
+                                   augmult=train_cfg.dp.augmult)
         est = estimate_train_memory(model, cfg_g, batch_abs,
                                     expected_batch_size=expected)
         est["capacity"] = int(cap)

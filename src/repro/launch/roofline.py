@@ -104,6 +104,11 @@ def model_flops(arch, shape, active_params: int) -> float:
         per_ex = _cnn_fwd_flops_per_example(arch)
         mult = 3.0 if shape.kind == "train" else 1.0
         return mult * per_ex * shape.global_batch
+    if arch.family == "vit":
+        # dense 6·N·D over patch tokens + the patch-embed conv (which is
+        # dense per patch: k = stride = patch, so FLOPs = params·patches)
+        tokens = shape.global_batch * arch.vit.n_patches
+        return 6.0 * active_params * tokens
     if shape.kind == "train":
         tokens = shape.global_batch * shape.seq_len
         return 6.0 * active_params * tokens

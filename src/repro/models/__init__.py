@@ -6,10 +6,14 @@ from repro.models.transformer import (Model, abstract_params, build_model,
 def build_model_for(arch, **kwargs):
     """Family-dispatching model factory: transformer families go through
     ``build_model``; ``family="cnn"`` builds the registry-backed CNN
-    (models/cnn.py).  Launchers use this so new families need no edits."""
+    (models/cnn.py), ``family="vit"`` the registry-backed ViT
+    (models/vit.py).  Launchers use this so new families need no edits."""
     if arch.family == "cnn":
         from repro.models.cnn import build_cnn
         return build_cnn(arch, **kwargs)
+    if arch.family == "vit":
+        from repro.models.vit import build_vit
+        return build_vit(arch, **kwargs)
     return build_model(arch, **kwargs)
 
 

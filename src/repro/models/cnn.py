@@ -17,9 +17,9 @@ Architecture (pre-activation residual stages, ``ArchConfig.cnn``):
 
 Normalization is per-example channel RMSNorm with a tapped scale — never
 BatchNorm, whose batch statistics couple examples and break per-example
-gradient semantics under DP.  ``ArchConfig.vocab`` doubles as the class
-count, so the existing config plumbing (sources, accountant, overrides)
-needs no new field.
+gradient semantics under DP.  The classifier width is ``arch.n_classes``
+(``CNNConfig.num_classes``, falling back to ``ArchConfig.vocab`` for the
+pre-PR-7 configs where vocab doubled as the class count).
 
 Batch contract: ``{"images": (B, S, S, C) float, "labels": (B,) int32}``
 (+ optional ``"mask"`` threaded by core/algo.py as for every workload).
@@ -82,8 +82,8 @@ def model_spec(arch: ArchConfig) -> Dict[str, Any]:
             cin = cout
         spec["stages"].append(blocks)
     spec["final_norm"] = P((cin,), (None,), "ones")
-    spec["head"] = {"w": P((cin, arch.vocab), ("embed", "vocab")),
-                    "b": P((arch.vocab,), (None,), "zeros")}
+    spec["head"] = {"w": P((cin, arch.n_classes), ("embed", "vocab")),
+                    "b": P((arch.n_classes,), (None,), "zeros")}
     return spec
 
 

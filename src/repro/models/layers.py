@@ -183,6 +183,18 @@ def _causal_blocked_attention(q, k, v, block_q: int, remat: str = "block"):
     return ob.swapaxes(0, 1).reshape(B, T, KV, rep, hd)
 
 
+def _full_attention(q, k, v):
+    """Exact bidirectional (non-causal) attention — the ViT path.
+    q: (B, T, KV, rep, hd); k/v: (B, S, KV, hd).  Patch counts are small
+    (T = (image/patch)², e.g. 64), so no query blocking is needed."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqkrh,bskh->bkrqs", q, k,
+                   preferred_element_type=F32) / jnp.sqrt(float(hd))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrqs,bskh->bqkrh", p.astype(v.dtype), v)
+    return o
+
+
 def attn_apply(p, x, ctx: DPContext, cfg, pos, block_q: int = 512,
                remat: str = "block"):
     """Training/prefill attention. x: (B,T,d); pos: (B,T). Returns y, ctx, kv."""

@@ -1,0 +1,216 @@
+"""Vision transformer workload (ArchConfig family ``"vit"``).
+
+The augmentation-multiplicity PR's proof that the private-site registry
+generalizes: a ViT is patch-embed (a ``conv2d`` site with stride = patch
+size), transformer encoder blocks (``dense`` + non-causal ``attention``
+sites, tapped RMSNorm scales), a tapped learned position embedding, and a
+mean-pool ``dense`` head — every parameterized op is a registered site, so
+all four algorithms, the three norm strategies, the kernel routes, Poisson
+masks, augmult and adaptive clipping work on it with **zero** new code in
+core/algo.py or core/sites.py.
+
+Architecture (``ArchConfig`` transformer dims + ``ArchConfig.vit``):
+
+    patch-embed conv p×p stride p (C → d_model) + bias      [conv2d site]
+    + learned position embedding (n_patches, d_model)       [tap site]
+    per layer: x + attn(norm(x));  x + mlp(norm(x))         [dense/attention]
+    head: norm → mean-pool over patches → dense → bias      [dense site]
+
+Attention is bidirectional (no causal mask, no RoPE: positions come from
+the embedding).  Normalization is per-example RMSNorm with tapped scales —
+never LayerNorm-with-batch-stats, same DP rationale as models/cnn.py.
+
+Batch contract: ``{"images": (B, S, S, C) float, "labels": (B,) int32}``
+(+ optional ``"mask"``), identical to the CNN family — the data pipeline
+treats both through ``configs.base.IMAGE_FAMILIES``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import replace as dc_replace
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.context import DPContext
+from repro.models import layers as L
+from repro.models.layers import P
+from repro.models.transformer import _map_spec, path_key
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Param spec
+# ---------------------------------------------------------------------------
+
+def _block_spec(arch: ArchConfig) -> Dict[str, Any]:
+    d = arch.d_model
+    return {
+        "ln1": P((d,), (None,), "ones"),
+        "attn": L.attn_spec(arch),
+        "ln2": P((d,), (None,), "ones"),
+        "mlp": L.mlp_spec(arch, arch.d_ff),
+    }
+
+
+def model_spec(arch: ArchConfig) -> Dict[str, Any]:
+    v = arch.vit
+    d = arch.d_model
+    p = v.patch_size
+    return {
+        "patch": {"w": P((p, p, v.in_channels, d), (None, None, None, "embed")),
+                  "b": P((d,), (None,), "zeros")},
+        # learned position embedding, zero-init (the patch embed breaks
+        # symmetry); a tap site, so its per-example grad norm is observed
+        "pos": P((v.n_patches, d), (None, "embed"), "zeros"),
+        "blocks": [_block_spec(arch) for _ in range(arch.n_layers)],
+        "final_norm": P((d,), (None,), "ones"),
+        "head": {"w": P((d, arch.n_classes), ("embed", "vocab")),
+                 "b": P((arch.n_classes,), (None,), "zeros")},
+    }
+
+
+def _is_small(p: P) -> bool:
+    return p.init in ("ones", "zeros")
+
+
+def abstract_params(arch: ArchConfig, param_dtype: str = "bfloat16"):
+    pd = jnp.dtype(param_dtype)
+
+    def mk(p: P, path):
+        dtype = jnp.dtype(jnp.float32) if _is_small(p) else pd
+        return jax.ShapeDtypeStruct(p.shape, dtype)
+
+    return _map_spec(model_spec(arch), mk)
+
+
+def logical_axes(arch: ArchConfig):
+    return _map_spec(model_spec(arch), lambda p, path: p.axes)
+
+
+def init_params(arch: ArchConfig, key, param_dtype: str = "bfloat16"):
+    pd = jnp.dtype(param_dtype)
+
+    def mk(p: P, path):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, F32)
+        if p.init == "ones":
+            return jnp.ones(p.shape, F32)
+        # patch conv (p, p, cin, d): fan_in = p·p·cin; dense (d, n): fan_in = d
+        fan_in = int(np.prod(p.shape[:-1]))
+        k = path_key(key, path)
+        std = 1.0 / np.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(k, p.shape, F32)).astype(pd)
+
+    return _map_spec(model_spec(arch), mk)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ViTModel:
+    arch: ArchConfig
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "block"           # none | block | sites (validated below)
+
+    def __post_init__(self):
+        from repro.configs.base import validate_remat
+        validate_remat(self.arch.family, self.remat)
+
+    # -- params ----------------------------------------------------------
+    def abstract_params(self):
+        return abstract_params(self.arch, self.param_dtype)
+
+    def logical_axes(self):
+        return logical_axes(self.arch)
+
+    def init(self, key):
+        return init_params(self.arch, key, self.param_dtype)
+
+    # -- forward ----------------------------------------------------------
+    def _attn(self, p, x, ctx: DPContext):
+        """Bidirectional attention over patches (no RoPE, no causal mask)."""
+        arch = self.arch
+        B, T, d = x.shape
+        H, KV, hd = arch.n_heads, arch.n_kv_heads, arch.hd
+        q, ctx = ctx.dense(x, p["wq"])
+        k, ctx = ctx.dense(x, p["wk"])
+        v, ctx = ctx.dense(x, p["wv"])
+        q = q.reshape(B, T, H, hd)
+        k = k.reshape(B, T, KV, hd)
+        v = v.reshape(B, T, KV, hd)
+        if arch.qk_norm:
+            q, ctx = L.rmsnorm_nd(q, p["q_norm"], ctx, arch.norm_eps)
+            k, ctx = L.rmsnorm_nd(k, p["k_norm"], ctx, arch.norm_eps)
+        qg = q.reshape(B, T, KV, H // KV, hd)
+        from repro.kernels import ops as kops
+        if ctx.mode == "norm" and ctx.strategy == "fused":
+            o, ctx = ctx.attention(qg, k, v, causal=False, block_q=T,
+                                   remat=self.remat)
+        elif kops.USE_FLASH:
+            from repro.dist import runtime
+            flash = runtime.attn_local(
+                lambda qq, kk, vv: kops.flash_attention(qq, kk, vv, False),
+                KV)
+            o = flash(qg, k, v)
+        else:
+            o = L._full_attention(qg, k, v)
+        o = o.reshape(B, T, H * hd)
+        y, ctx = ctx.dense(o, p["wo"])
+        return y, ctx
+
+    def _block(self, bp, x, ctx: DPContext):
+        h, ctx = L.rmsnorm(x, bp["ln1"], ctx, self.arch.norm_eps)
+        h, ctx = self._attn(bp["attn"], h, ctx)
+        x = x + h
+        h, ctx = L.rmsnorm(x, bp["ln2"], ctx, self.arch.norm_eps)
+        h, ctx = L.mlp_apply(bp["mlp"], h, ctx, self.arch)
+        return x + h, ctx
+
+    def _forward(self, params, images, ctx: DPContext):
+        v = self.arch.vit
+        x = images.astype(jnp.dtype(self.compute_dtype))
+        # patch embed: stride = kernel = patch_size divides the image, so
+        # SAME padding pads nothing — one conv2d site, (B, g, g, d)
+        x, ctx = ctx.conv2d(x, params["patch"]["w"], stride=v.patch_size)
+        x, ctx = ctx.bias(x, params["patch"]["b"])
+        B = x.shape[0]
+        x = x.reshape(B, v.n_patches, self.arch.d_model)
+        pos, ctx = ctx.tap(params["pos"], 0, B)
+        x = x + pos.astype(x.dtype)
+        for bp in params["blocks"]:
+            def run(bp_, x_, acc):
+                c = dc_replace(ctx, acc=acc)
+                y, c = self._block(bp_, x_, c)
+                return y, c.acc
+
+            run = L.remat_wrap(run, self.remat)
+            x, acc = run(bp, x, ctx.acc)
+            ctx = dc_replace(ctx, acc=acc)
+        x, ctx = L.rmsnorm(x, params["final_norm"], ctx, self.arch.norm_eps)
+        pooled = jnp.mean(x.astype(F32), axis=1).astype(x.dtype)
+        logits, ctx = ctx.dense(pooled, params["head"]["w"])
+        logits, ctx = ctx.bias(logits, params["head"]["b"])
+        return logits, ctx
+
+    # -- training loss ----------------------------------------------------
+    def loss_fn(self, params, batch, ctx: DPContext):
+        """Returns ((B,) per-example CE losses, ctx)."""
+        logits, ctx = self._forward(params, batch["images"], ctx)
+        logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+        ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+        return -ll[:, 0], ctx
+
+
+def build_vit(arch: ArchConfig, param_dtype: str = "bfloat16",
+              compute_dtype: str = "bfloat16",
+              remat: str = "block") -> ViTModel:
+    assert arch.family == "vit", arch.family
+    return ViTModel(arch, param_dtype, compute_dtype, remat)

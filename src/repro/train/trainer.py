@@ -27,20 +27,30 @@ import numpy as np
 
 from repro.configs.base import TrainConfig
 from repro.core import PrivacyAccountant, make_noisy_grad_fn
-from repro.data import (batch_for, make_source, poisson_batch_for,
-                        poisson_capacity)
+from repro.core import adaptive_clip as _aclip
+from repro.core.algo import algo_is_private
+from repro.data import (augment_expand, batch_for, make_source,
+                        poisson_batch_for, poisson_capacity)
 from repro.optim import make_optimizer
 from repro.train.checkpoint import CheckpointManager
 from repro.train.state import TrainState
 
 
+def adaptive_clip_on(dp) -> bool:
+    """Adaptive clipping is live iff configured AND the algo is private
+    (there is no clip norm to adapt under plain SGD)."""
+    return bool(dp.adaptive_clip) and algo_is_private(dp.algo, dp.enabled)
+
+
 def physical_batch_size(train_cfg: TrainConfig, shape,
                         dataset_size: int, shards: int = 1) -> int:
-    """Physical (padded) rows per step.  Fixed sampling: the configured
-    batch.  Poisson: a step-invariant capacity >= the expected size q·N
-    (+6 binomial sigmas), rounded so grad_accum and microbatch chunking —
-    and the mesh's ``shards``-wide batch axes, when given — keep dividing
-    evenly (data/pipeline.poisson_capacity)."""
+    """Physical (padded) *examples* per step.  Fixed sampling: the
+    configured batch.  Poisson: a step-invariant capacity >= the expected
+    size q·N (+6 binomial sigmas), rounded so grad_accum and microbatch
+    chunking — and the mesh's ``shards``-wide batch axes, when given —
+    keep dividing evenly (data/pipeline.poisson_capacity).  Under
+    ``dp.augmult = K`` the physical *row* count is K x this (augmentation
+    expands after sampling; launch/memory.py sizes activations by rows)."""
     if train_cfg.dp.sampling != "poisson":
         return shape.global_batch
     mult = math.lcm(max(1, train_cfg.grad_accum)
@@ -66,19 +76,29 @@ def make_train_step(model, train_cfg: TrainConfig,
                                  expected_batch_size=expected_batch_size)
     opt = make_optimizer(train_cfg.optim)
     compress = train_cfg.compress_pod_grads
+    adaptive = adaptive_clip_on(train_cfg.dp)
+    # either rider wraps opt_state as {"opt": ..., <rider keys>...} so the
+    # extra state is checkpointed with the optimizer state
+    wrapped = compress or adaptive
 
     def step_fn(state: TrainState, batch, key):
-        grads, metrics = grad_fn(state.params, batch, key)
+        opt_state = state.opt_state["opt"] if wrapped else state.opt_state
+        clip = (state.opt_state[_aclip.CLIP_STATE_KEY]["clip_norm"]
+                if adaptive else None)
+        grads, metrics = grad_fn(state.params, batch, key, clip_norm=clip)
         if compress:
             from repro.dist.compress import compress_grads
             grads, new_err = compress_grads(grads,
                                             state.opt_state["grad_err"])
-            new_params, new_opt = opt.apply(grads, state.opt_state["opt"],
-                                            state.params, state.step)
-            new_opt = {"opt": new_opt, "grad_err": new_err}
-        else:
-            new_params, new_opt = opt.apply(grads, state.opt_state,
-                                            state.params, state.step)
+        new_params, new_opt = opt.apply(grads, opt_state,
+                                        state.params, state.step)
+        if wrapped:
+            new_opt = {"opt": new_opt}
+            if compress:
+                new_opt["grad_err"] = new_err
+            if adaptive:
+                new_opt[_aclip.CLIP_STATE_KEY] = \
+                    {"clip_norm": metrics["clip_norm_next"]}
         gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
                           for g in jax.tree.leaves(grads)))
         metrics = dict(metrics, update_norm=gn)
@@ -91,9 +111,14 @@ def make_train_step(model, train_cfg: TrainConfig,
 def make_opt_init(train_cfg: TrainConfig, opt) -> Callable:
     def init(params):
         st = opt.init(params)
+        riders = {}
         if train_cfg.compress_pod_grads:
             from repro.dist.compress import init_error_state
-            return {"opt": st, "grad_err": init_error_state(params)}
+            riders["grad_err"] = init_error_state(params)
+        if adaptive_clip_on(train_cfg.dp):
+            riders[_aclip.CLIP_STATE_KEY] = _aclip.init_state(train_cfg.dp)
+        if riders:
+            return {"opt": st, **riders}
         return st
     return init
 
@@ -181,6 +206,13 @@ class Trainer:
             noise_multiplier=train_cfg.dp.noise_multiplier,
             delta=train_cfg.dp.delta,
             sample_rate=self.sample_rate)
+        # adaptive clipping's noisy below-C count is a second mechanism at
+        # the same sampling rate; composing it here makes epsilon_at() the
+        # joint guarantee and epsilon_breakdown() the per-mechanism split
+        self.adaptive_clip = adaptive_clip_on(train_cfg.dp)
+        if self.adaptive_clip:
+            self.accountant.compose(
+                _aclip.mechanism(train_cfg.dp, self.sample_rate))
         self.shard_batch = shard_batch or (lambda b: jax.tree.map(jnp.asarray, b))
         self._preempted = False
         self._step_times: list = []
@@ -269,13 +301,20 @@ class Trainer:
     def make_batch(self, step: int):
         """The step's (seed, step)-keyed batch under the configured
         sampling mode.  Poisson batches carry a ``"mask"`` validity leaf
-        and a step-invariant physical row count (``self.capacity``)."""
+        and a step-invariant physical *example* count (``self.capacity``).
+        Under ``dp.augmult = K > 1`` the sampled batch is then expanded to
+        K deterministic views per example (capacity·K rows, b-major/
+        k-minor; the mask broadcasts over K) — augmentation happens after
+        sampling, so the privacy unit stays the example."""
         if self.sampling == "poisson":
-            return poisson_batch_for(self.source, self.model.arch,
-                                     self.shape, step,
-                                     capacity=self.capacity,
-                                     sample_rate=self.sample_rate)
-        return batch_for(self.source, self.model.arch, self.shape, step)
+            batch = poisson_batch_for(self.source, self.model.arch,
+                                      self.shape, step,
+                                      capacity=self.capacity,
+                                      sample_rate=self.sample_rate)
+        else:
+            batch = batch_for(self.source, self.model.arch, self.shape, step)
+        return augment_expand(batch, self.cfg.dp.augmult,
+                              self.cfg.seed, step)
 
     # -- loop ---------------------------------------------------------------
     def run(self, state: TrainState, steps: Optional[int] = None,
@@ -320,13 +359,23 @@ class Trainer:
                     rec = {k: float(v) for k, v in metrics.items()}
                     rec.update(step=step, sec=dt, epsilon=eps,
                                expected_batch=self.shape.global_batch)
+                    eps_str = f"eps {eps:.3f}"
+                    if len(self.accountant.mechanisms) > 1:
+                        # per-mechanism split (eps_grad / eps_clip / ...):
+                        # solo epsilons plus the composed total
+                        bd = self.accountant.epsilon_breakdown(step + 1)
+                        rec.update({k: float(v) for k, v in bd.items()})
+                        parts = " ".join(f"{k[4:]} {v:.3f}"
+                                         for k, v in bd.items()
+                                         if k != "eps_total")
+                        eps_str = f"eps {bd['eps_total']:.3f} ({parts})"
                     self.history.append(rec)
                     realized = ""
                     if self.sampling == "poisson":
                         realized = (f"B {rec['realized_batch']:.0f}"
                                     f"/{self.shape.global_batch} ")
                     print(f"[trainer] step {step:5d} "
-                          f"loss {rec['loss']:.4f} eps {eps:.3f} "
+                          f"loss {rec['loss']:.4f} {eps_str} "
                           f"{realized}({dt*1e3:.0f} ms)")
                 if (step + 1) % cfg.ckpt_every == 0 or step == steps - 1 \
                         or self._preempted:

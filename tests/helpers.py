@@ -20,11 +20,11 @@ def tiny_model(name: str, dropless: bool = False, remat: str = "block"):
 
 
 def make_batch(arch, key, B=4, T=32):
-    if arch.family == "cnn":
+    if arch.family in ("cnn", "vit"):
         k1, k2 = jax.random.split(key)
-        s, c = arch.cnn.image_size, arch.cnn.in_channels
-        return {"images": jax.random.normal(k1, (B, s, s, c)),
-                "labels": jax.random.randint(k2, (B,), 0, arch.vocab)}
+        h, w, c = arch.image_shape()
+        return {"images": jax.random.normal(k1, (B, h, w, c)),
+                "labels": jax.random.randint(k2, (B,), 0, arch.n_classes)}
     if arch.embed_stub:
         k1, k2 = jax.random.split(key)
         return {"embeds": 0.5 * jax.random.normal(k1, (B, T, arch.d_model)),
@@ -42,6 +42,33 @@ def oracle_per_example_norms_sq(model, params, batch) -> np.ndarray:
         return l[0]
 
     gb = jax.vmap(lambda ex: jax.grad(one_loss)(params, ex))(batch)
+    return sum(np.sum(np.asarray(g, np.float64).reshape(B, -1) ** 2, -1)
+               for g in jax.tree.leaves(gb))
+
+
+def oracle_augmult_grads(model, params, batch, k):
+    """Ground truth under augmentation multiplicity: the per-example
+    gradient of the MEAN loss over that example's K views, via
+    vmap-over-examples of grad (each example's K rows grouped together).
+    Returns a tree of (B,)+param.shape leaves."""
+    rows = jax.tree.leaves(batch)[0].shape[0]
+    assert rows % k == 0
+    B = rows // k
+
+    def views_loss(p, ex):
+        l, _ = model.loss_fn(p, ex, DPContext.off())
+        return jnp.mean(l)
+
+    grouped = jax.tree.map(lambda a: a.reshape((B, k) + a.shape[1:]), batch)
+    return jax.vmap(lambda ex: jax.grad(views_loss)(params, ex))(grouped)
+
+
+def oracle_augmult_norms_sq(model, params, batch, k) -> np.ndarray:
+    """float64 sq-norms of the K-view-averaged per-example gradients —
+    the quantity every norm route must produce under dp.augmult = k
+    (mean over views FIRST, then norm², never mean of per-view norms)."""
+    gb = oracle_augmult_grads(model, params, batch, k)
+    B = jax.tree.leaves(gb)[0].shape[0]
     return sum(np.sum(np.asarray(g, np.float64).reshape(B, -1) ** 2, -1)
                for g in jax.tree.leaves(gb))
 

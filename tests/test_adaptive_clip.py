@@ -1,0 +1,268 @@
+"""Quantile-adaptive clipping (core/adaptive_clip.py) and its accountant
+composition: the update formula, the traced-clip plumbing through
+make_noisy_grad_fn, the ε_clip charge (validated against an independent
+comb+fsum re-derivation of the composed RDP), the adaptive_clip=off
+degenerate path, and the trainer's opt_state wrapping + resume."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DPConfig, OptimConfig, ShapeConfig, TrainConfig
+from repro.core import adaptive_clip, make_noisy_grad_fn
+from repro.core.accountant import (Mechanism, PrivacyAccountant,
+                                   compute_epsilon_composed,
+                                   compute_epsilon_from_rate, rdp_to_eps)
+
+from helpers import make_batch, tiny_model
+
+
+# ---------------------------------------------------------------------------
+# the update rule itself
+# ---------------------------------------------------------------------------
+
+def test_noisy_fraction_exact_at_zero_noise():
+    nsq = jnp.asarray([0.25, 4.0, 0.0, 9.0])        # norms 0.5, 2, 0, 3
+    mask = jnp.asarray([1.0, 1.0, 0.0, 1.0])        # third is padding
+    frac = adaptive_clip.noisy_fraction_below(
+        nsq, mask, clip_norm=1.0, count_noise=0.0, expected_batch=4.0,
+        key=jax.random.PRNGKey(0))
+    # only example 0 is real AND below C=1.0; denominator is q·N = 4
+    assert float(frac) == pytest.approx(0.25)
+
+
+def test_updated_clip_geometric_and_positive():
+    c = adaptive_clip.updated_clip(2.0, frac_below=0.9, quantile=0.5, lr=0.2)
+    assert float(c) == pytest.approx(2.0 * math.exp(-0.2 * 0.4))
+    # at the target quantile the clip is a fixed point
+    assert float(adaptive_clip.updated_clip(2.0, 0.5, 0.5, 0.2)) == 2.0
+    # multiplicative: stays positive under arbitrarily bad noise
+    assert float(adaptive_clip.updated_clip(1e-3, 50.0, 0.5, 0.2)) > 0.0
+
+
+def test_update_moves_toward_quantile():
+    """C shrinks while too many examples fall below it, grows while too
+    few do — the signs that make the quantile a stable fixed point."""
+    dp = DPConfig(adaptive_clip=True, clip_quantile=0.5, clip_lr=0.2,
+                  clip_count_noise=0.0, clip_norm=1.0)
+    mask = jnp.ones((4,))
+    key = jax.random.PRNGKey(0)
+    lo, _ = adaptive_clip.update({"clip_norm": jnp.float32(10.0)},
+                                 jnp.asarray([1.0, 1.0, 1.0, 1.0]), mask,
+                                 dp, 4.0, key)
+    assert float(lo["clip_norm"]) < 10.0            # all below: shrink
+    hi, _ = adaptive_clip.update({"clip_norm": jnp.float32(0.1)},
+                                 jnp.asarray([1.0, 1.0, 1.0, 1.0]), mask,
+                                 dp, 4.0, key)
+    assert float(hi["clip_norm"]) > 0.1             # none below: grow
+
+
+def test_init_state_matches_config():
+    st = adaptive_clip.init_state(DPConfig(clip_norm=0.7))
+    assert float(st["clip_norm"]) == pytest.approx(0.7)
+    assert st["clip_norm"].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# traced clip_norm through the grad fn (no algo if-chains)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["dpsgd", "dpsgd_r", "dpsgd_r1f"])
+def test_clip_norm_override_is_traced(algo):
+    """fn(..., clip_norm=<traced scalar>) must jit: the override rides the
+    batch as a leaf, so a fresh C never retriggers compilation."""
+    arch, model = tiny_model("cnn-cifar10")
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(arch, jax.random.PRNGKey(1), B=4)
+    dp = DPConfig(algo=algo, clip_norm=1.0, noise_multiplier=0.3,
+                  adaptive_clip=True, clip_count_noise=2.0,
+                  sampling="poisson")
+    fn = jax.jit(make_noisy_grad_fn(model.loss_fn, dp,
+                                    expected_batch_size=4.0))
+    key = jax.random.PRNGKey(2)
+    g1, m1 = fn(params, batch, key, clip_norm=jnp.float32(0.05))
+    g2, m2 = fn(params, batch, key, clip_norm=jnp.float32(5.0))
+    # different C, same compiled fn: clip actually bites in one of them
+    assert float(m1["clipped_frac"]) == 1.0
+    assert float(m2["clipped_frac"]) < 1.0
+    assert float(m1["clip_norm"]) == pytest.approx(0.05)
+    assert "clip_norm_next" in m1 and "clip_frac_below" in m1
+    diffs = [np.abs(np.asarray(a) - np.asarray(b)).max()
+             for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2))]
+    assert max(diffs) > 0.0
+
+
+def test_override_equals_static_clip():
+    """A traced override C equals baking the same C into DPConfig — the
+    leaf plumbing changes nothing about the math."""
+    arch, model = tiny_model("cnn-cifar10")
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(arch, jax.random.PRNGKey(1), B=4)
+    key = jax.random.PRNGKey(3)
+    base = dict(algo="dpsgd_r", noise_multiplier=0.5, sampling="poisson")
+    g_static, _ = make_noisy_grad_fn(
+        model.loss_fn, DPConfig(clip_norm=0.07, **base),
+        expected_batch_size=4.0)(params, batch, key)
+    g_traced, _ = make_noisy_grad_fn(
+        model.loss_fn, DPConfig(clip_norm=9.9, **base),
+        expected_batch_size=4.0)(params, batch, key,
+                                 clip_norm=jnp.float32(0.07))
+    for a, b in zip(jax.tree.leaves(g_static), jax.tree.leaves(g_traced)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-9)
+
+
+def test_off_means_no_clip_metrics():
+    """adaptive_clip=False: no clip_norm_next in metrics, and passing no
+    override leaves the static-C path untouched."""
+    arch, model = tiny_model("cnn-cifar10")
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(arch, jax.random.PRNGKey(1), B=4)
+    dp = DPConfig(algo="dpsgd_r", clip_norm=1.0, noise_multiplier=0.3)
+    _, m = make_noisy_grad_fn(model.loss_fn, dp)(params, batch,
+                                                 jax.random.PRNGKey(0))
+    assert "clip_norm_next" not in m
+    assert "clip_frac_below" not in m
+
+
+# ---------------------------------------------------------------------------
+# accountant composition: ε_clip priced, cross-checked independently
+# ---------------------------------------------------------------------------
+
+def _rdp_direct(q, sigma, order):
+    """Independent comb+fsum evaluation (same path as
+    tests/test_accountant.py) of one mechanism's per-step RDP."""
+    a = int(order)
+    total = math.fsum(
+        math.comb(a, k) * (1 - q) ** (a - k) * q ** k
+        * math.exp((k * k - k) / (2 * sigma ** 2))
+        for k in range(a + 1))
+    return math.log(total) / (a - 1)
+
+
+def test_composed_epsilon_matches_independent_direct_sum():
+    """ε of {grad, clip} composition == brute-force minimum over orders of
+    CKS(steps·(RDP_grad + RDP_clip)) with both RDP curves re-derived via
+    exact binomials + compensated summation."""
+    q, steps, delta = 0.02, 400, 1e-5
+    mechs = (Mechanism("grad", q, 1.1),
+             adaptive_clip.mechanism(DPConfig(clip_count_noise=8.0), q))
+    got, best_a = compute_epsilon_composed(steps, mechs, delta)
+    # brute force only where the linear-space sum fits float64 (the k=a
+    # term needs (a²-a)/2σ² ≤ 700 for the tighter σ=1.1 mechanism: a ≤ 41)
+    assert 2 <= best_a <= 41, best_a
+    direct = min(
+        rdp_to_eps(steps * (_rdp_direct(q, 1.1, a) + _rdp_direct(q, 8.0, a)),
+                   a, delta)
+        for a in range(2, 42))
+    assert got == pytest.approx(direct, rel=1e-9)
+
+
+def test_composition_tighter_than_epsilon_addition():
+    """Composing RDP curves then converting must beat (or tie) converting
+    each mechanism and adding the ε's — the reason compose() exists."""
+    q, steps, delta = 0.01, 1000, 1e-5
+    grad = Mechanism("grad", q, 1.0)
+    clip = Mechanism("clip", q, 10.0)
+    both, _ = compute_epsilon_composed(steps, (grad, clip), delta)
+    solo_g, _ = compute_epsilon_composed(steps, (grad,), delta)
+    solo_c, _ = compute_epsilon_composed(steps, (clip,), delta)
+    assert solo_g < both <= solo_g + solo_c + 1e-12
+
+
+def test_accountant_compose_and_breakdown():
+    acc = PrivacyAccountant(64, 50_000, 1.0, 1e-5)
+    base = acc.epsilon_at(500)
+    acc.compose(adaptive_clip.mechanism(DPConfig(clip_count_noise=10.0),
+                                        acc.sample_rate))
+    assert [m.name for m in acc.mechanisms] == ["grad", "clip"]
+    bd = acc.epsilon_breakdown(500)
+    assert set(bd) == {"eps_grad", "eps_clip", "eps_total"}
+    assert bd["eps_grad"] == base
+    assert bd["eps_clip"] > 0.0
+    assert bd["eps_total"] >= bd["eps_grad"]
+    assert bd["eps_total"] <= bd["eps_grad"] + bd["eps_clip"] + 1e-12
+    # idempotent by name: re-composing replaces, never double-charges
+    acc.compose(Mechanism("clip", acc.sample_rate, 10.0))
+    assert len(acc.mechanisms) == 2
+    assert acc.epsilon_breakdown(500) == bd
+
+
+def test_adaptive_off_leaves_accountant_untouched(tmp_path):
+    """adaptive_clip=False end to end: the trainer's accountant holds the
+    grad mechanism alone and ε equals the single-mechanism closed path."""
+    from repro.train import Trainer
+    arch, model = tiny_model("cnn-cifar10")
+    shape = ShapeConfig("t", 8, 8, "train")
+    cfg = TrainConfig(arch=arch.name, shape="t", steps=1, log_every=1,
+                      ckpt_every=100, ckpt_dir=str(tmp_path),
+                      param_dtype="float32", compute_dtype="float32",
+                      dp=DPConfig(algo="dpsgd_r", sampling="poisson",
+                                  noise_multiplier=1.0),
+                      optim=OptimConfig(lr=1e-3, total_steps=1))
+    tr = Trainer(model, cfg, shape)
+    assert not tr.adaptive_clip
+    assert [m.name for m in tr.accountant.mechanisms] == ["grad"]
+    want, _ = compute_epsilon_from_rate(100, tr.accountant.sample_rate,
+                                        1.0, tr.accountant.delta)
+    assert tr.accountant.epsilon_at(100) == want
+    state = tr.init_state(jax.random.PRNGKey(0))
+    assert "clip" not in getattr(state.opt_state, "keys", lambda: ())()
+
+
+# ---------------------------------------------------------------------------
+# trainer integration: opt_state rider, trajectory, resume
+# ---------------------------------------------------------------------------
+
+def _adaptive_cfg(tmp_path, steps):
+    return TrainConfig(arch="cnn-cifar10-reduced", shape="t", steps=steps,
+                       log_every=1, ckpt_every=2, ckpt_dir=str(tmp_path),
+                       param_dtype="float32", compute_dtype="float32",
+                       dp=DPConfig(algo="dpsgd_r", sampling="poisson",
+                                   noise_multiplier=1.0, adaptive_clip=True,
+                                   clip_count_noise=2.0, clip_lr=0.3),
+                       optim=OptimConfig(lr=1e-3, total_steps=steps))
+
+
+def test_trainer_adaptive_clip_end_to_end(tmp_path):
+    from repro.train import Trainer
+    arch, model = tiny_model("cnn-cifar10")
+    shape = ShapeConfig("t", 8, 8, "train")
+    tr = Trainer(model, _adaptive_cfg(tmp_path, 2), shape)
+    assert tr.adaptive_clip
+    assert [m.name for m in tr.accountant.mechanisms] == ["grad", "clip"]
+    state = tr.init_state(jax.random.PRNGKey(0))
+    c0 = float(state.opt_state["clip"]["clip_norm"])
+    assert c0 == pytest.approx(tr.cfg.dp.clip_norm)
+    state = tr.run(state, install_signals=False)
+    c2 = float(state.opt_state["clip"]["clip_norm"])
+    assert c2 != c0                                # the state actually moved
+    h = tr.history[-1]
+    assert {"clip_norm", "clip_frac_below", "eps_grad", "eps_clip",
+            "eps_total"} <= set(h)
+    assert h["eps_total"] >= h["eps_grad"] > 0.0
+
+
+def test_trainer_adaptive_clip_resume_exact(tmp_path):
+    """Checkpoint at step 2 of 4, restore, and the resumed run must land on
+    the same clip norm as the uninterrupted one (state rides opt_state)."""
+    from repro.train import Trainer
+    arch, model = tiny_model("cnn-cifar10")
+    shape = ShapeConfig("t", 8, 8, "train")
+    full = Trainer(model, _adaptive_cfg(tmp_path / "a", 4), shape)
+    sf = full.run(full.init_state(jax.random.PRNGKey(0)),
+                  install_signals=False)
+    want = float(sf.opt_state["clip"]["clip_norm"])
+
+    half = Trainer(model, _adaptive_cfg(tmp_path / "b", 4), shape)
+    s = half.init_state(jax.random.PRNGKey(0))
+    s = half.run(s, steps=2, install_signals=False)   # ckpt_every=2 saves
+    resumed = Trainer(model, _adaptive_cfg(tmp_path / "b", 4), shape)
+    s2 = resumed.restore_or_init(jax.random.PRNGKey(0))
+    assert int(s2.step) == 2
+    assert float(s2.opt_state["clip"]["clip_norm"]) == pytest.approx(
+        float(s.opt_state["clip"]["clip_norm"]))
+    s2 = resumed.run(s2, install_signals=False)
+    assert float(s2.opt_state["clip"]["clip_norm"]) == pytest.approx(want)

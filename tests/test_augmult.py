@@ -1,0 +1,281 @@
+"""Augmentation-multiplicity dataflow: the K-view contract end to end.
+
+Contract (core/algo.py, core/norms.py, data/pipeline.py): under
+``dp.augmult = K`` every batch leaf carries ``B·K`` rows (b-major,
+k-minor), the per-example gradient is the MEAN over an example's K views,
+clipping/noise see exactly ``B`` privacy units, and the per-example norm²
+every route reports is ``‖mean-over-K wgrad‖²`` — mean FIRST, then norm²,
+never the mean of per-view norms.  The fold trick (``norms.fold_views4``:
+K folds into the contraction axis, cotangents pre-scaled 1/K) makes this
+exact through every strategy and kernel route, which is what the float64
+vmap-over-K oracle cross-checks pin down here.
+
+K = 1 must be a true short-circuit: bit-identical to the single-view
+dataflow (tests/test_dp_properties.py carries the degenerate-path sweep;
+the pipeline-side identity lives here).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DPConfig
+from repro.core import make_noisy_grad_fn
+from repro.core.algo import make_clipped_sum_fn
+from repro.core.norms import fold_views4, unfold_views4
+from repro.data import augment_expand
+
+from helpers import (make_batch, oracle_augmult_grads,
+                     oracle_augmult_norms_sq, tiny_model)
+
+PRIVATE_ALGOS = ("dpsgd", "dpsgd_r", "dpsgd_r1f")
+
+
+@pytest.fixture(scope="module")
+def cnn():
+    arch, model = tiny_model("cnn-cifar10")
+    params = model.init(jax.random.PRNGKey(0))
+    return arch, model, params
+
+
+@pytest.fixture(scope="module")
+def phi3():
+    arch, model = tiny_model("phi3-mini-3.8b")
+    params = model.init(jax.random.PRNGKey(0))
+    return arch, model, params
+
+
+def _view_batch(arch, seed, B, K, T=8):
+    """A (B·K,)-row batch: K *distinct* views per example (independent
+    images — the algos never require views to be related), labels shared
+    within each example, b-major / k-minor."""
+    batch = make_batch(arch, jax.random.PRNGKey(seed), B=B * K, T=T)
+    if "labels" in batch:
+        labels = np.asarray(batch["labels"])
+        lab_ex = labels.reshape(B, K, *labels.shape[1:])[:, :1]
+        batch["labels"] = jnp.asarray(
+            np.broadcast_to(lab_ex, (B, K) + labels.shape[1:]).reshape(
+                labels.shape))
+    return batch
+
+
+def _assert_trees_close(a, b, rtol, atol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# fold/unfold layout algebra
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("G", [1, 3])
+def test_fold_unfold_roundtrip_and_layout(G):
+    B, K, T, d = 2, 4, 5, 3
+    x = jnp.arange(B * K * G * T * d, dtype=jnp.float32).reshape(
+        B * K, G, T, d)
+    folded = fold_views4(x, K)
+    assert folded.shape == (B, G, K * T, d)
+    # row b·K + k of the input is segment k of folded example b
+    for b in range(B):
+        for k in range(K):
+            np.testing.assert_array_equal(
+                np.asarray(folded[b, :, k * T:(k + 1) * T]),
+                np.asarray(x[b * K + k]))
+    np.testing.assert_array_equal(np.asarray(unfold_views4(folded, K)),
+                                  np.asarray(x))
+
+
+def test_fold_k1_is_identity_object():
+    x = jnp.ones((4, 1, 3, 2))
+    assert fold_views4(x, 1) is x
+    assert unfold_views4(x, 1) is x
+
+
+# ---------------------------------------------------------------------------
+# K-averaged norms² vs the float64 vmap-over-K oracle, every route
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", PRIVATE_ALGOS)
+@pytest.mark.parametrize("strategy,use_kernels", [
+    ("materialize", False), ("gram", False), ("fused", False),
+    ("materialize", True), ("fused", True),
+])
+def test_nsq_matches_oracle_all_routes(cnn, algo, strategy, use_kernels):
+    arch, model, params = cnn
+    B, K = 3, 3
+    batch = _view_batch(arch, 7, B, K)
+    dp = DPConfig(algo=algo, clip_norm=1.0, augmult=K,
+                  norm_strategy=strategy, use_kernels=use_kernels)
+    _, (losses, nsq) = make_clipped_sum_fn(model.loss_fn, dp)(params, batch)
+    assert losses.shape == (B * K,)
+    assert nsq.shape == (B,)
+    want = oracle_augmult_norms_sq(model, params, batch, K)
+    np.testing.assert_allclose(np.asarray(nsq, np.float64), want,
+                               rtol=5e-4, atol=1e-8)
+
+
+def test_nsq_matches_oracle_attention_family(phi3):
+    """The fold also holds through attention/rotary/text sites — the K axis
+    is family-agnostic (rows are rows)."""
+    arch, model, params = phi3
+    B, K = 2, 4
+    batch = _view_batch(arch, 3, B, K, T=6)
+    dp = DPConfig(algo="dpsgd_r", clip_norm=1.0, augmult=K)
+    _, (_, nsq) = make_clipped_sum_fn(model.loss_fn, dp)(params, batch)
+    want = oracle_augmult_norms_sq(model, params, batch, K)
+    np.testing.assert_allclose(np.asarray(nsq, np.float64), want,
+                               rtol=5e-4, atol=1e-8)
+
+
+def test_mean_first_not_norms_mean(cnn):
+    """Guard the easy-to-miss distinction: ‖mean_k g_k‖² (correct) differs
+    from mean_k ‖g_k‖² (wrong) whenever views disagree — assert our routes
+    sit on the correct side of a real gap."""
+    arch, model, params = cnn
+    B, K = 3, 3
+    batch = _view_batch(arch, 11, B, K)
+    dp = DPConfig(algo="dpsgd_r", clip_norm=1.0, augmult=K)
+    _, (_, nsq) = make_clipped_sum_fn(model.loss_fn, dp)(params, batch)
+    per_view = DPConfig(algo="dpsgd_r", clip_norm=1.0)  # K=1: norms per row
+    _, (_, nsq_rows) = make_clipped_sum_fn(model.loss_fn, per_view)(
+        params, batch)
+    wrong = np.asarray(nsq_rows).reshape(B, K).mean(axis=1)
+    gap = np.abs(wrong - np.asarray(nsq))
+    assert (gap > 1e-6).all(), "views too similar to discriminate"
+    want = oracle_augmult_norms_sq(model, params, batch, K)
+    np.testing.assert_allclose(np.asarray(nsq, np.float64), want, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# full private update at K > 1: algos agree, oracle clipped sum matches
+# ---------------------------------------------------------------------------
+
+def test_private_algos_identical_at_k(cnn):
+    arch, model, params = cnn
+    B, K = 4, 3
+    batch = _view_batch(arch, 5, B, K)
+    mask_ex = np.array([True, True, False, True])
+    rows = dict(batch, mask=jnp.asarray(np.repeat(mask_ex, K)))
+    kw = dict(clip_norm=0.05, noise_multiplier=0.4, sampling="poisson",
+              augmult=K)
+    key = jax.random.PRNGKey(2)
+    grads = {}
+    for algo in PRIVATE_ALGOS:
+        fn = make_noisy_grad_fn(model.loss_fn, DPConfig(algo=algo, **kw),
+                                expected_batch_size=float(B))
+        grads[algo], metrics = fn(params, rows, key)
+        assert float(metrics["realized_batch"]) == mask_ex.sum()
+    for algo in PRIVATE_ALGOS[1:]:
+        _assert_trees_close(grads["dpsgd"], grads[algo], rtol=1e-4,
+                            atol=1e-7)
+
+
+def test_clipped_sum_matches_oracle(cnn):
+    """Noise-free K>1 update == clip-and-sum of the float64 oracle's
+    K-averaged per-example gradients, divided by the expected batch."""
+    arch, model, params = cnn
+    B, K, C = 4, 2, 0.05
+    batch = _view_batch(arch, 9, B, K)
+    dp = DPConfig(algo="dpsgd_r", clip_norm=C, noise_multiplier=0.0,
+                  augmult=K)
+    fn = make_noisy_grad_fn(model.loss_fn, dp, expected_batch_size=float(B))
+    got, _ = fn(params, batch, jax.random.PRNGKey(0))
+    gb = oracle_augmult_grads(model, params, batch, K)
+    nsq = oracle_augmult_norms_sq(model, params, batch, K)
+    factor = np.minimum(1.0, C / np.sqrt(nsq))
+    want = jax.tree.map(
+        lambda g: np.tensordot(
+            factor, np.asarray(g, np.float64), axes=(0, 0)) / B, gb)
+    _assert_trees_close(got, want, rtol=1e-4, atol=1e-8)
+
+
+def test_grad_accum_and_microbatch_at_k(cnn):
+    """Chunking axes compose with K: accumulation chunks and dpsgd
+    microbatches split on *examples*, never through a view group."""
+    arch, model, params = cnn
+    B, K = 4, 2
+    batch = _view_batch(arch, 13, B, K)
+    kw = dict(clip_norm=0.05, noise_multiplier=0.3, sampling="poisson",
+              augmult=K)
+    key = jax.random.PRNGKey(4)
+    whole, _ = make_noisy_grad_fn(
+        model.loss_fn, DPConfig(algo="dpsgd_r", **kw),
+        expected_batch_size=float(B))(params, batch, key)
+    accum, _ = make_noisy_grad_fn(
+        model.loss_fn, DPConfig(algo="dpsgd_r", **kw), grad_accum=2,
+        expected_batch_size=float(B))(params, batch, key)
+    micro, _ = make_noisy_grad_fn(
+        model.loss_fn, DPConfig(algo="dpsgd", microbatch=1, **kw),
+        expected_batch_size=float(B))(params, batch, key)
+    _assert_trees_close(whole, accum, rtol=1e-5, atol=1e-8)
+    _assert_trees_close(whole, micro, rtol=1e-4, atol=1e-7)
+
+
+def test_masked_example_zero_for_all_views(cnn):
+    """A Poisson-padded example contributes EXACT zeros — norm² and every
+    view row's loss cotangent — across all private algos at K > 1."""
+    arch, model, params = cnn
+    B, K = 4, 3
+    batch = _view_batch(arch, 17, B, K)
+    mask_ex = np.array([True, False, True, False])
+    rows = dict(batch, mask=jnp.asarray(np.repeat(mask_ex, K)))
+    for algo in PRIVATE_ALGOS:
+        dp = DPConfig(algo=algo, clip_norm=0.05, augmult=K)
+        _, (_, nsq) = make_clipped_sum_fn(model.loss_fn, dp)(params, rows)
+        nsq = np.asarray(nsq)
+        assert (nsq[~mask_ex] == 0.0).all(), algo
+        assert (nsq[mask_ex] > 0.0).all(), algo
+
+
+# ---------------------------------------------------------------------------
+# augment_expand: the (seed, step, k)-keyed host pipeline
+# ---------------------------------------------------------------------------
+
+def _image_batch(B=3, H=8, W=8, C=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"images": rng.normal(size=(B, H, W, C)).astype(np.float32),
+            "labels": rng.integers(0, 10, B),
+            "mask": np.array([True] * (B - 1) + [False])}
+
+
+def test_augment_expand_k1_is_identity_object():
+    batch = _image_batch()
+    assert augment_expand(batch, 1, seed=0, step=0) is batch
+
+
+def test_augment_expand_layout_and_determinism():
+    batch = _image_batch(B=3)
+    K = 4
+    a = augment_expand(batch, K, seed=5, step=2)
+    b = augment_expand(batch, K, seed=5, step=2)
+    for name in a:
+        assert a[name].shape[0] == 3 * K
+        np.testing.assert_array_equal(a[name], b[name])
+    # view 0 is the identity view; non-image leaves repeat k-minor
+    np.testing.assert_array_equal(a["images"][::K], batch["images"])
+    np.testing.assert_array_equal(a["labels"], np.repeat(batch["labels"], K))
+    np.testing.assert_array_equal(a["mask"], np.repeat(batch["mask"], K))
+    # views are keyed by (seed, step, b, k): a different step reshuffles
+    c = augment_expand(batch, K, seed=5, step=3)
+    assert not np.array_equal(a["images"], c["images"])
+    # ... but the identity views are step-independent
+    np.testing.assert_array_equal(c["images"][::K], batch["images"])
+
+
+def test_augment_expand_views_preserve_content():
+    """Crop+flip views are permutations of padded content: per-view pixel
+    multiset ⊂ padded original, and zero examples stay exactly zero (the
+    Poisson-pad invariant survives augmentation)."""
+    batch = _image_batch(B=2)
+    batch["images"][1] = 0.0
+    K = 5
+    out = augment_expand(batch, K, seed=1, step=0)
+    assert (out["images"][K:] == 0.0).all()
+    for k in range(K):
+        view = out["images"][k]
+        assert view.shape == batch["images"][0].shape
+        # every nonzero pixel value of the view exists in the original
+        orig = set(np.round(batch["images"][0].ravel(), 5).tolist()) | {0.0}
+        got = set(np.round(view.ravel(), 5).tolist())
+        assert got <= orig

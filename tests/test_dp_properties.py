@@ -379,3 +379,70 @@ def test_trainer_poisson_end_to_end(tmp_path):
     # accountant prices the expected rate, not the padded capacity
     assert tr.accountant.sample_rate == (shape.global_batch
                                          / tr.source.dataset_size)
+
+
+# ---------------------------------------------------------------------------
+# degenerate paths of the PR-6 axes: augmult=1 and adaptive_clip=off must
+# be EXACT no-ops (bit-identical updates / untouched accountant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ("sgd",) + PRIVATE_ALGOS)
+@pytest.mark.parametrize("strategy", ["materialize", "gram", "fused"])
+def test_augmult1_bit_identical(phi3, algo, strategy):
+    """DPConfig(augmult=1) is a true short-circuit: on a masked Poisson
+    batch, every algorithm and norm strategy produces the BIT-identical
+    noisy update of the config that never mentions augmult — no reshape,
+    no 1/K scale, no fold may activate at K=1."""
+    arch, model, params = phi3
+    batch, mask = _mask_and_batch(arch, 31, 6, 10)
+    mb = dict(batch, mask=jnp.asarray(mask))
+    kw = dict(algo=algo, clip_norm=0.05, noise_multiplier=0.4,
+              sampling="poisson", norm_strategy=strategy)
+    key = jax.random.PRNGKey(42)
+    g0, m0 = make_noisy_grad_fn(model.loss_fn, DPConfig(**kw))(
+        params, mb, key)
+    g1, m1 = make_noisy_grad_fn(model.loss_fn, DPConfig(augmult=1, **kw))(
+        params, mb, key)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(m0["loss"]) == float(m1["loss"])
+
+
+def test_augmult1_bit_identical_with_chunking(phi3):
+    """Same contract through grad accumulation and dpsgd microbatching
+    (the chunk shapes are where a stray K axis would first show up)."""
+    arch, model, params = phi3
+    batch, mask = _mask_and_batch(arch, 33, 8, 9)
+    mb = dict(batch, mask=jnp.asarray(mask))
+    key = jax.random.PRNGKey(43)
+    for algo, accum, micro in (("dpsgd", 2, 2), ("dpsgd_r", 4, 0),
+                               ("dpsgd_r1f", 2, 0)):
+        kw = dict(algo=algo, clip_norm=0.05, noise_multiplier=0.4,
+                  sampling="poisson", microbatch=micro)
+        g0, _ = make_noisy_grad_fn(model.loss_fn, DPConfig(**kw),
+                                   grad_accum=accum)(params, mb, key)
+        g1, _ = make_noisy_grad_fn(model.loss_fn,
+                                   DPConfig(augmult=1, **kw),
+                                   grad_accum=accum)(params, mb, key)
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adaptive_clip_off_accountant_untouched():
+    """adaptive_clip=False composes nothing: the accountant carries the
+    gradient mechanism alone and ε is the single-mechanism value."""
+    from repro.core.accountant import (PrivacyAccountant,
+                                       compute_epsilon_from_rate)
+    from repro.core import adaptive_clip
+    from repro.train.trainer import adaptive_clip_on
+    dp_off = DPConfig(algo="dpsgd_r", sampling="poisson",
+                      noise_multiplier=1.0)
+    assert not adaptive_clip_on(dp_off)
+    # ... and even with the flag, a non-private algo never composes
+    assert not adaptive_clip_on(DPConfig(algo="sgd", adaptive_clip=True))
+    assert not adaptive_clip_on(DPConfig(enabled=False, algo="dpsgd_r",
+                                         adaptive_clip=True))
+    acc = PrivacyAccountant(64, 50_000, 1.0, 1e-5)
+    assert [m.name for m in acc.mechanisms] == ["grad"]
+    want, _ = compute_epsilon_from_rate(300, 64 / 50_000, 1.0, 1e-5)
+    assert acc.epsilon_at(300) == want

@@ -46,8 +46,8 @@ def test_dp_train_step(name, key):
 @pytest.mark.parametrize("name", ALL)
 def test_decode_matches_prefill(name, key):
     """Teacher-forced decode must reproduce prefill logits (dropless MoE)."""
-    if ARCHS[name].family == "cnn":
-        pytest.skip("cnn family is train-only (no prefill/decode path)")
+    if ARCHS[name].family in ("cnn", "vit"):
+        pytest.skip("image families are train-only (no prefill/decode path)")
     arch, model = tiny_model(name, dropless=True)
     params = model.init(key)
     B, T, S = 2, 16, 32

@@ -1,0 +1,242 @@
+"""ViT workload (models/vit.py) on the private-site registry: the family
+exists to prove the registry generalizes — patch-embed conv2d, the pos
+embedding as a zero-operand tap site, non-causal attention, dense
+qkv/o/mlp/head — with NO new branches in core/algo.py.  Coverage mirrors
+tests/test_cnn.py: side-channel exactness against the float64 oracle on
+every strategy, algo identity under masks, remat invariance, trainer end
+to end (including the recipe combination: augmult=8 + adaptive clip), and
+the dryrun/roofline plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import (DPConfig, OptimConfig, ShapeConfig,
+                                TrainConfig)
+from repro.core import make_noisy_grad_fn
+
+from helpers import (assert_identical_updates, make_batch,
+                     oracle_per_example_norms_sq, side_channel_norms_sq,
+                     tiny_model)
+
+ALGOS = ["dpsgd", "dpsgd_r", "dpsgd_r1f"]
+
+
+@pytest.fixture(scope="module")
+def vit():
+    arch, model = tiny_model("vit-cifar10")
+    params = model.init(jax.random.PRNGKey(0))
+    return arch, model, params
+
+
+# ---------------------------------------------------------------------------
+# config / spec sanity
+# ---------------------------------------------------------------------------
+
+def test_vit_arch_registered_and_reduced():
+    arch = ARCHS["vit-cifar10"]
+    assert arch.family == "vit"
+    assert arch.n_classes == 10
+    assert arch.image_shape() == (32, 32, 3)
+    assert arch.vit.n_patches == (32 // arch.vit.patch_size) ** 2
+    assert arch.param_count() > 0
+    small = reduced(arch)
+    assert small.vit.image_size < arch.vit.image_size
+    assert small.param_count() < arch.param_count()
+
+
+def test_vit_param_count_matches_init(vit):
+    arch, model, params = vit
+    got = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    assert got == arch.param_count()
+
+
+def test_vit_abstract_matches_init(vit):
+    """abstract_params (shape-only) and init agree leaf for leaf, and every
+    param resolves to a logical-axes entry of matching rank (None = fully
+    replicated — the norm scales and biases)."""
+    from repro.models.vit import abstract_params, logical_axes
+    arch, model, params = vit
+    ab = abstract_params(arch, "float32")
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_a = jax.tree.leaves(ab)
+    assert len(flat_p) == len(flat_a)
+    for (path, p), a in zip(flat_p, flat_a):
+        assert p.shape == a.shape, jax.tree_util.keystr(path)
+    axes = logical_axes(arch)
+    for path, p in flat_p:
+        node = axes
+        for k in path:
+            node = node[k.key if hasattr(k, "key") else k.idx]
+        assert node is None or len(node) == p.ndim, \
+            jax.tree_util.keystr(path)
+
+
+# ---------------------------------------------------------------------------
+# side-channel exactness + algo identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["auto", "materialize", "gram",
+                                      "fused"])
+def test_vit_side_channel_matches_oracle(vit, strategy):
+    arch, model, params = vit
+    batch = make_batch(arch, jax.random.PRNGKey(1), B=4)
+    want = oracle_per_example_norms_sq(model, params, batch)
+    got = side_channel_norms_sq(model, params, batch, strategy=strategy)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+@pytest.mark.slow           # interpret-mode Pallas kernels
+def test_vit_kernel_backed_norms_match(vit):
+    arch, model, params = vit
+    batch = make_batch(arch, jax.random.PRNGKey(1), B=4)
+    a = side_channel_norms_sq(model, params, batch, use_kernels=False)
+    b = side_channel_norms_sq(model, params, batch, use_kernels=True)
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+def test_vit_pos_tap_counts_in_norms(vit):
+    """The pos-embedding tap contributes to the per-example norm²: zeroing
+    it out of the oracle must change the total (i.e. the site is live, not
+    silently dropped by the registry walk)."""
+    from repro.core.context import DPContext
+    arch, model, params = vit
+    batch = make_batch(arch, jax.random.PRNGKey(2), B=3)
+
+    def one_pos_grad(ex):
+        def loss(p):
+            l, _ = model.loss_fn(p, jax.tree.map(lambda a: a[None], ex),
+                                 DPContext.off())
+            return l[0]
+        return jax.grad(loss)(params)["pos"]
+
+    gpos = jax.vmap(one_pos_grad)(batch)
+    pos_nsq = np.sum(np.asarray(gpos, np.float64).reshape(3, -1) ** 2, -1)
+    assert (pos_nsq > 0.0).all()
+    full = side_channel_norms_sq(model, params, batch)
+    rest = oracle_per_example_norms_sq(model, params, batch) - pos_nsq
+    np.testing.assert_allclose(full - rest, pos_nsq, rtol=1e-4)
+
+
+@pytest.mark.parametrize("variant", ["dpsgd_r", "dpsgd_r1f"])
+def test_vit_three_algo_identity_under_masks(vit, variant):
+    arch, model, params = vit
+    batch = make_batch(arch, jax.random.PRNGKey(3), B=4)
+    mask = jnp.asarray(np.array([1, 0, 1, 1], np.bool_))
+    mb = dict(batch, mask=mask)
+    kw = dict(clip_norm=0.03, noise_multiplier=0.5)
+    key = jax.random.PRNGKey(7)
+    ga, _ = make_noisy_grad_fn(model.loss_fn,
+                               DPConfig(algo="dpsgd", **kw))(params, mb, key)
+    gb, _ = make_noisy_grad_fn(model.loss_fn,
+                               DPConfig(algo=variant, **kw))(params, mb, key)
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-7)
+
+
+def test_vit_remat_grad_invariance():
+    """remat="none" and remat="block" compute the same private update (to
+    the add_any boundary tolerance — see helpers.assert_identical_updates)."""
+    arch, _ = tiny_model("vit-cifar10")
+    batch = make_batch(arch, jax.random.PRNGKey(4), B=3)
+    dp = DPConfig(algo="dpsgd_r", clip_norm=0.05, noise_multiplier=0.0)
+    grads = {}
+    for remat in ("none", "block"):
+        _, model = tiny_model("vit-cifar10", remat=remat)
+        params = model.init(jax.random.PRNGKey(0))
+        grads[remat], _ = make_noisy_grad_fn(model.loss_fn, dp)(
+            params, batch, jax.random.PRNGKey(1))
+    assert_identical_updates(grads["block"], grads["none"],
+                             boundary_rtol=1e-4, boundary_atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# trainer end to end: the recipe combination
+# ---------------------------------------------------------------------------
+
+def test_vit_trainer_recipe_end_to_end(tmp_path):
+    """vit-cifar10 (reduced) trains under dpsgd + Poisson + augmult=8 +
+    adaptive clipping — the full recipe of the PR, with zero algo-level
+    special cases.  Checks the K-row physical batch, the clip-state rider,
+    and the composed ε breakdown in the history."""
+    from repro.train import Trainer
+    arch, model = tiny_model("vit-cifar10")
+    shape = ShapeConfig("t", 4, 8, "train")
+    K = 8
+    cfg = TrainConfig(arch=arch.name, steps=2, log_every=1, ckpt_every=100,
+                      ckpt_dir=str(tmp_path), ckpt_async=False,
+                      param_dtype="float32", compute_dtype="float32",
+                      dp=DPConfig(algo="dpsgd", sampling="poisson",
+                                  noise_multiplier=0.7, augmult=K,
+                                  adaptive_clip=True, clip_count_noise=2.0),
+                      optim=OptimConfig(lr=1e-3, total_steps=2))
+    tr = Trainer(model, cfg, shape)
+    batch = tr.make_batch(0)
+    assert batch["images"].shape[0] == tr.capacity * K
+    assert batch["mask"].shape == (tr.capacity * K,)
+    # mask is constant within each example's K views
+    m = np.asarray(batch["mask"]).reshape(tr.capacity, K)
+    assert (m == m[:, :1]).all()
+    state = tr.init_state(jax.random.PRNGKey(0))
+    assert "clip" in state.opt_state
+    state = tr.run(state, install_signals=False)
+    assert int(state.step) == 2
+    h = tr.history[-1]
+    assert np.isfinite(h["loss"])
+    assert h["eps_total"] >= h["eps_grad"] > 0.0
+    assert h["expected_batch"] == shape.global_batch   # examples, not rows
+
+
+def test_vit_trainer_augmult1_matches_plain(tmp_path):
+    """augmult=1 through the trainer is bit-identical to a config that
+    never mentions augmult (the degenerate-path contract at the top level)."""
+    from repro.train import Trainer
+    arch, model = tiny_model("vit-cifar10")
+    shape = ShapeConfig("t", 4, 8, "train")
+
+    def run(dp, sub):
+        cfg = TrainConfig(arch=arch.name, steps=2, log_every=1,
+                          ckpt_every=100, ckpt_dir=str(tmp_path / sub),
+                          ckpt_async=False, param_dtype="float32",
+                          compute_dtype="float32", dp=dp,
+                          optim=OptimConfig(lr=1e-3, total_steps=2))
+        tr = Trainer(model, cfg, shape)
+        return tr.run(tr.init_state(jax.random.PRNGKey(0)),
+                      install_signals=False)
+
+    base = dict(algo="dpsgd_r", sampling="poisson", noise_multiplier=0.5)
+    s1 = run(DPConfig(**base), "a")
+    s2 = run(DPConfig(augmult=1, **base), "b")
+    assert_identical_updates(s2.params, s1.params)     # bitwise
+
+
+# ---------------------------------------------------------------------------
+# launch plumbing
+# ---------------------------------------------------------------------------
+
+def test_vit_dryrun_cell_shapes():
+    from repro.configs import SHAPES, shape_applicable
+    from repro.launch.dryrun import cell_norm_rules, input_specs
+    arch = ARCHS["vit-cifar10"]
+    shape = SHAPES["train_4k"]
+    specs = input_specs(arch, shape)
+    assert specs["images"].shape == (shape.global_batch, 32, 32, 3)
+    rows = input_specs(arch, shape, augmult=4)
+    assert rows["images"].shape == (shape.global_batch * 4, 32, 32, 3)
+    rules = cell_norm_rules(arch, shape)
+    kinds = {r["kind"] for r in rules}
+    assert "conv2d" in kinds and "dense" in kinds
+    assert not shape_applicable(arch, SHAPES["decode_32k"])
+
+
+def test_vit_roofline_flops_positive():
+    from repro.launch.roofline import model_flops
+    arch = ARCHS["vit-cifar10"]
+    shape = ShapeConfig("t", 0, 64, "train")
+    f = model_flops(arch, shape, arch.param_count())
+    assert f > 0
+    # scales with batch
+    assert model_flops(arch, ShapeConfig("t", 0, 128, "train"),
+                       arch.param_count()) == 2 * f
