@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dp test-sites test-mem test-kernels test-kernels-fast test-recipe test-multidevice bench-smoke bench-serve bench-kernels bench-dp dryrun-smoke
+.PHONY: test test-fast test-dp test-sites test-mem test-kernels test-kernels-fast test-recipe test-serve test-multidevice bench-smoke bench-serve bench-kernels bench-dp dryrun-smoke
 
 # tier-1 verify: the gate for every change
 test:
@@ -55,6 +55,14 @@ test-kernels-fast:
 test-recipe:
 	$(PY) -m pytest -x -q -m "not slow" \
 	    tests/test_augmult.py tests/test_adaptive_clip.py tests/test_vit.py
+
+# the serving gate: jitted-vs-host-loop bit-identity, paged KV cache
+# (paged-vs-contiguous identity, block backpressure, prefix sharing,
+# eviction/zombie-slot regressions), and the per-user privacy ledger
+# (admission gate, queue/refresh replay, checkpoint round-trip)
+test-serve:
+	$(PY) -m pytest -x -q tests/test_serve_engine.py \
+	    tests/test_serve_paging.py tests/test_serve_ledger.py
 
 # fast tier (~4 min vs ~7 for full): skips the interpret-mode Pallas
 # kernel sweeps and the jamba-398b heavies (@pytest.mark.slow); this is

@@ -1,4 +1,5 @@
-"""Serving benchmark: host-loop reference engine vs fully-jitted engine.
+"""Serving benchmark: host-loop reference engine vs fully-jitted engine,
+plus a sustained mixed-length-traffic section for the paged KV cache.
 
 Measures steady-state decode throughput (tokens/s), mean time-to-first-
 token, and device->host sync counts per decode step for both engines on
@@ -13,6 +14,16 @@ Both engines are warmed with an identical (cloned) request stream so the
 comparison measures dispatch/sync overhead rather than XLA compile time,
 then timed over ``--reps`` repetitions; the median repetition is reported
 (host-sync latency is noisy on shared machines).
+
+The mixed-traffic section (``--mixed-requests``, default 1000) queues a
+deep stream of requests whose prompt lengths span 8x and compares the
+paged engine against a contiguous engine given the SAME token-capacity
+HBM (``num_blocks x block_size == max_batch_contig x cache_len``): the
+paged engine must (a) stay greedy-bit-identical and (b) sustain a higher
+effective batch than the contiguous slabs allow, while the p50/p95/p99
+completion-latency distribution of both is recorded.  The process exits
+non-zero if either check fails, so ``make bench-serve`` doubles as the
+paged-vs-contiguous gate.
 """
 from __future__ import annotations
 
@@ -60,6 +71,7 @@ def measure(engine, reqs, reps):
         for k in engine.stats:
             engine.stats[k] = 0
         engine.ttft.clear()
+        getattr(engine, "latency", {}).clear()
         out, wall = run_once(engine, clone(reqs))
         runs.append((out, wall, dict(engine.stats), dict(engine.ttft)))
     med = sorted(r[1] for r in runs)[len(runs) // 2]
@@ -93,6 +105,77 @@ def summarize(out, wall, stats, ttft, rep_walls):
     return rec
 
 
+def make_mixed_requests(arch, n, seed, prompt_lo=4, prompt_hi=32,
+                        new_lo=1, new_hi=8):
+    """Deep mixed-length queue: prompts span prompt_hi/prompt_lo (8x at
+    the defaults), decode budgets 1..new_hi."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=uid,
+                    prompt=rng.integers(
+                        0, arch.vocab,
+                        int(rng.integers(prompt_lo, prompt_hi + 1))
+                    ).astype(np.int32),
+                    max_new=int(rng.integers(new_lo, new_hi + 1)))
+            for uid in range(n)]
+
+
+def latency_pcts(lat):
+    v = np.array(sorted(lat.values()))
+    return {f"p{p}_ms": round(1e3 * float(np.percentile(v, p)), 3)
+            for p in (50, 95, 99)}
+
+
+def mixed_traffic(model, params, arch, args):
+    """Paged vs HBM-equal contiguous under a sustained mixed-length queue.
+    Token capacity is pinned equal (num_blocks*block_size ==
+    contig_batch*cache_len); the paged engine gets more *slots* because a
+    slot no longer reserves a worst-case slab."""
+    cache_len, bsz = args.mixed_cache_len, args.mixed_block_size
+    nblocks = args.mixed_num_blocks
+    contig_batch = nblocks * bsz // cache_len
+    reqs = make_mixed_requests(arch, args.mixed_requests, args.seed,
+                               prompt_hi=min(32, cache_len - 8))
+    contig = Engine(model, params, max_batch=contig_batch,
+                    cache_len=cache_len, decode_chunk=args.decode_chunk)
+    paged = Engine(model, params, max_batch=args.mixed_max_batch,
+                   cache_len=cache_len, decode_chunk=args.decode_chunk,
+                   paged=True, block_size=bsz, num_blocks=nblocks)
+    out_c, wall_c = run_once(contig, clone(reqs))
+    out_p, wall_p = run_once(paged, clone(reqs))
+    identical = out_c == out_p
+    capacity_win = paged.stats["max_active"] > contig_batch
+    lens = [len(r.prompt) for r in reqs]
+    rec = {
+        "config": {"requests": len(reqs),
+                   "prompt_len": [min(lens), max(lens)],
+                   "prompt_span": round(max(lens) / min(lens), 1),
+                   "max_new": [1, 8], "cache_len": cache_len,
+                   "block_size": bsz, "num_blocks": nblocks,
+                   "hbm_token_capacity": nblocks * bsz,
+                   "contiguous_max_batch": contig_batch,
+                   "paged_max_batch": args.mixed_max_batch},
+        "contiguous": {
+            "wall_s": round(wall_c, 3),
+            "generated_tokens": sum(len(v) for v in out_c.values()),
+            "max_active": contig.stats["max_active"],
+            "prefill_waves": contig.stats["prefill_waves"],
+            "completion_latency": latency_pcts(contig.latency),
+        },
+        "paged": {
+            "wall_s": round(wall_p, 3),
+            "generated_tokens": sum(len(v) for v in out_p.values()),
+            "max_active": paged.stats["max_active"],
+            "prefill_waves": paged.stats["prefill_waves"],
+            "completion_latency": latency_pcts(paged.latency),
+            "pool": dict(paged.pool.stats,
+                         free_blocks=paged.pool.free_blocks),
+        },
+        "greedy_bit_identical": identical,
+        "capacity_win": capacity_win,
+    }
+    return rec, identical, capacity_win
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-3b")
@@ -107,6 +190,12 @@ def main() -> None:
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--mixed-requests", type=int, default=1000)
+    ap.add_argument("--mixed-cache-len", type=int, default=64)
+    ap.add_argument("--mixed-block-size", type=int, default=8)
+    ap.add_argument("--mixed-num-blocks", type=int, default=48)
+    ap.add_argument("--mixed-max-batch", type=int, default=16)
+    ap.add_argument("--skip-mixed", action="store_true")
     args = ap.parse_args()
 
     arch = reduced(ARCHS[args.arch])
@@ -142,6 +231,11 @@ def main() -> None:
         "speedup_decode_tok_per_s": speedup,
         "greedy_bit_identical": identical,
     }
+    paged_identical = paged_capacity = True
+    if not args.skip_mixed:
+        mixed, paged_identical, paged_capacity = mixed_traffic(
+            model, params, arch, args)
+        result["mixed_traffic"] = mixed
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
         f.write("\n")
@@ -152,6 +246,12 @@ def main() -> None:
     if not identical:
         raise SystemExit("[serve_bench] FAIL: jitted greedy outputs "
                          "diverge from the host-loop oracle")
+    if not paged_identical:
+        raise SystemExit("[serve_bench] FAIL: paged greedy outputs diverge "
+                         "from the contiguous engine")
+    if not paged_capacity:
+        raise SystemExit("[serve_bench] FAIL: paged engine did not exceed "
+                         "the HBM-equal contiguous batch")
 
 
 if __name__ == "__main__":

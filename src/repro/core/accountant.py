@@ -129,6 +129,39 @@ def _extend_orders(orders: Sequence[int]) -> Tuple[int, ...]:
     return tuple(orders) + tuple(new)
 
 
+def rdp_curve(sample_rate: float, noise_multiplier: float,
+              orders: Sequence[int] = DEFAULT_ORDERS) -> Tuple[float, ...]:
+    """Per-order RDP of ONE step of the subsampled Gaussian — the additive
+    unit of heterogeneous composition.  Unlike ``compute_epsilon_composed``
+    (which assumes every mechanism runs every step), a caller accumulating
+    curves can charge *different* mechanisms at different times — e.g. the
+    serving ledger composing one inference query per admitted request —
+    and convert the running sum whenever it needs ε."""
+    return tuple(rdp_subsampled_gaussian(sample_rate, noise_multiplier, a)
+                 for a in orders)
+
+
+def eps_from_rdp_curve(rdp: Sequence[float], orders: Sequence[int],
+                       delta: float,
+                       conversion=rdp_to_eps) -> Tuple[float, int]:
+    """(ε, best_order): optimize the conversion of an accumulated RDP curve
+    over a FIXED order grid.  No grid self-extension — the curve is a
+    running sum keyed to ``orders``, so the grid cannot grow after the
+    fact; use a grid with a deep tail (DEFAULT_ORDERS reaches 4096)."""
+    if len(rdp) != len(orders):
+        raise ValueError(f"curve length {len(rdp)} != grid length "
+                         f"{len(orders)}")
+    best_eps, best_a = math.inf, int(orders[0])
+    for r, a in zip(rdp, orders):
+        try:
+            e = conversion(float(r), int(a), delta)
+        except (OverflowError, ValueError):
+            continue
+        if e < best_eps:
+            best_eps, best_a = e, int(a)
+    return best_eps, best_a
+
+
 class Mechanism(NamedTuple):
     """One Poisson-subsampled Gaussian mechanism running every step.
 

@@ -17,8 +17,20 @@ import numpy as np
 
 from repro.configs import get_arch, reduced
 from repro.models.transformer import build_model
-from repro.serve import Engine, HostLoopEngine, Request
+from repro.serve import Engine, HostLoopEngine, PrivacyLedger, Request
 from repro.serve.scheduler import Scheduler
+
+
+def gen_prompts(rng, n: int, prompt_len: int, vocab: int):
+    """n random prompts with lengths in [min(4, prompt_len), prompt_len].
+    Guarding the range here (rather than letting ``rng.integers`` throw
+    its opaque ``high <= low`` error) is the --prompt-len < 4 fix: short
+    maxima clamp the lower bound instead of crashing."""
+    if prompt_len < 1:
+        raise ValueError(f"--prompt-len must be >= 1, got {prompt_len}")
+    lo = min(4, prompt_len)
+    return [rng.integers(0, vocab, int(rng.integers(lo, prompt_len + 1)))
+            for _ in range(n)]
 
 
 def main() -> None:
@@ -43,6 +55,16 @@ def main() -> None:
                     help="per-request deadline in seconds, measured from "
                          "just before the engine starts (cold-start jit "
                          "compilation counts against it)")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache (attention-only archs)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks (default: HBM-equal to "
+                         "the contiguous max_batch x cache_len slabs)")
+    ap.add_argument("--budget-eps", type=float, default=None,
+                    help="per-user privacy budget: attach a ledger and "
+                         "tag request i with user 'tenant-<i %% 4>'")
+    ap.add_argument("--ledger-delta", type=float, default=1e-6)
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -58,24 +80,40 @@ def main() -> None:
         engine = HostLoopEngine(model, params, max_batch=args.max_batch,
                                 cache_len=args.cache_len, seed=args.seed)
     else:
+        from repro.serve.ledger import RequestCharge
+        ledger = None
+        if args.budget_eps is not None:
+            # q=0.01, sigma=4.0 prices one request at eps ~0.0554 (delta
+            # 1e-6), so e.g. --budget-eps 0.057 admits 4 requests per
+            # tenant before refusing
+            ledger = PrivacyLedger(
+                args.budget_eps, args.ledger_delta, policy="refuse",
+                default_charge=RequestCharge(sample_rate=0.01,
+                                             noise_multiplier=4.0))
         engine = Engine(model, params, max_batch=args.max_batch,
                         cache_len=args.cache_len, seed=args.seed,
                         policy=args.policy, decode_chunk=args.decode_chunk,
-                        record_ttft=True)
+                        record_ttft=True, paged=args.paged,
+                        block_size=args.block_size,
+                        num_blocks=args.num_blocks, ledger=ledger)
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
-    prompts = [rng.integers(0, arch.vocab,
-                            rng.integers(4, args.prompt_len + 1))
-               for _ in range(args.requests)]
+    prompts = gen_prompts(rng, args.requests, args.prompt_len, arch.vocab)
     # deadline baseline sits after prompt generation, right before the
     # engine starts, so all requests get the full budget
     now = time.monotonic()
     deadline = None if args.deadline is None else now + args.deadline
+    ledgered = args.engine == "jitted" and args.budget_eps is not None
+    from repro.serve import BudgetExceeded
     for uid, prompt in enumerate(prompts):
-        engine.submit(Request(uid=uid, prompt=prompt.astype(np.int32),
-                              max_new=args.max_new,
-                              temperature=args.temperature,
-                              deadline=deadline))
+        req = Request(uid=uid, prompt=prompt.astype(np.int32),
+                      max_new=args.max_new, temperature=args.temperature,
+                      deadline=deadline,
+                      user=f"tenant-{uid % 4}" if ledgered else None)
+        try:
+            engine.submit(req)
+        except BudgetExceeded as e:
+            print(f"[serve] req {uid} REFUSED: {e}")
     out = engine.run()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(v) for v in out.values())

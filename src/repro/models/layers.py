@@ -266,6 +266,57 @@ def attn_decode(p, x, cache_kv, pos, cfg):
     return y, (ck, cv)
 
 
+def attn_decode_paged(p, x, cache_kv, tables, pos, cfg):
+    """Single-token decode against a block-paged KV pool.  x: (B,1,d);
+    cache_kv: (k,v) each (num_blocks, block_size, KV, hd) — one shared pool,
+    not per-slot slabs; tables: (B, nb) int32 block tables mapping slot b's
+    logical block i to pool row tables[b, i] (sentinel = num_blocks for
+    unallocated entries); pos: (B,) write positions.
+
+    Write: scatter k/v at (tables[b, pos//bs], pos%bs) with mode="drop", so
+    a sentinel row (released slot) writes nowhere.  Read: gather the pool
+    through the table — ck[tables] is (B, nb, bs, KV, hd), reshaped to the
+    (B, S, KV, hd) layout of the contiguous path; sentinel gathers clip to
+    the last pool row but land at positions > pos, where the causal mask
+    pins them to -1e30 exactly as it pins the contiguous path's zeros —
+    softmax sees identical inputs, so outputs are bit-identical.
+    Returns (y, new_cache)."""
+    B, _, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    bs = cache_kv[0].shape[1]
+    ctx = DPContext.off()
+    q, _ = ctx.dense(x, p["wq"])
+    k, _ = ctx.dense(x, p["wk"])
+    v, _ = ctx.dense(x, p["wv"])
+    q = q.reshape(B, 1, H, hd)
+    k = k.reshape(B, 1, KV, hd)
+    v = v.reshape(B, 1, KV, hd)
+    if cfg.qk_norm:
+        q, _ = rmsnorm_nd(q, p["q_norm"], ctx, cfg.norm_eps)
+        k, _ = rmsnorm_nd(k, p["k_norm"], ctx, cfg.norm_eps)
+    if cfg.rotary_pct > 0:
+        q = rope(q, pos[:, None], cfg.rope_theta, cfg.rotary_pct)
+        k = rope(k, pos[:, None], cfg.rope_theta, cfg.rotary_pct)
+    ck, cv = cache_kv
+    pb = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    ck = ck.at[pb, off].set(k[:, 0].astype(ck.dtype), mode="drop")
+    cv = cv.at[pb, off].set(v[:, 0].astype(cv.dtype), mode="drop")
+    S = tables.shape[1] * bs
+    gk = ck[tables].reshape(B, S, KV, hd)      # gather-on-read
+    gv = cv[tables].reshape(B, S, KV, hd)
+    qg = q.reshape(B, KV, H // KV, hd)
+    s = jnp.einsum("bkrh,bskh->bkrs", qg, gk,
+                   preferred_element_type=F32) / jnp.sqrt(float(hd))
+    mask = jnp.arange(S)[None, :] <= pos[:, None]                  # (B,S)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrs,bskh->bkrh", pattn.astype(gv.dtype), gv)
+    o = o.reshape(B, 1, H * hd)
+    y, _ = ctx.dense(o, p["wo"])
+    return y, (ck, cv)
+
+
 # ---------------------------------------------------------------------------
 # MLP (dense FFN)
 # ---------------------------------------------------------------------------

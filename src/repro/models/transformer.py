@@ -119,6 +119,26 @@ def apply_layer_decode(sig, p, x, cache, pos, arch: ArchConfig):
     return x, new_cache
 
 
+def apply_layer_decode_paged(sig, p, x, cache, tables, pos, arch: ArchConfig):
+    """Single-token layer against a block-paged KV pool (attn only — an
+    SSM's recurrent state is O(1) per slot, nothing to page)."""
+    kind, is_moe = sig
+    if kind != ATTN:
+        raise ValueError("paged decode supports attention layers only")
+    ctx = DPContext.off()
+    h, _ = L.rmsnorm(x, p["ln1"], ctx, arch.norm_eps)
+    y, new_cache = L.attn_decode_paged(p["attn"], h, cache, tables, pos, arch)
+    x = x + y
+    if arch.d_ff > 0:
+        h, _ = L.rmsnorm(x, p["ln2"], ctx, arch.norm_eps)
+        if is_moe:
+            y, _, _ = moe_lib.moe_apply(p["moe"], h, ctx, arch)
+        else:
+            y, _ = L.mlp_apply(p["mlp"], h, ctx, arch)
+        x = x + y
+    return x, new_cache
+
+
 def init_layer_cache(sig, arch: ArchConfig, B: int, S: int, dtype):
     kind, _ = sig
     if kind == ATTN:
@@ -350,6 +370,56 @@ class Model:
                 lambda l: jnp.zeros((reps,) + l.shape, l.dtype), one)
         return {"prelude": pre_c, "blocks": blocks_c}
 
+    def init_paged_cache(self, num_blocks: int, block_size: int):
+        """Block-paged KV pool: every attention layer gets (k, v) pools of
+        shape (num_blocks, block_size, KV, hd) — scanned block layers carry
+        a leading (reps,) axis, sharing one table across the stack (every
+        layer writes the same logical position).  Raises for hybrid/SSM
+        architectures: Mamba's recurrent state is O(1) per slot (there is
+        nothing to page) and stays in the contiguous engine."""
+        arch = self.arch
+        if MAMBA in arch.pattern():
+            raise ValueError(f"{arch.name}: paged KV cache requires an "
+                             f"attention-only architecture (SSM state is "
+                             f"O(1) per slot — nothing to page)")
+        return init_cache_paged_tree(self, num_blocks, block_size)
+
+    def decode_step_paged(self, params, cache, batch, pos, tables):
+        """One-token decode with block-table indirection: ``tables`` (B, nb)
+        maps slot b's logical block i to a pool row (sentinel = num_blocks
+        for unallocated entries).  Same logits contract as ``decode_step``;
+        greedy outputs are bit-identical to the contiguous path (gathered
+        K/V bytes match at unmasked positions, masked lanes are -1e30 in
+        both)."""
+        arch = self.arch
+        ctx = DPContext.off()
+        x, _ = self._embed_in(params, batch, ctx)
+        pre, period, reps = group_layers(arch)
+        new_pre = []
+        for i in range(pre):
+            x, c = apply_layer_decode_paged(
+                layer_sig(arch, i), params["prelude"][i], x,
+                cache["prelude"][i], tables, pos, arch)
+            new_pre.append(c)
+        new_blocks = None
+        if reps > 0:
+            sigs = [layer_sig(arch, pre + j) for j in range(period)]
+
+            def block_fn(xx, inp):
+                bp, bc = inp
+                new_c = []
+                for j in range(period):
+                    xx, cc = apply_layer_decode_paged(sigs[j], bp[j], xx,
+                                                      bc[j], tables, pos,
+                                                      arch)
+                    new_c.append(cc)
+                return xx, tuple(new_c)
+
+            x, new_blocks = jax.lax.scan(block_fn, x,
+                                         (params["blocks"], cache["blocks"]))
+        logits, _ = self._head(params, x, DPContext.off())
+        return logits, {"prelude": new_pre, "blocks": new_blocks}
+
     def prefill(self, params, batch, cache_len: int, lengths=None):
         """Full-prompt forward; returns (last-position logits (B,1,Vpad),
         cache padded to cache_len).  batch: tokens (B,T) or embeds (B,T,d).
@@ -425,6 +495,27 @@ class Model:
                                          (params["blocks"], cache["blocks"]))
         logits, _ = self._head(params, x, DPContext.off())
         return logits, {"prelude": new_pre, "blocks": new_blocks}
+
+
+def init_cache_paged_tree(model: "Model", num_blocks: int, block_size: int):
+    """(k, v) pools per attention layer, mirroring ``init_cache``'s
+    prelude/blocks structure (blocks leaves lead with (reps,))."""
+    arch = model.arch
+    pre, period, reps = group_layers(arch)
+    dtype = jnp.dtype(model.compute_dtype)
+    KV, hd = arch.n_kv_heads, arch.hd
+
+    def pool():
+        return (jnp.zeros((num_blocks, block_size, KV, hd), dtype),
+                jnp.zeros((num_blocks, block_size, KV, hd), dtype))
+
+    pre_c = [pool() for _ in range(pre)]
+    blocks_c = None
+    if reps > 0:
+        one = tuple(pool() for _ in range(period))
+        blocks_c = jax.tree.map(
+            lambda l: jnp.zeros((reps,) + l.shape, l.dtype), one)
+    return {"prelude": pre_c, "blocks": blocks_c}
 
 
 def per_example_xent(logits, labels, vocab: int):

@@ -1,7 +1,11 @@
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, StepBudgetExceeded
 from repro.serve.host_loop import HostLoopEngine
+from repro.serve.ledger import (BudgetExceeded, PrivacyLedger,
+                                RequestCharge)
+from repro.serve.paging import BlockPool
 from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import Request, Scheduler
 
 __all__ = ["Engine", "HostLoopEngine", "Request", "Scheduler",
-           "sample_tokens"]
+           "sample_tokens", "BlockPool", "PrivacyLedger", "RequestCharge",
+           "BudgetExceeded", "StepBudgetExceeded"]

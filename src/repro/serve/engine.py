@@ -18,6 +18,20 @@ host bookkeeping, possible because every request's completion step is known
 at admit time, so the host never reads the device to learn that a slot
 finished.  Outputs transfer back once per completion event, not per token.
 
+``paged=True`` swaps the per-slot contiguous cache slabs for a shared
+block pool + per-slot block tables (``serve/paging.py``): HBM then scales
+with the tokens actually resident instead of ``max_batch x cache_len``
+worst case, admission becomes a *blocks-free* gate, and requests with a
+common prompt head share prefix blocks.  Greedy outputs are bit-identical
+to the contiguous engine (gathered K/V bytes match at every unmasked
+position; masked lanes are -1e30 in both paths).
+
+``ledger=`` attaches a per-user privacy-budget ledger
+(``serve/ledger.py``): requests carry a tenant id (``Request.user``) and
+an optional ``RequestCharge``; the admission gate prices each request the
+moment it gets a slot and refuses (or defers, policy "queue") tenants
+whose composed user-level ε would exceed budget.
+
 The pre-rewrite engine survives as ``serve/host_loop.py`` (reference for
 differential tests and the speedup baseline of ``benchmarks/serve_bench.py``).
 """
@@ -31,6 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MAMBA
+from repro.serve.ledger import BudgetExceeded, PrivacyLedger, RequestCharge
+from repro.serve.paging import BlockPool, blocks_for
 from repro.serve.sampling import mask_padded_vocab, sample_tokens
 from repro.serve.scheduler import Request, Scheduler
 
@@ -43,11 +59,25 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+class StepBudgetExceeded(RuntimeError):
+    """``run(max_steps=...)`` overran its budget.  ``results`` carries
+    every output completed before the overrun, so partial work is
+    diagnosable instead of discarded."""
+
+    def __init__(self, msg: str, results: Dict[int, List[int]]):
+        super().__init__(msg)
+        self.results = dict(results)
+
+
 class Engine:
     def __init__(self, model, params, max_batch: int = 4,
                  cache_len: int = 128, seed: int = 0, policy: str = "fifo",
                  decode_chunk: int = 16, prefill_chunk: int = 16,
-                 record_ttft: bool = False, clock=time.monotonic):
+                 record_ttft: bool = False, clock=time.monotonic,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 prefix_sharing: bool = True,
+                 ledger: Optional[PrivacyLedger] = None):
         self.model = model
         self.params = params
         self.B = max_batch
@@ -61,10 +91,27 @@ class Engine:
         # Mamba/hybrid archs: recurrent state absorbs pad tokens, so waves
         # may only batch equal-length prompts (scheduler enforces it)
         self.has_mamba = MAMBA in model.arch.pattern()
+        self.paged = paged
+        self.ledger = ledger
+        self.pool: Optional[BlockPool] = None
+        if paged:
+            if self.has_mamba:
+                raise ValueError("paged=True requires an attention-only "
+                                 "architecture (SSM state is O(1) per slot)")
+            if cache_len % block_size != 0:
+                raise ValueError(f"cache_len ({cache_len}) must be a "
+                                 f"multiple of block_size ({block_size})")
+            if num_blocks is None:
+                # HBM-equal default: same token capacity as the contiguous
+                # slabs (the interesting configs set it lower)
+                num_blocks = max_batch * cache_len // block_size
+            self.pool = BlockPool(num_blocks, block_size,
+                                  prefix_sharing=prefix_sharing)
         self.sched = Scheduler(max_batch, cache_len, policy=policy,
                                same_length_waves=self.has_mamba, clock=clock)
         self.dev = {
-            "cache": model.init_cache(max_batch, cache_len),
+            "cache": (model.init_paged_cache(self.pool.num_blocks, block_size)
+                      if paged else model.init_cache(max_batch, cache_len)),
             "tokens": jnp.zeros((max_batch,), jnp.int32),
             "pos": jnp.zeros((max_batch,), jnp.int32),
             "temps": jnp.zeros((max_batch,), jnp.float32),
@@ -73,16 +120,27 @@ class Engine:
             "out": jnp.zeros((max_batch, cache_len), jnp.int32),
             "key": jax.random.PRNGKey(seed),
         }
+        if paged:
+            self.dev["tables"] = jnp.full(
+                (max_batch, cache_len // block_size), self.pool.sentinel,
+                jnp.int32)
         self.stats: Dict[str, int] = dict(
             prefill_waves=0, decode_steps=0, decode_calls=0, host_syncs=0,
-            evicted=0)
+            evicted=0, refused=0, deferred=0, max_active=0)
         self.ttft: Dict[int, float] = {}
+        self.latency: Dict[int, float] = {}   # uid -> completion latency
+        self._slot_blocks: Dict[int, List[int]] = {}   # paged: slot -> chain
+        self._pending_blocks: Dict[Request, List[int]] = {}
+        self._deferred: List[Request] = []    # ledger policy="queue" parking
+        self._ledger_version = ledger.version if ledger is not None else 0
         self._build_jitted()
 
     # -- jitted device programs --------------------------------------------
     def _build_jitted(self) -> None:
         model, B, S = self.model, self.B, self.S
         vocab = model.arch.vocab
+        paged = self.paged
+        bs = self.pool.block_size if paged else 0
 
         def prefill_wave(params, dev, toks, lengths, slots, temps, budgets):
             """One admission wave.  toks: (B, Tpad) right-padded prompts;
@@ -123,6 +181,57 @@ class Engine:
                 "out": dev["out"].at[slots, 0].set(first, mode="drop"),
             }
 
+        def prefill_wave_paged(params, dev, toks, lengths, slots, temps,
+                               budgets, wave_tables):
+            """Paged admission wave.  The wave cache (Tpad positions, Tpad
+            a block_size multiple) is reshaped into blocks and scattered
+            through ``wave_tables`` (B, S//bs; sentinel entries drop).
+            Prefix-shared blocks may be written by several rows at once —
+            and rewritten while their other sharers decode — but K/V at a
+            shared-prefix position is a causal function of the (identical)
+            tokens at or before it, so every such write carries identical
+            bytes and write order is immaterial."""
+            key, sub = jax.random.split(dev["key"])
+            Tpad = toks.shape[1]
+            logits, c1 = model.prefill(params, {"tokens": toks}, Tpad,
+                                       lengths=lengths)
+            first = sample_tokens(sub, logits[:, 0], temps, vocab)
+            nbw = Tpad // bs
+            wt = wave_tables[:, :nbw]
+
+            def pre_scatter(cp, cw):
+                cwb = cw.reshape(cw.shape[0], nbw, bs, *cw.shape[2:])
+                return cp.at[wt].set(cwb.astype(cp.dtype), mode="drop")
+
+            def blk_scatter(cp, cw):
+                cwb = cw.reshape(cw.shape[0], cw.shape[1], nbw, bs,
+                                 *cw.shape[3:])
+                return cp.at[:, wt].set(cwb.astype(cp.dtype), mode="drop")
+
+            cache = {
+                "prelude": [jax.tree.map(pre_scatter, b, c) for b, c in
+                            zip(dev["cache"]["prelude"], c1["prelude"])],
+                "blocks": (None if dev["cache"]["blocks"] is None else
+                           jax.tree.map(blk_scatter, dev["cache"]["blocks"],
+                                        c1["blocks"])),
+            }
+
+            def sset(a, v):
+                return a.at[slots].set(v.astype(a.dtype), mode="drop")
+
+            return {
+                "cache": cache,
+                "key": key,
+                "tokens": sset(dev["tokens"], first),
+                "pos": sset(dev["pos"], lengths),
+                "temps": sset(dev["temps"], temps),
+                "remaining": sset(dev["remaining"], budgets - 1),
+                "emitted": sset(dev["emitted"], jnp.ones_like(budgets)),
+                "out": dev["out"].at[slots, 0].set(first, mode="drop"),
+                "tables": dev["tables"].at[slots].set(wave_tables,
+                                                      mode="drop"),
+            }
+
         def decode_chunk(params, dev, n: int, all_greedy: bool):
             """n fused decode-sample steps.  Slots whose budget is spent are
             live-masked: their tokens/pos/counters freeze, so overshooting a
@@ -132,9 +241,14 @@ class Engine:
             draw entirely, and greedy tokens never depend on the key, so
             both variants emit identical greedy streams."""
             def one(d, _):
-                logits, cache = model.decode_step(
-                    params, d["cache"], {"tokens": d["tokens"][:, None]},
-                    d["pos"])
+                if paged:
+                    logits, cache = model.decode_step_paged(
+                        params, d["cache"], {"tokens": d["tokens"][:, None]},
+                        d["pos"], d["tables"])
+                else:
+                    logits, cache = model.decode_step(
+                        params, d["cache"], {"tokens": d["tokens"][:, None]},
+                        d["pos"])
                 if all_greedy:
                     key = d["key"]
                     tok = jnp.argmax(mask_padded_vocab(logits[:, 0], vocab),
@@ -147,46 +261,103 @@ class Engine:
                 idx = jnp.where(live, d["emitted"], S)   # S: dropped write
                 out = d["out"].at[jnp.arange(B), idx].set(tok, mode="drop")
                 live32 = live.astype(jnp.int32)
-                return {"cache": cache, "key": key, "tokens": tok,
-                        "pos": d["pos"] + live32, "temps": d["temps"],
-                        "remaining": d["remaining"] - live32,
-                        "emitted": d["emitted"] + live32, "out": out}, None
+                nd = {"cache": cache, "key": key, "tokens": tok,
+                      "pos": d["pos"] + live32, "temps": d["temps"],
+                      "remaining": d["remaining"] - live32,
+                      "emitted": d["emitted"] + live32, "out": out}
+                if paged:
+                    nd["tables"] = d["tables"]
+                return nd, None
 
             d, _ = jax.lax.scan(one, dev, None, length=n)
             return d
 
+        def release_slots(dev, slots):
+            """Device-side slot reset at free/evict time.  ``slots``: (B,)
+            int32, padded with sentinel B (dropped).  Zeroing ``remaining``
+            kills the zombie-slot bug: an evicted slot would otherwise keep
+            decoding — burning steps, advancing pos/cache writes, and (if
+            stochastic) flipping the survivors-only ``all_greedy`` flag,
+            silently changing the PRNG stream of later samples.  Paged mode
+            additionally sentinels the slot's block-table row so the frozen
+            slot's (live-masked but still-executed) cache writes can never
+            land in blocks the pool has handed to another request."""
+            dev = dict(dev)
+            dev["remaining"] = dev["remaining"].at[slots].set(0, mode="drop")
+            if paged:
+                dev["tables"] = dev["tables"].at[slots].set(
+                    jnp.int32(self.pool.sentinel), mode="drop")
+            return dev
+
         # dev is engine-owned with no outside references -> donate it so
         # XLA reuses the cache buffers across chunks
-        self._prefill_jit = jax.jit(prefill_wave, donate_argnums=(1,))
+        self._prefill_jit = jax.jit(
+            prefill_wave_paged if paged else prefill_wave,
+            donate_argnums=(1,))
         self._decode_jit = jax.jit(decode_chunk, static_argnums=(2, 3),
                                    donate_argnums=(1,))
+        self._release_jit = jax.jit(release_slots, donate_argnums=(0,))
 
     # -- public API ---------------------------------------------------------
+    def _charge_of(self, req: Request) -> Optional[RequestCharge]:
+        if req.charge is not None:
+            return req.charge
+        return self.ledger.default_charge if self.ledger else None
+
     def submit(self, req: Request) -> None:
+        self.sched.validate(req)
+        if self.paged:
+            need = blocks_for(len(req.prompt) + req.max_new,
+                              self.pool.block_size)
+            if need > self.pool.num_blocks:
+                raise ValueError(
+                    f"req {req.uid}: needs {need} blocks, pool has "
+                    f"{self.pool.num_blocks} total")
+        if self.ledger is not None and req.user is not None:
+            if not self.ledger.admits(req.user, self._charge_of(req)):
+                if self.ledger.policy == "refuse":
+                    self.stats["refused"] += 1
+                    raise BudgetExceeded(req.user,
+                                         self.ledger.epsilon(req.user),
+                                         self.ledger.budget_eps)
+                req.submit_time = self.sched.clock()
+                self._deferred.append(req)
+                self.stats["deferred"] += 1
+                return
         self.sched.submit(req)
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
         """Serve everything submitted (and anything submitted mid-run by a
         caller driving ``run`` repeatedly).  Returns {uid: tokens}; evicted
-        requests report the tokens they got before their deadline."""
+        requests report the tokens they got before their deadline.
+        ``max_steps`` overruns raise ``StepBudgetExceeded`` with the
+        already-completed outputs attached as ``.results``."""
         results: Dict[int, List[int]] = {}
         sched = self.sched
         start_steps = self.stats["decode_steps"]   # budget is per-call
+        self._replay_deferred()
         while sched.has_work():
             now = self.clock()
+            self._replay_deferred()
             for req in sched.evict_expired_queued(now):
                 results[req.uid] = []
+                self.latency[req.uid] = now - req.submit_time
                 self.stats["evicted"] += 1
             overdue = sched.evict_overdue_active(now)
             if overdue:
                 rows = self._fetch_out()
                 for slot, s in overdue:
                     results[s.request.uid] = rows[slot][:s.emitted].tolist()
+                    self.latency[s.request.uid] = now - s.request.submit_time
                     self.stats["evicted"] += 1
-            wave = sched.next_wave()
+                self._release([slot for slot, _ in overdue])
+            wave = sched.next_wave(gate=self._gate(results))
             if wave:
                 self._dispatch_prefill(wave)
                 sched.admit(wave, now)
+                self.stats["max_active"] = max(
+                    self.stats["max_active"],
+                    self.B - len(sched.free_slots()))
             self._collect(results)          # max_new=1 finishes at admit
             steps = sched.steps_to_next_completion()
             if steps is None:
@@ -197,9 +368,11 @@ class Engine:
             if max_steps is not None:
                 done_steps = self.stats["decode_steps"] - start_steps
                 if done_steps + n > max_steps:
-                    raise RuntimeError(
+                    raise StepBudgetExceeded(
                         f"engine exceeded max_steps={max_steps} "
-                        f"(decode_steps this call: {done_steps})")
+                        f"(decode_steps this call: {done_steps}; "
+                        f"{len(results)} completed outputs attached)",
+                        results)
             all_greedy = all(s.request.temperature <= 0
                              for s in sched.slots if s is not None)
             deadlines = [s.request.deadline for s in sched.slots
@@ -219,10 +392,73 @@ class Engine:
         return results
 
     # -- internals ----------------------------------------------------------
+    def _replay_deferred(self) -> None:
+        """Re-submit ledger-deferred requests after a budget refresh
+        (detected via the ledger's version counter).  Still-inadmissible
+        requests simply re-defer."""
+        if self.ledger is None or self.ledger.version == self._ledger_version:
+            return
+        self._ledger_version = self.ledger.version
+        parked, self._deferred = self._deferred, []
+        for req in parked:
+            self.submit(req)
+
+    def _gate(self, results: Dict[int, List[int]]):
+        """Admission gate for ``Scheduler.next_wave``: ledger verdicts
+        remove the request from the queue ("skip" — an exhausted tenant
+        must not block other users), block-pool exhaustion closes the wave
+        ("stop" — skipping past the head request would let small requests
+        starve it of blocks forever).  The ledger charge commits HERE, at
+        pick time, so queued requests from one user can't collectively
+        overdraw between check and admission."""
+        def gate(req: Request):
+            if self.ledger is not None and req.user is not None:
+                charge = self._charge_of(req)
+                if not self.ledger.admits(req.user, charge):
+                    if self.ledger.policy == "queue":
+                        self._deferred.append(req)
+                        self.stats["deferred"] += 1
+                    else:
+                        results[req.uid] = []
+                        self.latency[req.uid] = (self.clock()
+                                                 - req.submit_time)
+                        self.stats["refused"] += 1
+                    return "skip"
+            if self.paged:
+                chain = self.pool.alloc(np.asarray(req.prompt),
+                                        len(req.prompt) + req.max_new)
+                if chain is None:
+                    return "stop"
+                self._pending_blocks[req] = chain
+            if self.ledger is not None and req.user is not None:
+                self.ledger.charge(req.user, self._charge_of(req))
+            return True
+        return gate
+
+    def _release(self, slots: List[int]) -> None:
+        """Reset freed slots on device (and return their blocks to the
+        pool in paged mode)."""
+        if not slots:
+            return
+        padded = np.full((self.B,), self.B, np.int32)
+        padded[:len(slots)] = slots
+        self.dev = self._release_jit(self.dev, padded)
+        if self.paged:
+            for slot in slots:
+                chain = self._slot_blocks.pop(slot, None)
+                if chain is not None:
+                    self.pool.free(chain)
+
     def _dispatch_prefill(self, wave) -> None:
         Ls = [len(r.prompt) for _, r in wave]
         if self.has_mamba:
             Tpad = Ls[0]                    # equal-length wave, no padding
+        elif self.paged:
+            # Tpad must be a block_size multiple so the wave cache reshapes
+            # into whole blocks for the table scatter
+            bs = self.pool.block_size
+            Tpad = min(_round_up(_round_up(max(Ls), self.prefill_chunk), bs),
+                       self.S)
         else:
             Tpad = min(_round_up(max(Ls), self.prefill_chunk), self.S)
         toks = np.zeros((self.B, Tpad), np.int32)
@@ -236,8 +472,20 @@ class Engine:
             slots[i] = slot
             temps[i] = r.temperature
             budgets[i] = r.max_new
-        self.dev = self._prefill_jit(self.params, self.dev, toks, lengths,
-                                     slots, temps, budgets)
+        if self.paged:
+            nb_max = self.S // self.pool.block_size
+            wave_tables = np.full((self.B, nb_max), self.pool.sentinel,
+                                  np.int32)
+            for i, (slot, r) in enumerate(wave):
+                chain = self._pending_blocks.pop(r)
+                self._slot_blocks[slot] = chain
+                wave_tables[i] = self.pool.table_row(chain, nb_max)
+            self.dev = self._prefill_jit(self.params, self.dev, toks,
+                                         lengths, slots, temps, budgets,
+                                         wave_tables)
+        else:
+            self.dev = self._prefill_jit(self.params, self.dev, toks,
+                                         lengths, slots, temps, budgets)
         self.stats["prefill_waves"] += 1
         if self.record_ttft:
             jax.block_until_ready(self.dev["tokens"])
@@ -255,5 +503,12 @@ class Engine:
         if not fins:
             return
         rows = self._fetch_out()
+        now = self.clock()
         for slot, s in fins:
             results[s.request.uid] = rows[slot][:s.emitted].tolist()
+            self.latency[s.request.uid] = now - s.request.submit_time
+        if self.paged:
+            # finished slots have remaining==0 on device already, but their
+            # table rows must drop to sentinel before the pool reuses the
+            # blocks (the frozen slot still executes cache writes)
+            self._release([slot for slot, _ in fins])

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.engine import StepBudgetExceeded
 from repro.serve.scheduler import Request
 
 
@@ -140,8 +141,14 @@ class HostLoopEngine:
         while any(r is not None for r in self.active) or self.queue:
             if (max_steps is not None
                     and self.stats["decode_steps"] - start_steps >= max_steps):
-                raise RuntimeError(f"host-loop engine exceeded "
-                                   f"max_steps={max_steps}")
+                # attach what already finished (and the partial streams of
+                # still-active slots) so the overrun is diagnosable without
+                # discarding completed work
+                raise StepBudgetExceeded(
+                    f"host-loop engine exceeded max_steps={max_steps} "
+                    f"({len(self.results)} partial/completed outputs "
+                    f"attached)",
+                    {uid: list(toks) for uid, toks in self.results.items()})
             self.step()
             self._admit()
         done, self.results = self.results, {}

@@ -46,6 +46,8 @@ class Request:                       # objects, and ndarray __eq__ would
     deadline: Optional[float] = None  # absolute time (scheduler clock units)
     out_tokens: Optional[List[int]] = None
     submit_time: float = 0.0
+    user: Optional[str] = None       # tenant id for the privacy ledger
+    charge: Optional[object] = None  # ledger.RequestCharge override
 
 
 @dataclasses.dataclass
@@ -72,7 +74,10 @@ class Scheduler:
         self.slots: List[Optional[Slot]] = [None] * max_batch
 
     # -- queue -------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def validate(self, req: Request) -> None:
+        """Shape checks only (no queue mutation) — callers that park a
+        request outside the queue (the engine's ledger-deferred list) run
+        the same validation a normal submit would."""
         T = len(req.prompt)
         if T < 1:
             raise ValueError(f"req {req.uid}: empty prompt")
@@ -81,6 +86,9 @@ class Scheduler:
         if T + req.max_new > self.S:
             raise ValueError(f"req {req.uid}: prompt ({T}) + max_new "
                              f"({req.max_new}) exceeds cache_len ({self.S})")
+
+    def submit(self, req: Request) -> None:
+        self.validate(req)
         req.submit_time = self.clock()
         self.queue.append(req)
 
@@ -111,12 +119,25 @@ class Scheduler:
         return out
 
     # -- admission ---------------------------------------------------------
-    def next_wave(self) -> List[Tuple[int, Request]]:
+    def next_wave(self, gate=None) -> List[Tuple[int, Request]]:
         """Pick up to ``len(free_slots)`` queued requests for one prefill
         wave and pop them from the queue.  Call ``admit`` once the wave has
         been dispatched.  Deadline eviction is the caller's job
         (``evict_expired_queued``) so evicted requests are never silently
-        discarded."""
+        discarded.
+
+        ``gate(req)`` turns slot-count admission into resource admission
+        (the paged engine admits on *blocks free*, the ledger on ε budget):
+
+        * ``True``   — admit: the request joins the wave.
+        * ``"stop"`` — resource backpressure (e.g. block pool exhausted):
+          the request stays queued and the wave closes; skipping *past* it
+          would let small requests starve a large head-of-queue request of
+          blocks forever.
+        * ``"skip"`` — the caller took ownership of the request's
+          disposition (ledger refusal/deferral): pop it from the queue,
+          don't admit, keep scanning — one exhausted tenant must not block
+          every other user's traffic."""
         free = self.free_slots()
         if not free or not self.queue:
             return []
@@ -129,8 +150,19 @@ class Scheduler:
             # equal-length requests further back still fill the wave
             L = len(order[0].prompt)
             order = [r for r in order if len(r.prompt) == L]
-        picked = order[:len(free)]
-        for r in picked:
+        picked: List[Request] = []
+        dropped: List[Request] = []
+        for r in order:
+            if len(picked) >= len(free):
+                break
+            verdict = True if gate is None else gate(r)
+            if verdict is True:
+                picked.append(r)
+            elif verdict == "skip":
+                dropped.append(r)
+            else:                       # "stop": backpressure, close wave
+                break
+        for r in picked + dropped:
             self.queue.remove(r)
         return list(zip(free, picked))
 

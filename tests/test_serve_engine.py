@@ -4,7 +4,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.serve import Engine, HostLoopEngine, Request, Scheduler
+from repro.serve import (Engine, HostLoopEngine, Request, Scheduler,
+                         StepBudgetExceeded)
 
 from helpers import tiny_model
 
@@ -261,6 +262,85 @@ def test_engine_mid_burst_deadline_eviction(served):
     out = eng.run(max_steps=100)
     assert 0 < len(out[0]) < 40
     assert eng.stats["evicted"] == 1
+
+
+def test_eviction_zeroes_device_budget(served):
+    """Regression (zombie-slot bug): evicting an overdue active request
+    freed the host slot but left the device-side ``remaining`` counter
+    live, so the slot kept decoding — advancing ``pos`` and burning
+    steps — until its budget drained on its own.  Eviction must zero the
+    budget on device, freezing the slot exactly at the evicted state."""
+    arch, model, params = served
+    t = {"now": 0.0}
+
+    def clock():                       # advances 50 ms per observation
+        t["now"] += 0.05
+        return t["now"]
+
+    eng = Engine(model, params, max_batch=1, cache_len=64, decode_chunk=2,
+                 clock=clock)
+    prompt = np.arange(1, 6, dtype=np.int32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=40, deadline=0.6))
+    out = eng.run(max_steps=100)
+    assert 0 < len(out[0]) < 40 and eng.stats["evicted"] == 1
+    assert np.asarray(eng.dev["remaining"]).tolist() == [0]
+    # pos froze at the eviction point (prompt + emitted - 1): pre-fix the
+    # zombie kept advancing it
+    assert int(np.asarray(eng.dev["pos"])[0]) == len(prompt) + len(out[0]) - 1
+
+
+def test_evict_readmit_contiguous(served):
+    """A slot freed by eviction serves the next request exactly as a
+    fresh engine would (no state leaks through the reused slab)."""
+    arch, model, params = served
+    t = {"now": 0.0}
+
+    def clock():
+        t["now"] += 0.05
+        return t["now"]
+
+    eng = Engine(model, params, max_batch=1, cache_len=64, decode_chunk=2,
+                 clock=clock)
+    eng.submit(Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                       max_new=40, temperature=0.8, deadline=0.6))
+    assert 0 < len(eng.run(max_steps=100)[0]) < 40      # evicted mid-decode
+    readmit = Request(uid=1, prompt=np.arange(2, 9, dtype=np.int32),
+                      max_new=6)
+    eng.submit(readmit)
+    got = eng.run(max_steps=50)[1]
+    solo = Engine(model, params, max_batch=1, cache_len=64)
+    solo.submit(Request(uid=1, prompt=readmit.prompt, max_new=6))
+    assert got == solo.run(max_steps=50)[1]
+
+
+@pytest.mark.parametrize("engine_cls", [Engine, HostLoopEngine])
+def test_step_budget_attaches_completed_results(served, engine_cls):
+    """Regression: overrunning ``max_steps`` used to raise a bare
+    RuntimeError, discarding every already-completed output.  The
+    exception now carries them as ``.results``."""
+    arch, model, params = served
+    eng = engine_cls(model, params, max_batch=1, cache_len=64)
+    eng.submit(Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                       max_new=2))
+    eng.submit(Request(uid=1, prompt=np.arange(1, 6, dtype=np.int32),
+                       max_new=30))
+    with pytest.raises(StepBudgetExceeded) as ei:
+        eng.run(max_steps=5)
+    assert len(ei.value.results[0]) == 2     # finished before the overrun
+
+
+def test_gen_prompts_short_max():
+    """Regression: ``--prompt-len`` below 4 used to crash the launcher
+    inside ``rng.integers(4, prompt_len + 1)`` (high <= low); short maxima
+    now clamp the lower bound, and non-positive lengths fail loudly."""
+    from repro.launch.serve import gen_prompts
+    rng = np.random.default_rng(0)
+    for pl in (1, 2, 3, 4, 16):
+        prompts = gen_prompts(rng, 8, pl, vocab=50)
+        assert len(prompts) == 8
+        assert all(1 <= len(p) <= pl for p in prompts)
+    with pytest.raises(ValueError):
+        gen_prompts(rng, 1, 0, vocab=50)
 
 
 def test_duplicate_requests_use_identity():

@@ -1,0 +1,269 @@
+"""Per-user privacy ledger: curve/accountant parity, composition
+tightness, the admission gate (refuse + queue policies), charge-at-
+admission overdraw protection, and checkpoint/restore."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.accountant import (DEFAULT_ORDERS, compute_epsilon_from_rate,
+                                   eps_from_rdp_curve, rdp_curve, rdp_to_eps,
+                                   rdp_subsampled_gaussian)
+from repro.serve import (BudgetExceeded, Engine, PrivacyLedger, Request,
+                         RequestCharge)
+
+from helpers import tiny_model
+
+DELTA = 1e-6
+CHARGE = RequestCharge(sample_rate=0.01, noise_multiplier=4.0)
+# composed eps for 1..5 CHARGEs at DELTA: 0.0554 / 0.0559 / 0.0564 /
+# 0.0569 / 0.0575 — so this budget admits exactly four
+BUDGET_4 = 0.057
+
+
+@pytest.fixture(scope="module")
+def served():
+    arch, model = tiny_model("stablelm-3b")
+    params = model.init(jax.random.PRNGKey(0))
+    return arch, model, params
+
+
+def _reqs(arch, n, user, rng, max_new=3):
+    return [Request(uid=uid,
+                    prompt=rng.integers(0, arch.vocab,
+                                        int(rng.integers(4, 10))
+                                        ).astype(np.int32),
+                    max_new=max_new, user=user)
+            for uid in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# curve helpers vs the training accountant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("steps", [1, 3, 10])
+def test_curve_matches_accountant(steps):
+    """Ledger pricing (fixed-grid RDP curve x steps, order-optimized
+    conversion) matches an independent grid-restricted recomputation
+    exactly, and the training accountant — which ternary-refines the
+    order *between* grid points — can only be marginally tighter."""
+    q, sigma = CHARGE.sample_rate, CHARGE.noise_multiplier
+    curve = np.array(rdp_curve(q, sigma), np.float64) * steps
+    eps, order = eps_from_rdp_curve(curve, DEFAULT_ORDERS, DELTA)
+    assert order in DEFAULT_ORDERS
+    best = np.inf
+    for a in DEFAULT_ORDERS:
+        try:
+            best = min(best, rdp_to_eps(
+                steps * rdp_subsampled_gaussian(q, sigma, a), a, DELTA))
+        except (OverflowError, ValueError):
+            continue
+    assert eps == pytest.approx(best, rel=1e-12)
+    refined, _ = compute_epsilon_from_rate(steps, q, sigma, DELTA)
+    assert refined <= eps + 1e-12
+    assert eps == pytest.approx(refined, rel=0.05)   # dense grid: ~2% gap
+
+
+def test_eps_from_rdp_curve_validates_grid():
+    with pytest.raises(ValueError):
+        eps_from_rdp_curve([0.1, 0.2], DEFAULT_ORDERS, DELTA)
+
+
+def test_heterogeneous_composition_tighter_than_eps_sum():
+    """Composing RDP curves then converting once beats converting each
+    charge to ε and adding — the reason the ledger stores curves."""
+    a = RequestCharge(0.01, 4.0)
+    b = RequestCharge(0.02, 6.0)
+    led = PrivacyLedger(10.0, DELTA)
+    led.charge("u", a)
+    eps_a = led.epsilon("u")
+    led2 = PrivacyLedger(10.0, DELTA)
+    led2.charge("v", b)
+    eps_b = led2.epsilon("v")
+    led.charge("u", b)
+    assert led.epsilon("u") < eps_a + eps_b
+    assert led.epsilon("u") > max(eps_a, eps_b)     # still monotone
+
+
+def test_ledger_epsilon_monotone_in_charges():
+    led = PrivacyLedger(10.0, DELTA, default_charge=CHARGE)
+    prev = 0.0
+    for _ in range(5):
+        eps = led.charge("u")
+        assert eps > prev
+        prev = eps
+
+
+def test_admits_boundary_exactly_four():
+    led = PrivacyLedger(BUDGET_4, DELTA, default_charge=CHARGE)
+    admitted = 0
+    while led.admits("alice"):
+        led.charge("alice")
+        admitted += 1
+    assert admitted == 4
+    assert led.epsilon("alice") <= BUDGET_4
+    # a different user's budget is untouched
+    assert led.admits("bob")
+
+
+def test_ledger_validation():
+    with pytest.raises(ValueError):
+        PrivacyLedger(0.0, DELTA)
+    with pytest.raises(ValueError):
+        PrivacyLedger(1.0, DELTA, policy="drop-table")
+
+
+# ---------------------------------------------------------------------------
+# engine admission: refuse policy
+# ---------------------------------------------------------------------------
+
+def test_submit_refuses_exhausted_user(served):
+    """Acceptance criterion: an over-budget user's submit raises
+    BudgetExceeded under policy="refuse"."""
+    arch, model, params = served
+    led = PrivacyLedger(BUDGET_4, DELTA, default_charge=CHARGE)
+    while led.admits("mallory"):
+        led.charge("mallory")                       # budget exhausted
+    eng = Engine(model, params, max_batch=2, cache_len=64, ledger=led)
+    with pytest.raises(BudgetExceeded) as ei:
+        eng.submit(Request(uid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                           max_new=3, user="mallory"))
+    assert ei.value.user == "mallory"
+    assert ei.value.epsilon <= BUDGET_4             # charged-so-far eps
+    assert eng.stats["refused"] == 1
+    # an un-ledgered request (user=None) is never gated
+    eng.submit(Request(uid=1, prompt=np.arange(1, 7, dtype=np.int32),
+                       max_new=3))
+    assert len(eng.run(max_steps=50)[1]) == 3
+
+
+def test_gate_charges_at_admission_not_submit(served):
+    """Eight same-user requests all pass the submit-time check (nothing is
+    charged yet), but the admission gate prices each as it gets a slot —
+    so exactly four serve and four are refused with empty results.  This
+    is the overdraw protection: queued requests can't collectively spend
+    ε the user does not have."""
+    arch, model, params = served
+    rng = np.random.default_rng(0)
+    led = PrivacyLedger(BUDGET_4, DELTA, default_charge=CHARGE)
+    eng = Engine(model, params, max_batch=2, cache_len=64, ledger=led)
+    for r in _reqs(arch, 8, "alice", rng):
+        eng.submit(r)                               # none raises
+    out = eng.run(max_steps=200)
+    assert sorted(out) == list(range(8))
+    served_uids = [u for u, v in out.items() if v]
+    refused = [u for u, v in out.items() if not v]
+    assert len(served_uids) == 4 and len(refused) == 4
+    assert eng.stats["refused"] == 4
+    assert led.epsilon("alice") <= BUDGET_4
+    assert all(len(out[u]) == 3 for u in served_uids)
+    assert all(u in eng.latency for u in out)       # refusals get latency too
+
+
+def test_ledger_does_not_perturb_outputs(served):
+    """A ledger with ample budget is pure bookkeeping: greedy outputs are
+    bit-identical to the un-ledgered engine."""
+    arch, model, params = served
+    rng = np.random.default_rng(7)
+    reqs = _reqs(arch, 5, "alice", rng)
+    plain = Engine(model, params, max_batch=2, cache_len=64)
+    for r in reqs:
+        plain.submit(Request(uid=r.uid, prompt=r.prompt, max_new=r.max_new))
+    want = plain.run(max_steps=200)
+    led = PrivacyLedger(100.0, DELTA, default_charge=CHARGE)
+    eng = Engine(model, params, max_batch=2, cache_len=64, ledger=led)
+    for r in reqs:
+        eng.submit(r)
+    assert eng.run(max_steps=200) == want
+    assert led.epsilon("alice") > 0
+
+
+# ---------------------------------------------------------------------------
+# engine admission: queue policy + refresh replay
+# ---------------------------------------------------------------------------
+
+def test_queue_policy_defers_until_refresh(served):
+    arch, model, params = served
+    rng = np.random.default_rng(3)
+    led = PrivacyLedger(BUDGET_4, DELTA, policy="queue",
+                        default_charge=CHARGE)
+    eng = Engine(model, params, max_batch=2, cache_len=64, ledger=led)
+    for r in _reqs(arch, 8, "bob", rng):
+        eng.submit(r)
+    out1 = eng.run(max_steps=200)
+    assert len(out1) == 4                           # four parked, not refused
+    assert eng.stats["deferred"] == 4
+    assert eng.stats["refused"] == 0
+    assert len(eng._deferred) == 4
+    # no refresh -> deferred requests stay parked
+    assert eng.run(max_steps=200) == {}
+    led.refresh("bob")                              # contract renewal
+    out2 = eng.run(max_steps=200)
+    assert sorted(list(out1) + list(out2)) == list(range(8))
+    assert all(len(v) == 3 for v in out2.values())
+    assert not eng._deferred
+
+
+def test_queue_policy_defers_at_submit_when_already_exhausted(served):
+    arch, model, params = served
+    led = PrivacyLedger(BUDGET_4, DELTA, policy="queue",
+                        default_charge=CHARGE)
+    while led.admits("bob"):
+        led.charge("bob")
+    eng = Engine(model, params, max_batch=2, cache_len=64, ledger=led)
+    eng.submit(Request(uid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                       max_new=2, user="bob"))      # deferred, no raise
+    assert eng.stats["deferred"] == 1
+    assert eng.run(max_steps=50) == {}
+    led.refresh()                                   # global renewal
+    assert len(eng.run(max_steps=50)[0]) == 2
+
+
+# ---------------------------------------------------------------------------
+# per-request charges
+# ---------------------------------------------------------------------------
+
+def test_request_charge_overrides_default(served):
+    """A request carrying its own RequestCharge is priced by it, not the
+    ledger default — a whale query can burn the budget in one shot."""
+    arch, model, params = served
+    led = PrivacyLedger(BUDGET_4, DELTA, default_charge=CHARGE)
+    big = RequestCharge(sample_rate=0.05, noise_multiplier=0.8)  # eps ~ 3.1
+    eng = Engine(model, params, max_batch=2, cache_len=64, ledger=led)
+    with pytest.raises(BudgetExceeded):
+        eng.submit(Request(uid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                           max_new=2, user="alice", charge=big))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restore
+# ---------------------------------------------------------------------------
+
+def test_state_survives_save_load(tmp_path):
+    led = PrivacyLedger(BUDGET_4, DELTA, default_charge=CHARGE)
+    led.charge("alice")
+    led.charge("alice")
+    led.charge("bob", RequestCharge(0.02, 6.0))
+    led.refresh("bob")
+    led.charge("bob")
+    path = str(tmp_path / "ledger.json")
+    led.save(path)
+    back = PrivacyLedger.load(path)
+    for user in ("alice", "bob", "carol"):
+        assert back.epsilon(user) == led.epsilon(user)
+    assert back.version == led.version
+    assert back.budget_eps == led.budget_eps
+    assert back.default_charge == CHARGE    # restore must keep enforcing
+    # restored ledger keeps pricing: alice has 2 of 4 charges left
+    n = 0
+    while back.admits("alice") and n < 10:
+        back.charge("alice")
+        n += 1
+    assert n == 2
+
+
+def test_restore_rejects_order_grid_mismatch():
+    led = PrivacyLedger(1.0, DELTA, orders=(2, 4, 8, 16, 32, 64))
+    led.charge("u", CHARGE)
+    other = PrivacyLedger(1.0, DELTA)
+    with pytest.raises(ValueError, match="grid"):
+        other.load_state_dict(led.state_dict())

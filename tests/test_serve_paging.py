@@ -1,0 +1,301 @@
+"""Block-paged KV cache: BlockPool allocator semantics, paged-vs-contiguous
+greedy bit-identity, blocks-free admission backpressure, prefix sharing,
+the capacity win over HBM-equal contiguous slabs, and the eviction/reuse
+path (block-table sentinel reset on device)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.serve import Engine, Request
+from repro.serve.paging import BlockPool, blocks_for
+
+from helpers import tiny_model
+
+
+@pytest.fixture(scope="module")
+def served():
+    arch, model = tiny_model("stablelm-3b")
+    params = model.init(jax.random.PRNGKey(0))
+    return arch, model, params
+
+
+def _requests(arch, n, rng, max_new=None, temperature=0.0):
+    out = []
+    for uid in range(n):
+        prompt = rng.integers(0, arch.vocab,
+                              int(rng.integers(4, 14))).astype(np.int32)
+        out.append(Request(uid=uid, prompt=prompt,
+                           max_new=max_new or int(rng.integers(1, 8)),
+                           temperature=temperature))
+    return out
+
+
+def _clone(reqs):
+    return [Request(uid=r.uid, prompt=r.prompt, max_new=r.max_new,
+                    temperature=r.temperature, deadline=r.deadline)
+            for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# BlockPool allocator (pure host, no jax)
+# ---------------------------------------------------------------------------
+
+def test_blocks_for():
+    assert blocks_for(1, 8) == 1
+    assert blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2
+    assert blocks_for(24, 8) == 3
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = BlockPool(4, 8, prefix_sharing=False)
+    p = np.arange(10, dtype=np.int32)
+    a = pool.alloc(p, 20)                      # 3 blocks
+    assert len(a) == 3 and pool.free_blocks == 1
+    b = pool.alloc(p, 8)                       # 1 block
+    assert len(b) == 1 and pool.free_blocks == 0
+    assert pool.alloc(p, 8) is None            # exhausted -> backpressure
+    assert pool.stats["alloc_failures"] == 1
+    pool.free(a)
+    pool.free(b)
+    assert pool.free_blocks == 4
+    with pytest.raises(AssertionError):        # double free is a bug
+        pool.free(b)
+
+
+def test_pool_prefix_sharing_refcounts():
+    pool = BlockPool(8, 4)
+    head = np.arange(8, dtype=np.int32)        # two full blocks
+    a = pool.alloc(np.concatenate([head, [9]]).astype(np.int32), 12)
+    b = pool.alloc(np.concatenate([head, [11]]).astype(np.int32), 12)
+    # b reuses a's two full prompt blocks; the tail block is private
+    assert a[:2] == b[:2] and a[2] != b[2]
+    assert pool.stats["reused"] == 2
+    assert pool.refcount(a[0]) == 2
+    pool.free(a)
+    assert pool.refcount(b[0]) == 1            # b still holds the prefix
+    c = pool.alloc(np.concatenate([head, [13]]).astype(np.int32), 12)
+    assert c[:2] == b[:2]                      # registry survives a's free
+    pool.free(b)
+    pool.free(c)
+    assert pool.free_blocks == 8
+    # last holder freed -> deregistered: a fresh alloc reuses nothing
+    reused_before = pool.stats["reused"]
+    d = pool.alloc(head, 8)
+    assert pool.stats["reused"] == reused_before
+    pool.free(d)
+
+
+def test_pool_partial_block_never_shared():
+    pool = BlockPool(8, 4)
+    p = np.arange(6, dtype=np.int32)           # 1 full + 1 partial block
+    a = pool.alloc(p, 6)
+    b = pool.alloc(p, 6)
+    assert a[0] == b[0]                        # full prompt block shared
+    assert a[1] != b[1]                        # partial tail is private
+    pool.free(a)
+    pool.free(b)
+
+
+def test_pool_chain_keyed_by_parent():
+    """Same token block under different parents must not collide: the
+    registry key chains through the parent block id."""
+    pool = BlockPool(8, 2)
+    a = pool.alloc(np.array([1, 2, 3, 3], np.int32), 4)
+    b = pool.alloc(np.array([9, 9, 3, 3], np.int32), 4)
+    # both prompts end with block [3, 3], but under different heads
+    assert a[1] != b[1]
+    pool.free(a)
+    pool.free(b)
+
+
+# ---------------------------------------------------------------------------
+# engine: paged == contiguous, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_contiguous(served):
+    """Greedy outputs of the paged engine (slot churn, mixed lengths,
+    padded waves) are bit-identical to the contiguous engine."""
+    arch, model, params = served
+    rng = np.random.default_rng(3)
+    reqs = _requests(arch, 8, rng)
+    cont = Engine(model, params, max_batch=3, cache_len=64)
+    for r in _clone(reqs):
+        cont.submit(r)
+    want = cont.run(max_steps=500)
+    pg = Engine(model, params, max_batch=3, cache_len=64, paged=True,
+                block_size=8)
+    for r in _clone(reqs):
+        pg.submit(r)
+    got = pg.run(max_steps=500)
+    assert got == want
+    assert pg.pool.free_blocks == pg.pool.num_blocks   # all chains freed
+
+
+def test_paged_capacity_exceeds_contiguous_hbm(served):
+    """With the pool sized to the SAME token capacity as 6 contiguous
+    slots (24 blocks x 8 = 192 = 6 x 32), the paged engine runs more than
+    6 short requests at once — the tentpole's HBM claim."""
+    arch, model, params = served
+    rng = np.random.default_rng(4)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, arch.vocab, 4).astype(np.int32),
+                    max_new=4) for i in range(16)]
+    pg = Engine(model, params, max_batch=12, cache_len=32, paged=True,
+                block_size=8, num_blocks=24)
+    for r in reqs:
+        pg.submit(r)
+    out = pg.run(max_steps=500)
+    assert len(out) == 16 and all(len(v) == 4 for v in out.values())
+    assert pg.stats["max_active"] > 6          # beats HBM-equal contiguous
+
+
+def test_paged_block_backpressure(served):
+    """A pool smaller than the slot count forces blocks-free admission:
+    every request still completes, with alloc failures recorded."""
+    arch, model, params = served
+    rng = np.random.default_rng(5)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, arch.vocab, 5).astype(np.int32),
+                    max_new=4) for i in range(8)]
+    pg = Engine(model, params, max_batch=8, cache_len=32, paged=True,
+                block_size=8, num_blocks=4)
+    for r in reqs:
+        pg.submit(r)
+    out = pg.run(max_steps=500)
+    assert sorted(out) == list(range(8))
+    assert all(len(v) == 4 for v in out.values())
+    assert pg.pool.stats["alloc_failures"] > 0
+    assert pg.pool.free_blocks == 4
+
+
+def test_paged_prefix_sharing_identity(served):
+    """Requests sharing a 16-token prompt head share prefix blocks AND
+    still emit bit-identical outputs to the contiguous engine."""
+    arch, model, params = served
+    head = (np.arange(16) % arch.vocab).astype(np.int32)
+    reqs = [Request(uid=i,
+                    prompt=np.concatenate([head,
+                                           np.full((i + 1,), (7 + i) %
+                                                   arch.vocab, np.int32)]),
+                    max_new=3) for i in range(4)]
+    cont = Engine(model, params, max_batch=4, cache_len=64)
+    for r in _clone(reqs):
+        cont.submit(r)
+    want = cont.run(max_steps=200)
+    pg = Engine(model, params, max_batch=4, cache_len=64, paged=True,
+                block_size=8)
+    for r in _clone(reqs):
+        pg.submit(r)
+    got = pg.run(max_steps=200)
+    assert got == want
+    assert pg.pool.stats["reused"] > 0
+    assert pg.pool.free_blocks == pg.pool.num_blocks
+
+
+def test_paged_submit_rejects_oversize_chain(served):
+    arch, model, params = served
+    pg = Engine(model, params, max_batch=2, cache_len=32, paged=True,
+                block_size=8, num_blocks=2)          # 16-token pool
+    with pytest.raises(ValueError, match="blocks"):
+        pg.submit(Request(uid=0, prompt=np.ones((20,), np.int32),
+                          max_new=4))
+
+
+def test_paged_rejects_mamba():
+    arch, model = tiny_model("mamba2-1.3b")          # SSM layers
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="attention-only"):
+        Engine(model, params, max_batch=2, cache_len=32, paged=True,
+               block_size=8)
+    with pytest.raises(ValueError):
+        model.init_paged_cache(4, 8)
+
+
+def test_paged_rejects_unaligned_cache_len(served):
+    arch, model, params = served
+    with pytest.raises(ValueError, match="multiple"):
+        Engine(model, params, max_batch=2, cache_len=30, paged=True,
+               block_size=8)
+
+
+# ---------------------------------------------------------------------------
+# eviction + reuse on the paged path
+# ---------------------------------------------------------------------------
+
+def test_paged_evict_readmit_no_leakage(served):
+    """A slot evicted mid-decode frees its blocks, zeroes its device-side
+    budget, and drops its block-table row to sentinel; a later wave
+    reusing the slot emits exactly the solo output."""
+    arch, model, params = served
+    t = {"now": 0.0}
+
+    def clock():                       # advances per observation
+        t["now"] += 0.5
+        return t["now"]
+
+    pg = Engine(model, params, max_batch=2, cache_len=32, paged=True,
+                block_size=8, num_blocks=8, decode_chunk=2, clock=clock)
+    pa = Request(uid=0, prompt=np.arange(1, 6, dtype=np.int32), max_new=8)
+    pb = Request(uid=1, prompt=np.arange(2, 7, dtype=np.int32), max_new=16,
+                 temperature=0.7, deadline=3.0)
+    pg.submit(pa)
+    pg.submit(pb)
+    out1 = pg.run(max_steps=100)
+    assert 0 < len(out1[1]) < 16       # evicted mid-decode, partial result
+    assert pg.stats["evicted"] == 1
+    # zombie fix: the evicted slot's budget is zeroed ON DEVICE
+    assert np.asarray(pg.dev["remaining"]).tolist() == [0, 0]
+    # ... and every table row is sentinel (no live blocks reachable)
+    assert (np.asarray(pg.dev["tables"]) == pg.pool.sentinel).all()
+    assert pg.pool.free_blocks == pg.pool.num_blocks
+    # readmit into the freed slots: output must equal a solo run
+    pc = Request(uid=2, prompt=np.arange(3, 9, dtype=np.int32), max_new=6)
+    pg.submit(pc)
+    out2 = pg.run(max_steps=100)
+    solo = Engine(model, params, max_batch=1, cache_len=32, paged=True,
+                  block_size=8)
+    solo.submit(Request(uid=2, prompt=np.arange(3, 9, dtype=np.int32),
+                        max_new=6))
+    assert out2[2] == solo.run(max_steps=100)[2]
+
+
+def test_paged_zombie_cannot_corrupt_reallocated_blocks(served):
+    """The sharpest paged-mode consequence of the zombie bug: an evicted
+    slot whose device state is never reset keeps executing cache writes
+    through its STALE block table.  Run 1 evicts a stochastic request and
+    ends with its old slot still free; run 2 admits a newcomer into a
+    *different* slot that is handed the evicted request's physical blocks.
+    Without the device-side reset the zombie's writes land in the
+    newcomer's blocks and corrupt its output; with the fix the newcomer is
+    bit-identical to a solo run."""
+    arch, model, params = served
+    t = {"now": 0.0}
+
+    def clock():
+        t["now"] += 0.5
+        return t["now"]
+
+    pg = Engine(model, params, max_batch=2, cache_len=32, paged=True,
+                block_size=8, num_blocks=5, decode_chunk=2, clock=clock)
+    long_a = Request(uid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                     max_new=8)                      # blocks [0, 1]
+    doomed = Request(uid=1, prompt=np.arange(4, 12, dtype=np.int32),
+                     max_new=16, temperature=0.9, deadline=3.0)  # [2, 3, 4]
+    pg.submit(long_a)
+    pg.submit(doomed)
+    out1 = pg.run(max_steps=200)
+    assert 0 < len(out1[1]) < 16       # doomed evicted mid-decode (slot 1)
+    # run 2: slot 0 is free first, so succ lands in slot 0 while the
+    # zombie's old slot 1 stays empty — and succ's chain pops [4, 3, 2],
+    # placing doomed's block 4 (where the zombie still writes) under
+    # succ's PROMPT positions 4..7
+    succ = Request(uid=2, prompt=np.arange(2, 10, dtype=np.int32),
+                   max_new=12)
+    pg.submit(succ)
+    out2 = pg.run(max_steps=200)
+    solo = Engine(model, params, max_batch=1, cache_len=32, paged=True,
+                  block_size=8, num_blocks=5)
+    solo.submit(Request(uid=2, prompt=np.arange(2, 10, dtype=np.int32),
+                        max_new=12))
+    assert out2[2] == solo.run(max_steps=200)[2]
