@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dp test-sites test-mem test-kernels test-kernels-fast test-recipe test-serve test-multidevice bench-smoke bench-serve bench-kernels bench-dp dryrun-smoke
+.PHONY: test test-fast test-dp test-sites test-mem test-kernels test-kernels-fast test-recipe test-serve test-multidevice test-tune bench-smoke bench-serve bench-kernels bench-dp bench-autotune dryrun-smoke
 
 # tier-1 verify: the gate for every change
 test:
@@ -70,6 +70,14 @@ test-serve:
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
+# the launch-autotuner gate: deterministic seeded search (same seed =>
+# same winning plan), plan/config equivalence, estimator memoization,
+# infeasible-budget gap reporting, and the cost-model invariants the
+# fitness functions are built on (sim/dataflow.py)
+test-tune:
+	$(PY) -m pytest -x -q -m "not slow" \
+	    tests/test_autotune.py tests/test_dataflow.py
+
 # distributed semantics on 8 fake CPU host devices (shard_map batch-locality,
 # sharded-vs-single-device equivalence, pjit train step on a (2,4) mesh)
 test-multidevice:
@@ -95,6 +103,13 @@ bench-kernels:
 # more than 1.15x K slower than the K=1 step
 bench-dp:
 	$(PY) -m benchmarks.dp_bench
+
+# launch autotuner: solved-plan vs hand-picked default on three reduced
+# presets (transformer / cnn / moe) -> BENCH_autotune.json; exits
+# non-zero if the solved plan is measurably slower or bigger than the
+# default it replaces
+bench-autotune:
+	$(PY) -m benchmarks.autotune_bench
 
 # one compile-only distribution cell with batch-local ops (artifact under
 # results/dryrun)

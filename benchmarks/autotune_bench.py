@@ -1,0 +1,116 @@
+"""Launch-autotuner benchmark: the solved plan must never lose to the
+hand-picked default.
+
+For three reduced presets spanning the model families — a transformer
+(phi3-mini-3.8b), a CNN (cnn-cifar10) and an MoE (deepseek-moe-16b) —
+run the full ``launch/autotune.solve`` loop (deterministic search over
+the plan space, then compile-and-measure of the top-k predicted plans
+plus the default) and record into ``BENCH_autotune.json``:
+
+* the winning plan and the hand-picked default, each with *measured*
+  compiled step seconds and measured (XLA ``memory_analysis``) peak
+  bytes;
+* the predicted-vs-measured Spearman rank correlation over the measured
+  set — the sim-vs-real loop's health metric;
+* the search counters (space size, traces, cache hits).
+
+Regression gate (same contract as benchmarks/dp_bench.py): on every
+preset the winner's measured step time must be <= the default's AND its
+measured peak must be <= the default's — the eligibility rule inside
+``solve`` guarantees this by construction (the default is always in the
+measured pool), so a gate failure means the solver's winner selection
+broke.  Exits non-zero on any failure.
+
+Usage:  python -m benchmarks.autotune_bench  [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+OUT = "BENCH_autotune.json"
+PRESETS = ("phi3-mini-3.8b", "cnn-cifar10", "deepseek-moe-16b")
+
+
+def _cfg_for(arch):
+    from repro.configs.base import ShapeConfig, TrainConfig, TuneConfig
+    shape = ShapeConfig("autotune_bench", 32, 8, "train")
+    cfg = TrainConfig(arch=arch.name, shape=shape.name,
+                      param_dtype="float32", compute_dtype="float32",
+                      tune=TuneConfig(seed=0, topk=3, measure_iters=3))
+    return cfg, shape
+
+
+def _plan_rec(report, plan) -> dict:
+    want = plan.as_dict()
+    for r in report.measured:
+        if r["plan"] == want:
+            return r
+    raise KeyError(f"plan {want} not in measured set")
+
+
+def run_preset(name: str) -> dict:
+    from repro.configs import ARCHS, reduced
+    from repro.launch.autotune import solve
+
+    arch = reduced(ARCHS[name])
+    cfg, shape = _cfg_for(arch)
+    t0 = time.time()
+    report = solve(arch, cfg, shape, mesh_shapes=[(1, 1)], measure=True)
+    win = _plan_rec(report, report.plan)
+    dflt = _plan_rec(report, report.default_plan)
+    rec = {
+        "preset": name,
+        "family": arch.family,
+        "space_size": report.space_size,
+        "method": report.method,
+        "seed": report.seed,
+        "evals": report.evals,
+        "traces": report.traces,
+        "cache_hits": report.cache_hits,
+        "rank_correlation": report.rank_correlation,
+        "winner": win,
+        "default": dflt,
+        "n_measured": len(report.measured),
+        "solve_s": round(time.time() - t0, 2),
+    }
+    print(f"[autotune_bench] {name} ({arch.family}): winner "
+          f"{win['seconds'] * 1e3:.2f} ms / peak "
+          f"{win['measured_peak_bytes']} B vs default "
+          f"{dflt['seconds'] * 1e3:.2f} ms / peak "
+          f"{dflt['measured_peak_bytes']} B; corr "
+          f"{report.rank_correlation} ({rec['solve_s']}s)", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+
+    cells = [run_preset(name) for name in PRESETS]
+    gate = {"ok": True, "cells": []}
+    for c in cells:
+        w, d = c["winner"], c["default"]
+        time_ok = w["seconds"] <= d["seconds"]
+        peaks = (w["measured_peak_bytes"], d["measured_peak_bytes"])
+        mem_ok = (None in peaks) or peaks[0] <= peaks[1]
+        ok = time_ok and mem_ok
+        gate["cells"].append({"preset": c["preset"], "time_ok": time_ok,
+                              "mem_ok": mem_ok, "ok": ok})
+        gate["ok"] = gate["ok"] and ok
+        print(f"[autotune_bench] gate {c['preset']}: "
+              f"{'OK' if ok else 'REGRESSION'} (time_ok={time_ok}, "
+              f"mem_ok={mem_ok})", flush=True)
+
+    rec = {"bench": "autotune", "presets": cells, "gate": gate}
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[autotune_bench] wrote {args.out}; "
+          f"gate {'OK' if gate['ok'] else 'FAILED'}", flush=True)
+    raise SystemExit(0 if gate["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -433,7 +433,56 @@ class MemConfig:
 
 
 @dataclass(frozen=True)
+class TuneConfig:
+    """Search-based launch autotuner (launch/autotune.py ``solve``).
+
+    The autotuner searches the launch-plan space (grad_accum x microbatch
+    x remat x norm strategy x kernels x mesh shape x grad compression)
+    for the fastest *feasible* plan: estimated step seconds from the
+    ``sim/dataflow`` cycle model over the traced program's GEMMs, subject
+    to the ``launch/memory`` peak estimate fitting
+    ``MemConfig.hbm_budget_bytes`` and the Poisson-capacity / batch-axis
+    divisibility rules.  The top-``topk`` predicted plans (plus the
+    incoming hand-picked default) are then compiled and measured, and the
+    fastest *measured* plan whose measured peak does not exceed the
+    default's (or the budget) wins — so a solved plan is never slower
+    than the default it replaces.
+
+    **Determinism contract**: the search is seed-reproducible — the GA
+    draws every random number from a ``random.Random(seed)`` stream (no
+    wall clock, no global RNG), candidate orderings are sorted, and the
+    estimators are pure functions of the plan — so the same ``seed`` on
+    the same config always returns the identical winning plan
+    (asserted by tests/test_autotune.py across two in-process runs).
+
+    ``method``: ``"auto"`` enumerates exhaustively up to
+    ``exhaustive_limit`` candidates and switches to the GA above it;
+    ``"ga"`` / ``"beam"`` / ``"exhaustive"`` force a backend.
+    ``include_kernels``: admit ``use_kernels=True`` plans into the space
+    (off by default: on CPU the Pallas routes run in interpret mode, so
+    measuring them is slow and never competitive).
+    """
+    seed: int = 0
+    method: str = "auto"           # auto | ga | beam | exhaustive
+    population: int = 32           # GA population size
+    generations: int = 12          # GA generations
+    beam_width: int = 8            # beam-search width
+    exhaustive_limit: int = 128    # auto: enumerate spaces up to this size
+    topk: int = 4                  # plans to compile-and-measure
+    measure_iters: int = 5         # best-of-N timing per measured plan
+    include_kernels: bool = False  # admit Pallas-route plans (see above)
+
+
+@dataclass(frozen=True)
 class TrainConfig:
+    """Top-level training configuration.
+
+    Reproducibility: ``seed`` keys the data stream, the Poisson sampler,
+    init and the DP noise; ``tune.seed`` keys the launch autotuner's GA
+    (``launch/autotune.py``) — both are deterministic streams, so the same
+    (config, seed) pair reproduces the same run and the same solved
+    launch plan bit-for-bit.
+    """
     arch: str = "phi3-mini-3.8b"
     shape: str = "train_4k"
     seed: int = 0
@@ -453,6 +502,7 @@ class TrainConfig:
     optim: OptimConfig = field(default_factory=OptimConfig)
     mesh: MeshConfig = field(default_factory=MeshConfig)
     mem: MemConfig = field(default_factory=MemConfig)
+    tune: TuneConfig = field(default_factory=TuneConfig)
     data_source: str = "synthetic"  # synthetic | memmap:<path>
     watchdog_factor: float = 3.0    # straggler logging threshold
 

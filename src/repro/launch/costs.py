@@ -55,6 +55,11 @@ class Costs:
         self.ew_flops = 0.0
         self.dot_bytes = 0.0
         self.move_bytes = 0.0
+        # (M, K, N) -> execution multiplicity: every dot_general / conv in
+        # the traced program as the GEMM a systolic array would run, scan
+        # trip counts folded into the multiplicity.  This is what feeds the
+        # sim/dataflow.py cycle model (launch/autotune.py fitness).
+        self.gemms: Dict[tuple, float] = {}
 
     @property
     def total_flops(self) -> float:
@@ -64,13 +69,24 @@ class Costs:
     def total_bytes(self) -> float:
         return self.dot_bytes + self.move_bytes
 
+    def gemm_list(self):
+        """Deterministically-ordered [(m, k, n, mult), ...]."""
+        return [(m, k, n, mult)
+                for (m, k, n), mult in sorted(self.gemms.items())]
+
     def as_dict(self) -> dict:
         return {"dot_flops_by_dtype": dict(self.dot_flops),
                 "elementwise_flops": self.ew_flops,
                 "dot_bytes": self.dot_bytes,
                 "move_bytes": self.move_bytes,
                 "total_flops": self.total_flops,
-                "total_bytes": self.total_bytes}
+                "total_bytes": self.total_bytes,
+                "gemms": [list(g) for g in self.gemm_list()]}
+
+
+def _record_gemm(acc: Costs, m: int, k: int, n: int, mult: float) -> None:
+    key = (int(m), int(k), int(n))
+    acc.gemms[key] = acc.gemms.get(key, 0.0) + mult
 
 
 def _dot_cost(eqn, mult: float, acc: Costs) -> None:
@@ -86,6 +102,13 @@ def _dot_cost(eqn, mult: float, acc: Costs) -> None:
     acc.dot_flops[dt] = acc.dot_flops.get(dt, 0.0) + flops
     acc.dot_bytes += mult * (_aval_bytes(lhs) + _aval_bytes(rhs)
                              + _aval_bytes(out))
+    # the (M, K, N) a systolic array would run: N = rhs free dims, batch
+    # dims folded into M (out_elems = batch . M . N)
+    n = 1
+    for i, d in enumerate(rhs.shape):
+        if i not in rc and i not in rb:
+            n *= int(d)
+    _record_gemm(acc, _aval_elems(out) // max(n, 1), k, n, mult)
 
 
 def _conv_cost(eqn, mult: float, acc: Costs) -> None:
@@ -106,6 +129,8 @@ def _conv_cost(eqn, mult: float, acc: Costs) -> None:
     acc.dot_flops[dt] = acc.dot_flops.get(dt, 0.0) + flops
     acc.dot_bytes += mult * (_aval_bytes(lhs) + _aval_bytes(rhs)
                              + _aval_bytes(out))
+    n = int(rhs.shape[out_f])
+    _record_gemm(acc, _aval_elems(out) // max(n, 1), k, n, mult)
 
 
 def _walk(jaxpr, mult: float, acc: Costs) -> None:
@@ -154,6 +179,8 @@ def _walk(jaxpr, mult: float, acc: Costs) -> None:
                       mult * n_inst, sub)
             for dt, v in sub.dot_flops.items():
                 acc.dot_flops[dt] = acc.dot_flops.get(dt, 0.0) + v
+            for g, v in sub.gemms.items():
+                acc.gemms[g] = acc.gemms.get(g, 0.0) + v
             acc.ew_flops += sub.ew_flops
             acc.move_bytes += mult * (
                 sum(_aval_bytes(x.aval) for x in eqn.invars)
@@ -184,6 +211,8 @@ def _walk(jaxpr, mult: float, acc: Costs) -> None:
 def _merge(acc: Costs, other: Costs) -> None:
     for k, v in other.dot_flops.items():
         acc.dot_flops[k] = acc.dot_flops.get(k, 0.0) + v
+    for g, v in other.gemms.items():
+        acc.gemms[g] = acc.gemms.get(g, 0.0) + v
     acc.ew_flops += other.ew_flops
     acc.dot_bytes += other.dot_bytes
     acc.move_bytes += other.move_bytes

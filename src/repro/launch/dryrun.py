@@ -258,7 +258,8 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
              norm_strategy: str = "auto", tag: str = "",
              mesh_shape: str = "", mesh_axes: str = "",
              local_ops: bool = False, serve_fsdp: bool = True,
-             augmult: int = 1, adaptive_clip: bool = False) -> dict:
+             augmult: int = 1, adaptive_clip: bool = False,
+             autotune: bool = False) -> dict:
     if mesh_shape:
         from repro.launch.mesh import make_mesh
         shape_t = tuple(int(s) for s in mesh_shape.split(","))
@@ -331,6 +332,25 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
             rec["roofline"]["model_vs_hlo_flops"] = (
                 rec["model_flops_global"]
                 / max(analytic["total_flops"], 1.0))
+            if autotune and shape.kind == "train":
+                # winning plan + score breakdown as an artifact cell:
+                # predicted-only (measure=False keeps the no-allocation
+                # dry-run contract); beam search bounds the trace count
+                # at full model scale
+                from repro.configs.base import TuneConfig
+                from repro.launch.autotune import solve
+                cfg_t = TrainConfig(
+                    arch=arch_name, shape=shape_name,
+                    grad_accum=rec.get("grad_accum", 1),
+                    dp=DPConfig(algo=dp_algo, norm_strategy=norm_strategy,
+                                augmult=augmult,
+                                adaptive_clip=adaptive_clip),
+                    tune=TuneConfig(method="beam", beam_width=4, topk=4))
+                report = solve(arch, cfg_t, shape,
+                               mesh_shapes=[tuple(
+                                   int(s) for s in mesh.devices.shape)],
+                               measure=False)
+                rec["autotune"] = report.as_dict()
     except Exception as e:  # noqa: BLE001 — record the failure, don't die
         rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()[-4000:]})
@@ -393,6 +413,9 @@ def main() -> None:
     ap.add_argument("--adaptive-clip", action="store_true",
                     help="compile the quantile-adaptive clip update into "
                          "train cells")
+    ap.add_argument("--autotune", action="store_true",
+                    help="add the launch autotuner's winning plan + score "
+                         "breakdown (predicted-only) to train cells")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
 
@@ -420,7 +443,8 @@ def main() -> None:
                            local_ops=args.local_ops,
                            serve_fsdp=not args.no_serve_fsdp,
                            augmult=args.augmult,
-                           adaptive_clip=args.adaptive_clip)
+                           adaptive_clip=args.adaptive_clip,
+                           autotune=args.autotune)
             n_fail += 0 if rec.get("ok") else 1
     print(f"[dryrun] done; {n_fail} failures", flush=True)
     raise SystemExit(1 if n_fail else 0)

@@ -447,8 +447,12 @@ def pick_grad_accum(model, train_cfg, shape, dataset_size: int = 1_000_000,
         if est["per_device_peak_bytes"] <= budget:
             return g, est
     lines = ", ".join(f"grad_accum={g}: {p / 1e9:.3f} GB" for g, p in tried)
+    best_g, best_peak = min(tried, key=lambda t: t[1])
+    gap = best_peak - budget
     raise ValueError(
         f"no microbatch split fits hbm_budget_bytes={budget} "
         f"({budget / 1e9:.3f} GB/device); estimated per-device peaks "
         f"({shards}-wide batch axis): {lines}. "
-        f"Raise the budget, shrink the batch, or use remat.")
+        f"Closest: grad_accum={best_g} at {best_peak} B "
+        f"({best_peak / 1e9:.3f} GB), {gap} B over budget — raise the "
+        f"budget by at least that gap, shrink the batch, or use remat.")

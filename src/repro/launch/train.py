@@ -47,6 +47,10 @@ def main() -> None:
     ap.add_argument("--axes", default="data,model")
     ap.add_argument("--set", action="append", default=[],
                     help="config overrides, e.g. --set dp.clip_norm=0.5")
+    ap.add_argument("--autotune", action="store_true",
+                    help="solve for the fastest feasible launch plan "
+                         "(launch/autotune.py) before launching; knobs "
+                         "via --set tune.seed=... etc.")
     # multi-controller flags
     ap.add_argument("--coordinator", default=None)
     ap.add_argument("--num-processes", type=int, default=None)
@@ -75,20 +79,36 @@ def main() -> None:
         cfg = replace(cfg, steps=args.steps,
                       optim=replace(cfg.optim, total_steps=args.steps))
 
-    model = build_model_for(arch, param_dtype=cfg.param_dtype,
-                            compute_dtype=cfg.compute_dtype, remat=cfg.remat)
-
     if args.mesh:
         mesh = make_mesh([int(s) for s in args.mesh.split(",")],
                          args.axes.split(","))
     else:
         mesh = make_host_mesh()
 
+    plan = None
+    if args.autotune:
+        from repro.launch.autotune import solve
+        mesh_shape = tuple(int(s) for s in mesh.devices.shape)
+        report = solve(arch, cfg, shape, mesh_shapes=[mesh_shape])
+        plan = report.plan
+        print(f"[train] autotune ({report.method}, seed={report.seed}): "
+              f"searched {report.space_size} plans, {report.traces} traces "
+              f"({report.cache_hits} cache hits); winner {plan}")
+        if report.rank_correlation is not None:
+            print(f"[train] autotune predicted-vs-measured rank "
+                  f"correlation: {report.rank_correlation:.3f} over "
+                  f"{len(report.measured)} measured plans")
+        cfg = plan.apply(cfg)
+
+    model = build_model_for(arch, param_dtype=cfg.param_dtype,
+                            compute_dtype=cfg.compute_dtype, remat=cfg.remat)
+
     # the trainer owns the physical per-step row count: == global_batch for
     # fixed sampling; under dp.sampling="poisson" a padded step-invariant
     # capacity rounded to the mesh's batch-axis width so the batch — and
     # its (B,) bool mask leaf — shards over the full data axis
-    trainer = Trainer(model, cfg, shape, batch_multiple=batch_axis_width(mesh))
+    trainer = Trainer(model, cfg, shape, batch_multiple=batch_axis_width(mesh),
+                      plan=plan)
     phys_batch = trainer.capacity
     if cfg.dp.sampling == "poisson":
         print(f"[train] poisson sampling: expected batch "

@@ -170,3 +170,54 @@ def dp_training_time(acc: Accel, layers: Iterable, batch: int,
 
 def step_energy(acc: Accel, bd: StepBreakdown) -> float:
     return acc.power_w * bd.total + DRAM_E_PER_BYTE * bd.dram_bytes
+
+
+# ---------------------------------------------------------------------------
+# Traced-program pricing (launch/autotune.py fitness backend)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TracedStep:
+    """Cycle-model seconds for a *traced* train step (launch/costs.py GEMM
+    records), the generalization of ``dp_training_time`` the launch
+    autotuner scores candidates with: instead of the paper's fixed
+    per-layer fwd/dgrad/wgrad taxonomy, every dot_general / conv the
+    program actually traces — remat recompute, second backward passes,
+    norm-rule einsums, grad-accum scan trips — is priced individually
+    through the same ``gemm_time`` engine model."""
+    gemm: float = 0.0            # sum of per-GEMM times (compute/BW max)
+    elementwise: float = 0.0     # memory-bound non-GEMM work
+    collective: float = 0.0      # cross-device gradient reduction
+    dram_bytes: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.gemm + self.elementwise + self.collective
+
+
+def traced_step_time(acc: Accel, gemms: Iterable[Tuple[int, int, int, float]],
+                     ew_flops: float = 0.0, move_bytes: float = 0.0,
+                     n_devices: int = 1, coll_bytes: float = 0.0,
+                     ici_bw: float = 50e9) -> TracedStep:
+    """Price a traced step on ``acc``.
+
+    ``gemms``: ``(m, k, n, mult)`` records from ``launch/costs.py``
+    (``Costs.gemm_list``) — the program's GEMMs with scan multiplicities.
+    ``ew_flops`` / ``move_bytes``: the non-GEMM accounting from the same
+    walk, priced as DRAM-bandwidth-bound (one f32 write per elementwise
+    output element).  Compute and per-program-point HBM traffic divide
+    over ``n_devices`` (data/model parallel work split); ``coll_bytes``
+    is per-device wire traffic priced at ``ici_bw``.
+    """
+    ts = TracedStep()
+    dev = max(1, int(n_devices))
+    gemm_bytes = 0.0
+    for m, k, n, mult in gemms:
+        ts.gemm += mult * gemm_time(acc, (int(m), int(k), int(n)))
+        gemm_bytes += mult * (BYTES_IN * (m * k + k * n) + BYTES_OUT * m * n)
+    ts.gemm /= dev
+    ew_bytes = move_bytes + BYTES_OUT * ew_flops
+    ts.elementwise = ew_bytes / acc.dram_bw / dev
+    ts.collective = coll_bytes / ici_bw
+    ts.dram_bytes = (gemm_bytes + ew_bytes) / dev + coll_bytes
+    return ts

@@ -156,6 +156,77 @@ def lstm_large(seq: int = 32) -> List[LayerGEMMs]:
     return lstm(2, 512, 1024, seq)
 
 
+# ---------------------------------------------------------------------------
+# ArchConfig adapter: per-layer GEMM tables for the repo's own presets
+# ---------------------------------------------------------------------------
+
+def layers_for_arch(arch, seq_len: int) -> List[LayerGEMMs]:
+    """LayerGEMMs table for a ``repro.configs`` ArchConfig — the adapter
+    that lets ``dp_training_time`` price the repo's presets with the same
+    Fig. 6 GEMM mapping as the paper models above.  Weight-bearing GEMMs
+    only (attention score/value products carry no weights); MoE layers
+    count the active (top_k + shared) expert paths per token.
+    """
+    layers: List[LayerGEMMs] = []
+    if arch.family == "cnn":
+        from repro.models.cnn import iter_conv_sites
+        for _, op_shapes, gy_shape in iter_conv_sites(arch, batch=1):
+            w = op_shapes[1]                  # (kh, kw, cin, cout)
+            layers.append(conv(w[2], w[3], w[0] * w[1],
+                               gy_shape[1] * gy_shape[2]))
+        layers.append(dense(arch.cnn.stage_channels[-1], arch.n_classes))
+        return layers
+    d = arch.d_model
+    if arch.family == "vit":
+        v = arch.vit
+        t = v.n_patches
+        layers.append(conv(v.in_channels, d, v.patch_size * v.patch_size, t))
+        for _ in range(arch.n_layers):
+            layers += _attn_layers(arch, t) + _ffn_layers(arch, t,
+                                                          arch.d_ff)
+        layers.append(dense(d, arch.n_classes))
+        return layers
+    t = seq_len
+    for i, kind in enumerate(arch.pattern()):
+        if kind == "mamba":
+            di = arch.mamba.d_inner(d)
+            layers.append(dense(d, 2 * di, t))       # in-proj (x + z)
+            layers.append(dense(di, d, t))           # out-proj
+        else:
+            layers += _attn_layers(arch, t)
+        if arch.d_ff > 0:                 # FFN rides every layer kind
+            if arch.is_moe_layer(i):
+                m = arch.moe
+                n_mats = 3 if arch.mlp_act == "swiglu" else 2
+                active = m.top_k
+                for _ in range(n_mats - 1):
+                    layers.append(dense(d, m.d_expert, t * active))
+                layers.append(dense(m.d_expert, d, t * active))
+                if m.d_shared:
+                    for _ in range(n_mats - 1):
+                        layers.append(dense(d, m.d_shared, t))
+                    layers.append(dense(m.d_shared, d, t))
+            else:
+                layers += _ffn_layers(arch, t, arch.ff_dense())
+    if not arch.tie_embeddings and not arch.embed_stub:
+        layers.append(dense(d, arch.vocab, t))       # LM head
+    return layers
+
+
+def _attn_layers(arch, t: int) -> List[LayerGEMMs]:
+    if not arch.n_heads:
+        return []
+    d, hd = arch.d_model, arch.hd
+    qkv = (arch.n_heads + 2 * arch.n_kv_heads) * hd
+    return [dense(d, qkv, t), dense(arch.n_heads * hd, d, t)]
+
+
+def _ffn_layers(arch, t: int, ff: int) -> List[LayerGEMMs]:
+    d = arch.d_model
+    n_up = 2 if arch.mlp_act == "swiglu" else 1
+    return [dense(d, ff, t) for _ in range(n_up)] + [dense(ff, d, t)]
+
+
 # max practical DP-SGD mini-batch per paper §III-A discussion
 MODELS = {
     "vgg16": (vgg16, 32),

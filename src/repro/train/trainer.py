@@ -131,7 +131,18 @@ class Trainer:
                  jit_step: bool = True, shard_batch=None,
                  inject_failure_at: Optional[int] = None,
                  inject_inside_jit: bool = False,
-                 batch_multiple: int = 1):
+                 batch_multiple: int = 1, plan=None):
+        # plan: a solved launch/autotune.py LaunchPlan — applied onto the
+        # config up front, it subsumes the auto-microbatch search below
+        # (that search is the degenerate 1-D case of the plan space)
+        self.plan = plan
+        if plan is not None:
+            if model.remat != plan.remat:
+                raise ValueError(
+                    f"model was built with remat={model.remat!r} but the "
+                    f"launch plan says remat={plan.remat!r}; rebuild the "
+                    f"model with the plan's policy")
+            train_cfg = plan.apply(train_cfg)
         self.model = model
         self.cfg = train_cfg
         self.shape = shape
@@ -153,7 +164,7 @@ class Trainer:
         # step-fn construction below so the Poisson lcm rounding sees the
         # chosen grad_accum (launch/memory.py owns the search)
         self.mem_estimate = None
-        if train_cfg.mem.auto_microbatch and \
+        if plan is None and train_cfg.mem.auto_microbatch and \
                 train_cfg.mem.hbm_budget_bytes > 0:
             from repro.launch.memory import pick_grad_accum
             accum, est = pick_grad_accum(model, train_cfg, shape,

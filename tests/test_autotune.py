@@ -1,0 +1,279 @@
+"""launch/autotune.py: deterministic search, plan equivalence, memoization,
+infeasibility reporting, and the Trainer integration.
+
+The heavy fixtures run the solver on a reduced transformer with the
+non-private algo ("sgd"), which collapses the norm-strategy and
+microbatch dimensions — a 9-candidate space (3 grad_accums x 3 remats)
+that keeps the trace count small while exercising every code path.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import (DPConfig, MemConfig, ShapeConfig,
+                                TrainConfig, TuneConfig)
+from repro.launch.autotune import (LaunchPlan, PlanScorer, PlanSpace,
+                                   solve, spearman)
+
+ARCH = reduced(ARCHS["phi3-mini-3.8b"])
+SHAPE = ShapeConfig("autotune_test", 32, 4, "train")
+
+
+def _cfg(**kw) -> TrainConfig:
+    kw.setdefault("dp", DPConfig(enabled=False, algo="sgd"))
+    return TrainConfig(arch=ARCH.name, param_dtype="float32",
+                       compute_dtype="float32", **kw)
+
+
+@pytest.fixture(scope="module")
+def ga_reports():
+    """Two independent in-process GA solves with the same seed."""
+    cfg = _cfg(tune=TuneConfig(method="ga", seed=7, population=6,
+                               generations=3, topk=2))
+    r1 = solve(ARCH, cfg, SHAPE, mesh_shapes=[(1, 1)], measure=False)
+    r2 = solve(ARCH, cfg, SHAPE, mesh_shapes=[(1, 1)], measure=False)
+    return r1, r2
+
+
+@pytest.fixture(scope="module")
+def ex_report():
+    cfg = _cfg(tune=TuneConfig(method="exhaustive", topk=4))
+    return solve(ARCH, cfg, SHAPE, mesh_shapes=[(1, 1)], measure=False)
+
+
+# ---------------------------------------------------------------------------
+# plan encode/decode + config equivalence
+# ---------------------------------------------------------------------------
+
+def test_plan_config_roundtrip():
+    cfg = _cfg(grad_accum=2, remat="sites", compress_pod_grads=True,
+               dp=DPConfig(algo="dpsgd_r", microbatch=0,
+                           norm_strategy="gram", use_kernels=False))
+    plan = LaunchPlan.from_config(cfg, mesh_shape=(2, 1))
+    assert plan.grad_accum == 2 and plan.remat == "sites"
+    assert plan.norm_strategy == "gram" and plan.compress_grads
+    cfg2 = plan.apply(_cfg(dp=DPConfig(algo="dpsgd_r")))
+    assert cfg2.grad_accum == 2
+    assert cfg2.remat == "sites"
+    assert cfg2.compress_pod_grads
+    assert cfg2.dp.norm_strategy == "gram"
+    assert cfg2.mesh.shape == (2, 1)
+    # re-encoding the applied config is a fixed point
+    assert LaunchPlan.from_config(cfg2) == plan
+
+
+def test_plan_width_convention():
+    assert LaunchPlan(mesh_shape=(1, 1)).width == 1
+    assert LaunchPlan(mesh_shape=(16, 16)).width == 16
+    assert LaunchPlan(mesh_shape=(2, 16, 16)).width == 32  # pod x data
+    assert LaunchPlan(mesh_shape=(4,)).width == 4
+
+
+def test_space_genome_roundtrip():
+    cfg = _cfg(dp=DPConfig(algo="dpsgd_r"))
+    space = PlanSpace.build(ARCH, cfg, SHAPE, mesh_shapes=[(1, 1)])
+    for g in space.genomes():
+        assert space.genome_of(space.plan_of(g)) == g
+    assert space.size == sum(1 for _ in space.genomes())
+    # the incumbent is inside its own space
+    assert space.genome_of(space.default) is not None
+
+
+def test_static_feasibility_rules():
+    cfg = _cfg(dp=DPConfig(enabled=True, algo="dpsgd"))
+    scorer = PlanScorer(ARCH, cfg, SHAPE)
+    ok = LaunchPlan(grad_accum=2, mesh_shape=(1, 1))
+    assert scorer._static_infeasible(ok) == ""
+    bad_accum = LaunchPlan(grad_accum=3, mesh_shape=(1, 1))
+    assert "divide" in scorer._static_infeasible(bad_accum)
+    bad_micro = LaunchPlan(grad_accum=2, microbatch=3, mesh_shape=(1, 1))
+    assert "microbatch" in scorer._static_infeasible(bad_micro)
+    bad_width = LaunchPlan(grad_accum=1, mesh_shape=(8, 1))
+    assert "width" in scorer._static_infeasible(bad_width)
+
+
+# ---------------------------------------------------------------------------
+# determinism + memoization + search quality
+# ---------------------------------------------------------------------------
+
+def test_same_seed_same_winning_plan(ga_reports):
+    r1, r2 = ga_reports
+    assert r1.plan == r2.plan
+    assert [s.plan for s in r1.predicted] == [s.plan for s in r2.predicted]
+    assert [s.pred_seconds for s in r1.predicted] == \
+        [s.pred_seconds for s in r2.predicted]
+    assert r1.seed == r2.seed == 7
+
+
+def test_memoization_counters(ga_reports):
+    r1, _ = ga_reports
+    # the GA revisits genomes: far fewer traces than evaluations, and the
+    # cache-hit counter records the difference
+    assert r1.cache_hits > 0
+    assert r1.traces < r1.evals
+    assert r1.traces <= r1.space_size
+
+
+def test_ga_matches_exhaustive_optimum(ga_reports, ex_report):
+    # 9-candidate space: the seeded GA must find the global optimum the
+    # exhaustive sweep proves (deterministic, so this cannot flake)
+    r1, _ = ga_reports
+    assert r1.plan == ex_report.plan
+
+
+def test_exhaustive_report_shape(ex_report):
+    assert ex_report.method == "exhaustive"
+    assert ex_report.space_size == 9     # 3 grad_accums x 3 remats
+    assert ex_report.traces == 9
+    assert all(s.feasible for s in ex_report.predicted)
+    times = [s.pred_seconds for s in ex_report.predicted]
+    assert times == sorted(times)
+    d = ex_report.as_dict()              # JSON-serializable artifact
+    import json
+    json.dumps(d)
+
+
+def test_beam_finds_feasible_plan():
+    cfg = _cfg(tune=TuneConfig(method="beam", beam_width=2, topk=2))
+    rep = solve(ARCH, cfg, SHAPE, mesh_shapes=[(1, 1)], measure=False)
+    assert rep.method == "beam"
+    assert rep.predicted and rep.predicted[0].feasible
+    assert rep.plan == rep.predicted[0].plan
+
+
+# ---------------------------------------------------------------------------
+# infeasibility: raise with the best candidate's byte gap
+# ---------------------------------------------------------------------------
+
+def test_infeasible_budget_raises_with_gap():
+    cfg = _cfg(mem=MemConfig(hbm_budget_bytes=1024),
+               tune=TuneConfig(method="exhaustive"))
+    with pytest.raises(ValueError, match="over budget"):
+        solve(ARCH, cfg, SHAPE, mesh_shapes=[(1, 1)], measure=False)
+    try:
+        solve(ARCH, cfg, SHAPE, mesh_shapes=[(1, 1)], measure=False)
+    except ValueError as e:
+        msg = str(e)
+        assert "best infeasible candidate" in msg
+        assert "hbm_budget_bytes=1024" in msg
+        # the gap is reported in exact bytes
+        import re
+        assert re.search(r"\d+ B over budget", msg)
+
+
+def test_divisibility_only_infeasibility_message():
+    # a space where nothing passes the static checks: batch-axis width 8
+    # cannot divide a 4-example fixed-sampling batch at any grad_accum
+    cfg = _cfg(tune=TuneConfig(method="exhaustive"))
+    with pytest.raises(ValueError, match="no feasible launch plan"):
+        solve(ARCH, cfg, SHAPE, mesh_shapes=[(8, 1)], measure=False)
+
+
+# ---------------------------------------------------------------------------
+# measured solve: the never-slower-than-default gate
+# ---------------------------------------------------------------------------
+
+def test_measured_solve_never_slower_than_default():
+    cfg = _cfg(tune=TuneConfig(method="exhaustive", topk=1,
+                               measure_iters=2))
+    rep = solve(ARCH, cfg, SHAPE, mesh_shapes=[(1, 1)], measure=True)
+    assert rep.measured
+    assert rep.rank_correlation is None or -1.0 <= rep.rank_correlation <= 1.0
+    by_plan = {tuple(sorted((k, tuple(v) if isinstance(v, list) else v)
+                            for k, v in r["plan"].items())): r
+               for r in rep.measured}
+
+    def rec(p):
+        return by_plan[tuple(sorted(
+            (k, tuple(v) if isinstance(v, list) else v)
+            for k, v in p.as_dict().items()))]
+
+    win, dflt = rec(rep.plan), rec(rep.default_plan)
+    assert win["seconds"] <= dflt["seconds"]
+    if None not in (win["measured_peak_bytes"], dflt["measured_peak_bytes"]):
+        budget = cfg.mem.hbm_budget_bytes
+        assert (win["measured_peak_bytes"] <= dflt["measured_peak_bytes"]
+                or (budget > 0
+                    and win["measured_peak_bytes"] <= budget))
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration: a solved plan subsumes the 1-D auto-microbatch search
+# ---------------------------------------------------------------------------
+
+def test_trainer_accepts_plan():
+    from repro.models import build_model_for
+    from repro.train.trainer import Trainer
+    cfg = _cfg(dp=DPConfig(algo="dpsgd_r"))
+    plan = LaunchPlan(grad_accum=2, remat="none", norm_strategy="gram",
+                      mesh_shape=(1, 1))
+    model = build_model_for(ARCH, param_dtype="float32",
+                            compute_dtype="float32", remat="none")
+    tr = Trainer(model, cfg, SHAPE, jit_step=False, plan=plan)
+    assert tr.cfg.grad_accum == 2
+    assert tr.cfg.remat == "none"
+    assert tr.cfg.dp.norm_strategy == "gram"
+    assert tr.plan is plan
+
+
+def test_trainer_rejects_mismatched_remat():
+    from repro.models import build_model_for
+    from repro.train.trainer import Trainer
+    cfg = _cfg()
+    plan = LaunchPlan(grad_accum=1, remat="none", mesh_shape=(1, 1))
+    model = build_model_for(ARCH, param_dtype="float32",
+                            compute_dtype="float32", remat="block")
+    with pytest.raises(ValueError, match="remat"):
+        Trainer(model, cfg, SHAPE, jit_step=False, plan=plan)
+
+
+def test_trainer_plan_skips_auto_microbatch():
+    # an impossible budget would make the auto-microbatch search raise;
+    # a plan pre-empts that search entirely
+    from repro.models import build_model_for
+    from repro.train.trainer import Trainer
+    cfg = _cfg(mem=MemConfig(hbm_budget_bytes=1, auto_microbatch=True))
+    plan = LaunchPlan(grad_accum=1, remat="block", mesh_shape=(1, 1))
+    model = build_model_for(ARCH, param_dtype="float32",
+                            compute_dtype="float32", remat="block")
+    tr = Trainer(model, cfg, SHAPE, jit_step=False, plan=plan)
+    assert tr.mem_estimate is None
+
+
+# ---------------------------------------------------------------------------
+# pick_grad_accum: the all-candidates-fail path reports the byte gap
+# ---------------------------------------------------------------------------
+
+def test_pick_grad_accum_reports_budget_gap():
+    from repro.launch.memory import pick_grad_accum
+    from repro.models import build_model_for
+    model = build_model_for(ARCH, param_dtype="float32",
+                            compute_dtype="float32", remat="block")
+    cfg = _cfg(mem=MemConfig(hbm_budget_bytes=1024, auto_microbatch=True))
+    with pytest.raises(ValueError,
+                       match="no microbatch split fits") as ei:
+        pick_grad_accum(model, cfg, SHAPE)
+    msg = str(ei.value)
+    assert "Closest: grad_accum=" in msg
+    import re
+    assert re.search(r"\d+ B over budget", msg)
+
+
+# ---------------------------------------------------------------------------
+# spearman: hand-rolled rank correlation
+# ---------------------------------------------------------------------------
+
+def test_spearman_basic():
+    assert spearman([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+    assert spearman([1, 2, 3], [30, 20, 10]) == pytest.approx(-1.0)
+    assert spearman([1, 2], [5, 5]) is None          # constant vector
+    assert spearman([1], [2]) is None                # n < 2
+    # monotone in ranks regardless of scale
+    assert spearman([0.001, 5, 1e9], [1, 2, 3]) == pytest.approx(1.0)
+
+
+def test_spearman_ties_average_ranks():
+    # ties get average ranks; a tie against a strict ordering lowers |rho|
+    r = spearman([1, 1, 2], [1, 2, 3])
+    assert r is not None and 0 < r < 1

@@ -1,0 +1,120 @@
+"""sim/dataflow.py cost-model invariants.
+
+These functions are the launch autotuner's fitness backend
+(launch/autotune.py scores every candidate plan through them), so their
+basic shape must be locked before anything searches over them:
+
+* ``util(acc, g) <= 1`` — no dataflow exceeds the array's peak MACs;
+* ``gemm_cycles`` is monotone non-decreasing in each GEMM dimension;
+* ``pegrad_spill_bytes`` is exactly linear in batch;
+* ``dp_training_time`` is strictly above the non-DP baseline for the
+  same layers (privacy is never free);
+* ``traced_step_time`` composes per-GEMM times + bandwidth terms sanely;
+* ``layers_for_arch`` produces non-degenerate GEMM tables for every
+  registered preset family.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.sim.dataflow import (DIVA, DIVA_NOPPU, OS, OS_PPU, WS,
+                                dp_training_time, gemm_cycles, gemm_time,
+                                pegrad_spill_bytes, traced_step_time, util)
+from repro.sim.models import bert_base, layers_for_arch, lstm_small, vgg16
+
+ACCELS = (WS, OS, OS_PPU, DIVA_NOPPU, DIVA)
+GEMMS = [(128, 128, 128), (8, 4096, 1024), (1024, 8, 1024),
+         (1, 1, 1), (300, 77, 513)]
+
+
+@pytest.mark.parametrize("acc", ACCELS, ids=lambda a: a.name)
+@pytest.mark.parametrize("g", GEMMS)
+def test_util_at_most_one(acc, g):
+    assert util(acc, g) <= 1.0 + 1e-9
+
+
+@pytest.mark.parametrize("acc", ACCELS, ids=lambda a: a.name)
+@pytest.mark.parametrize("dim", [0, 1, 2])
+def test_gemm_cycles_monotone_in_each_dim(acc, dim):
+    base = [256, 256, 256]
+    prev = None
+    for v in (1, 64, 128, 256, 1024, 4096):
+        g = list(base)
+        g[dim] = v
+        c = gemm_cycles(acc, tuple(g))
+        if prev is not None:
+            assert c >= prev, (acc.name, dim, v)
+        prev = c
+
+
+def test_pegrad_spill_linear_in_batch():
+    w = 1234
+    b1 = pegrad_spill_bytes(1, w)
+    for batch in (2, 8, 64, 1024):
+        assert pegrad_spill_bytes(batch, w) == pytest.approx(batch * b1)
+
+
+@pytest.mark.parametrize("layers_fn", [bert_base, vgg16, lstm_small])
+@pytest.mark.parametrize("acc", ACCELS, ids=lambda a: a.name)
+def test_dp_strictly_above_sgd(layers_fn, acc):
+    layers = layers_fn()
+    sgd = dp_training_time(acc, layers, batch=8, algo="sgd").total
+    for algo in ("dpsgd", "dpsgd_r"):
+        dp = dp_training_time(acc, layers, batch=8, algo=algo).total
+        assert dp > sgd, (acc.name, algo)
+
+
+def test_dp_breakdown_nonnegative():
+    bd = dp_training_time(WS, bert_base(), batch=8, algo="dpsgd_r")
+    for f in ("forward", "wgrad_batch", "dgrad", "wgrad_example", "norm",
+              "postproc", "dram_bytes"):
+        assert getattr(bd, f) >= 0.0, f
+    assert bd.total > 0.0
+
+
+# ---------------------------------------------------------------------------
+# traced_step_time: the autotuner's primary fitness function
+# ---------------------------------------------------------------------------
+
+def test_traced_step_time_sums_gemm_times():
+    gemms = [(128, 256, 512, 2.0), (64, 64, 64, 1.0)]
+    ts = traced_step_time(WS, gemms)
+    expect = sum(mult * gemm_time(WS, (m, k, n))
+                 for m, k, n, mult in gemms)
+    assert ts.gemm == pytest.approx(expect)
+    assert ts.elementwise == 0.0 and ts.collective == 0.0
+    assert ts.total == pytest.approx(ts.gemm)
+
+
+def test_traced_step_time_divides_over_devices():
+    gemms = [(1024, 1024, 1024, 4.0)]
+    one = traced_step_time(WS, gemms, ew_flops=1e9)
+    four = traced_step_time(WS, gemms, ew_flops=1e9, n_devices=4)
+    assert four.gemm == pytest.approx(one.gemm / 4)
+    assert four.elementwise == pytest.approx(one.elementwise / 4)
+
+
+def test_traced_step_time_collective_term():
+    ts = traced_step_time(WS, [], coll_bytes=100e9, ici_bw=50e9)
+    assert ts.collective == pytest.approx(2.0)
+    assert ts.total == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# layers_for_arch: GEMM tables for the repo's own presets
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["phi3-mini-3.8b", "cnn-cifar10",
+                                  "vit-cifar10", "deepseek-moe-16b",
+                                  "mamba2-1.3b"])
+def test_layers_for_arch_nondegenerate(name):
+    from repro.configs import ARCHS, reduced
+    arch = reduced(ARCHS[name])
+    layers = layers_for_arch(arch, seq_len=32)
+    assert len(layers) >= arch.n_layers
+    for L in layers:
+        assert L.i > 0 and L.o > 0 and L.t > 0
+        assert L.weight_elems() > 0
+    # the table prices to a positive, DP-dominated step time
+    bd = dp_training_time(DIVA, layers, batch=4, algo="dpsgd_r")
+    assert bd.total > 0.0
