@@ -5,7 +5,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-dp test-sites test-mem test-kernels test-kernels-fast test-recipe test-serve test-multidevice test-tune bench-smoke bench-serve bench-kernels bench-dp bench-autotune dryrun-smoke
+.PHONY: test test-fast test-dp test-sites test-mem test-kernels test-kernels-fast test-recipe test-serve test-multidevice test-tune test-pipe bench-smoke bench-serve bench-kernels bench-dp bench-autotune dryrun-smoke
 
 # tier-1 verify: the gate for every change
 test:
@@ -77,6 +77,15 @@ test-fast:
 test-tune:
 	$(PY) -m pytest -x -q -m "not slow" \
 	    tests/test_autotune.py tests/test_dataflow.py
+
+# the pipeline + resume gate: pipelined-vs-sequential exactness (losses
+# and norm² side-channel bit-identical, updates at the reassociation pin,
+# all four algos under Poisson masks), the stage sharding rules, and the
+# sharded-checkpoint format with its kill-and-resume fault drill
+test-pipe:
+	$(PY) -m pytest -x -q -m "not slow" \
+	    tests/test_pipeline.py tests/test_checkpoint_sharded.py \
+	    tests/test_checkpoint_data.py
 
 # distributed semantics on 8 fake CPU host devices (shard_map batch-locality,
 # sharded-vs-single-device equivalence, pjit train step on a (2,4) mesh)

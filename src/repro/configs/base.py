@@ -496,6 +496,16 @@ class TrainConfig:
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
     grad_accum: int = 1
+    # pipeline parallelism over the scanned block stack: the reps layer
+    # groups are sliced into pp_stages contiguous stages driven by a
+    # microbatch-interleaved schedule (models/transformer.py).  pp_stages
+    # must divide the arch's rep count (validated at model build).
+    # pp_microbatches = 0 means "as many as stages" — the minimum that
+    # keeps every stage busy in steady state; more microbatches shrink
+    # both the pipeline bubble (S-1 of M+S-1 ticks) and the per-tick
+    # activation footprint (S·B/M rows resident vs B).
+    pp_stages: int = 1
+    pp_microbatches: int = 0
     compress_pod_grads: bool = False  # int8 + error-feedback on pod axis
     zero1: bool = True             # shard opt state over data axis
     dp: DPConfig = field(default_factory=DPConfig)
@@ -513,6 +523,12 @@ class TrainConfig:
             raise ValueError(
                 f"unknown remat policy {self.remat!r}; known policies: "
                 f"{sorted(REMAT_POLICIES)} (see FAMILY_REMAT_POLICIES)")
+        if self.pp_stages < 1:
+            raise ValueError(f"pp_stages must be >= 1, got {self.pp_stages}")
+        if self.pp_microbatches < 0:
+            raise ValueError(
+                f"pp_microbatches must be >= 0 (0 = one per stage), got "
+                f"{self.pp_microbatches}")
 
 
 # ---------------------------------------------------------------------------

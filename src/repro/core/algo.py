@@ -74,6 +74,19 @@ rule-after-backward — identity across strategies is pinned in
 tests/test_fused_norms.py.  ``"dpsgd"`` never consults the strategy (it
 materializes per-example grads by construction).
 
+Pipeline parallelism (``Model.pp_stages > 1``): the loss_fn the algos
+differentiate may internally run its block stack on a stage-sliced,
+microbatch-interleaved schedule (models/transformer.py
+``_blocks_pipelined``).  This is transparent here by construction: the
+(B,) ``acc`` side-channel rides the pipeline's shifting buffer with its
+microbatch, so each stage's norm² partials are deposited on the acc
+*cotangent* and summed across stage boundaries by the buffer-shift
+transpose — the full per-example norm² exists before any algo forms a
+clip factor, for materialize/gram/fused alike.  The only numerical
+difference is grad_accum-style reassociation of the summed weight
+gradients over microbatches (``stage_microbatches`` below owns the
+example-aligned split contract).
+
 loss_fn contract: ``loss_fn(params, batch, ctx) -> (per_example_losses, ctx)``
 with ``per_example_losses: (B,) float32``.
 """
@@ -145,6 +158,30 @@ def _expand_rows(c_ex: jax.Array, k: int) -> jax.Array:
     """(B,) per-example weights -> (B·K,) row weights carrying the 1/K
     view averaging (pass-2 seeds: Σ_b c_b · mean_k L_bk)."""
     return c_ex if k == 1 else jnp.repeat(c_ex, k) / k
+
+
+def stage_microbatches(n_examples: int, n_stages: int,
+                       requested: int = 0) -> int:
+    """Per-call microbatch count for the pipeline-parallel block stack
+    (models/transformer.py ``_blocks_pipelined``).
+
+    The pipeline's microbatch split must respect the same batch contracts
+    the algos rely on: a microbatch is a contiguous chunk of *examples*,
+    never of rows, so under augmult the K b-major/k-minor views of one
+    example always travel through the stages together and the (B,)
+    ``ctx.acc`` chunks stay aligned with the activation chunks.  M must
+    therefore divide the example count: the request (0 = one microbatch
+    per stage, the minimum that fills the pipeline) is clamped to the
+    largest divisor of ``n_examples``.  Under vmap-per-example ``dpsgd``
+    (and grad_accum chunks of one example) this degrades to M = 1 — a
+    stage-sequential schedule with identical numerics and no benefit,
+    which is why the autotuner charges pipelining per *chunk* examples,
+    not per global batch (launch/autotune.py)."""
+    want = max(1, requested or n_stages)
+    m = max(1, min(want, n_examples))
+    while n_examples % m:
+        m -= 1
+    return m
 
 
 def _metrics(losses, nsq, clip_norm, mask_rows, mask_ex):

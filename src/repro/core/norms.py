@@ -39,6 +39,16 @@ every rule as an all-zero ``gy`` row — and every formula below is a sum of
 products containing a ``gy`` factor, so its norm² is an *exact* zero
 (verified against the compacted batch in tests/test_dp_properties.py and
 tests/test_kernels.py).
+
+Cross-stage additivity (pipeline parallelism): every rule deposits a
+per-example *partial* — the norm² over the sites of one layer slice — by
+addition onto the (B,) accumulator cotangent, and ‖g_b‖² over the whole
+model is exactly the sum of per-site terms.  So when the block stack is
+stage-sliced (models/transformer.py ``_blocks_pipelined``) the partials
+each stage computes for microbatch b sum to the same total once the
+buffer-shift transpose has carried them back across stage boundaries —
+no rule here needs to know stages exist, and the stage split point can
+never change a norm² bit (verified per-stage in tests/test_pipeline.py).
 """
 from __future__ import annotations
 

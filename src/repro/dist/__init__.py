@@ -15,17 +15,20 @@ See docs/ARCHITECTURE.md for how this maps onto the DiVa paper.
 """
 from repro.dist import compress, runtime, sharding
 from repro.dist.compress import compress_grads, init_error_state
-from repro.dist.runtime import attn_local, batch_local, layout
+from repro.dist.runtime import (attn_local, batch_local, init_fingerprint,
+                                layout, verify_init_consistency)
 from repro.dist.sharding import (batch_axis_width, batch_pspec,
                                  batch_shardings, cache_shardings,
                                  mesh_from_config, param_shardings,
-                                 spec_for_param, state_shardings)
+                                 spec_for_param, stage_axis_width,
+                                 state_shardings)
 
 __all__ = [
     "compress", "runtime", "sharding",
     "compress_grads", "init_error_state",
     "attn_local", "batch_local", "layout",
+    "init_fingerprint", "verify_init_consistency",
     "batch_axis_width", "batch_pspec", "batch_shardings", "cache_shardings",
     "mesh_from_config", "param_shardings", "spec_for_param",
-    "state_shardings",
+    "stage_axis_width", "state_shardings",
 ]

@@ -114,6 +114,58 @@ def batch_local(fn: Callable, n_batch_args: int,
     return wrapped
 
 
+def init_fingerprint(params) -> int:
+    """Deterministic crc32 fingerprint of a param tree.
+
+    Reuses the process-stable crc32 path keying that seeds init
+    (models/transformer.py ``path_key``: crc32, never ``hash()``, which is
+    salted per process): every leaf contributes crc32 of its path chained
+    with its shape/dtype record, and — when the leaf's data is fully
+    addressable from this process (single-process, or replicated shards)
+    — the raw bytes.  Partially-addressable leaves (cross-process sharded)
+    contribute structure only: the bytes live on other hosts, and the
+    structural drift this check exists to catch (a host building a
+    different tree, shape, dtype or path set from the "same" config/seed)
+    is visible without them."""
+    import zlib
+
+    import numpy as np
+
+    total = 0
+    for path, leaf in sorted(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            key=lambda kv: str(kv[0])):
+        rec = f"{jax.tree_util.keystr(path)}:{tuple(leaf.shape)}:{leaf.dtype}"
+        c = zlib.crc32(rec.encode())
+        if not isinstance(leaf, jax.Array) or leaf.is_fully_addressable:
+            c = zlib.crc32(np.ascontiguousarray(np.asarray(leaf)).tobytes(), c)
+        total = zlib.crc32(c.to_bytes(4, "little"), total)
+    return total & 0xFFFFFFFF
+
+
+def verify_init_consistency(params, tag: str = "init") -> int:
+    """Multi-process init verification: every process fingerprints its view
+    of ``params`` and the fingerprints are allgathered and compared —
+    catching the classic multi-controller failure where one host inits
+    from a different seed/config and GSPMD silently mixes the two.
+    Single-process this is just the fingerprint (no collective).  Raises
+    ``RuntimeError`` naming the disagreeing processes."""
+    fp = init_fingerprint(params)
+    if jax.process_count() > 1:
+        import jax.numpy as jnp
+        from jax.experimental import multihost_utils
+        all_fp = multihost_utils.process_allgather(jnp.uint32(fp))
+        import numpy as np
+        vals = np.asarray(all_fp).reshape(-1)
+        if not (vals == vals[0]).all():
+            bad = {i: hex(int(v)) for i, v in enumerate(vals)}
+            raise RuntimeError(
+                f"{tag} fingerprint mismatch across processes: {bad} — "
+                f"hosts disagree on the initialized state (seed/config "
+                f"drift); refusing to train on silently mixed params")
+    return fp
+
+
 def attn_local(fn: Callable, n_kv: int) -> Callable:
     """Wrap a flash-attention call ``fn(q, k, v)`` (q: (B,T,KV,rep,hd),
     k/v: (B,S,KV,hd)) to run under shard_map: batch over the batch axes and,

@@ -33,9 +33,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # mesh axes that carry the batch dimension, outermost first
 BATCH_AXES = ("pod", "data")
 MODEL_AXIS = "model"
+# pipeline-parallel axis: carries the scan-stacked "layers" dim, so each
+# device group holds only its stage's contiguous layer slice — matching the
+# stage-major execution order of transformer._blocks_pipelined (stage s owns
+# layer groups [s·reps/S, (s+1)·reps/S))
+STAGE_AXIS = "stage"
 # logical-axis priority for the model mesh axis (first divisible match wins)
 MODEL_PRIORITY = ("expert", "heads", "kv", "mlp", "vocab")
-# logical axes never sharded (scan-stacked layer dim must stay whole)
+# logical axes never sharded over data/model (the scan-stacked layer dim is
+# only ever sharded over the dedicated stage axis)
 _NEVER_SHARD = ("layers",)
 
 
@@ -64,6 +70,13 @@ def batch_axis_width(mesh) -> int:
     return w
 
 
+def stage_axis_width(mesh) -> int:
+    """Device width of the pipeline ``stage`` axis (1 when absent).  The
+    launcher validates this divides the model's ``pp_stages`` layer slices
+    so each stage's params land wholly inside one stage device group."""
+    return _axis_size(mesh, STAGE_AXIS)
+
+
 def batch_pspec(mesh, global_batch: int) -> Optional[Tuple[str, ...]]:
     """Mesh axes the batch dim shards over: the ``BATCH_AXES`` subset (in
     order) with the largest device product that divides the batch — i.e.
@@ -88,11 +101,20 @@ def spec_for_param(axes: Sequence[Optional[str]], shape: Sequence[int],
     """PartitionSpec for one param from its logical axes + shape.
 
     One dim gets the ``model`` mesh axis, chosen by ``MODEL_PRIORITY`` with
-    divisibility fall-through; with ``fsdp`` the first remaining named dim
+    divisibility fall-through; a ``layers`` dim (the scan-stacked block
+    axis) is sharded over the ``stage`` axis when present and divisible —
+    pipeline parallelism: each stage device group materializes only its
+    contiguous layer slice; with ``fsdp`` the first remaining named dim
     divisible by the ``data`` axis is sharded over it.  Undivisible or
     unnamed dims stay replicated.
     """
     entries: list = [None] * len(shape)
+    if STAGE_AXIS in tuple(mesh.axis_names):
+        ssz = _axis_size(mesh, STAGE_AXIS)
+        for i, (ax, dim) in enumerate(zip(axes, shape)):
+            if ax == "layers" and dim % ssz == 0:
+                entries[i] = STAGE_AXIS
+                break
     if MODEL_AXIS in tuple(mesh.axis_names):
         msz = _axis_size(mesh, MODEL_AXIS)
         for logical in MODEL_PRIORITY:

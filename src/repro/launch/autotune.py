@@ -64,6 +64,7 @@ class LaunchPlan:
     use_kernels: bool = False
     mesh_shape: Tuple[int, ...] = (1, 1)     # (data, model) device grid
     compress_grads: bool = False
+    pp_stages: int = 1              # pipeline stages over the block axis
 
     @property
     def width(self) -> int:
@@ -89,6 +90,7 @@ class LaunchPlan:
             cfg,
             grad_accum=self.grad_accum,
             remat=self.remat,
+            pp_stages=self.pp_stages,
             compress_pod_grads=self.compress_grads,
             mesh=dataclasses.replace(cfg.mesh, shape=tuple(self.mesh_shape)),
             dp=dataclasses.replace(cfg.dp,
@@ -108,7 +110,8 @@ class LaunchPlan:
                    use_kernels=cfg.dp.use_kernels,
                    mesh_shape=tuple(mesh_shape if mesh_shape is not None
                                     else cfg.mesh.shape),
-                   compress_grads=cfg.compress_pod_grads)
+                   compress_grads=cfg.compress_pod_grads,
+                   pp_stages=cfg.pp_stages)
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -128,7 +131,7 @@ class PlanSpace:
     """
 
     DIM_NAMES = ("grad_accum", "microbatch", "remat", "norm_strategy",
-                 "use_kernels", "mesh_shape", "compress_grads")
+                 "use_kernels", "mesh_shape", "compress_grads", "pp_stages")
 
     def __init__(self, dims: Sequence[Tuple], default: LaunchPlan):
         self.dims = [tuple(d) for d in dims]
@@ -155,9 +158,20 @@ class PlanSpace:
         meshes = [tuple(m) for m in (mesh_shapes or [cfg.mesh.shape])]
         compress = [False, True] if any(
             _prod(m) > 1 for m in meshes) else [False]
+        # pipeline stages: divisors of the transformer's repeated-block
+        # count (capped — deep stacks would otherwise explode the space);
+        # image families have no block axis to slice, so the dim collapses
+        if arch.family not in ("cnn", "vit"):
+            from repro.models.transformer import group_layers
+            _, _, reps = group_layers(arch)
+            stages = [s for s in _divisors(max(reps, 1)) if s <= 8]
+        else:
+            stages = [1]
+        if cfg.pp_stages not in stages:
+            stages = sorted(set(stages) | {cfg.pp_stages})
         default = LaunchPlan.from_config(cfg, mesh_shape=meshes[0])
         return cls([accums, micro, remats, strategies, kernels, meshes,
-                    compress], default)
+                    compress, stages], default)
 
     @property
     def size(self) -> int:
@@ -236,13 +250,16 @@ class PlanScorer:
         self._models: Dict[str, object] = {}
 
     # -- model / trace machinery ------------------------------------------
-    def model_for(self, remat: str):
-        if remat not in self._models:
+    def model_for(self, remat: str, pp_stages: int = 1):
+        key = (remat, pp_stages)
+        if key not in self._models:
             from repro.models import build_model_for
-            self._models[remat] = build_model_for(
+            self._models[key] = build_model_for(
                 self.arch, param_dtype=self.base_cfg.param_dtype,
-                compute_dtype=self.base_cfg.compute_dtype, remat=remat)
-        return self._models[remat]
+                compute_dtype=self.base_cfg.compute_dtype, remat=remat,
+                pp_stages=pp_stages,
+                pp_microbatches=self.base_cfg.pp_microbatches)
+        return self._models[key]
 
     def _expected(self) -> Optional[float]:
         return (float(self.shape.global_batch)
@@ -259,7 +276,7 @@ class PlanScorer:
         shape deliberately excluded from the key — the trace is global."""
         key = (plan.grad_accum, plan.microbatch, plan.remat,
                plan.norm_strategy, plan.use_kernels, plan.compress_grads,
-               capacity)
+               plan.pp_stages, capacity)
         if key in self._traces:
             self.cache_hits += 1
             return self._traces[key]
@@ -269,7 +286,7 @@ class PlanScorer:
         from repro.train.trainer import make_train_step
         self.traces += 1
         cfg_p = plan.apply(self.base_cfg)
-        model = self.model_for(plan.remat)
+        model = self.model_for(plan.remat, plan.pp_stages)
         batch_abs = abstract_batch(self.arch, capacity, self.shape.seq_len,
                                    augmult=cfg_p.dp.augmult)
         est = estimate_train_memory(model, cfg_p, batch_abs,
@@ -300,6 +317,15 @@ class PlanScorer:
             # poisson re-rounds its padded capacity to the lcm instead
             return (f"chunk={chunk} not divisible by batch-axis "
                     f"width={plan.width}")
+        if plan.pp_stages > 1:
+            if family in ("cnn", "vit"):
+                return (f"pp_stages={plan.pp_stages} unsupported for "
+                        f"image family {family!r}")
+            from repro.models.transformer import group_layers
+            _, _, reps = group_layers(self.arch)
+            if reps == 0 or reps % plan.pp_stages:
+                return (f"pp_stages={plan.pp_stages} does not divide the "
+                        f"stacked block count reps={reps}")
         return ""
 
     # -- the fitness function ---------------------------------------------
@@ -324,7 +350,8 @@ class PlanScorer:
             self._scores[plan] = s
             return s
         from repro.launch.memory import per_device_peak_bytes
-        peak = per_device_peak_bytes(est, plan.width)
+        peak = per_device_peak_bytes(est, plan.width,
+                                     stages=plan.pp_stages)
         seconds, breakdown = self._predict_seconds(plan, est, costs)
         budget = self.base_cfg.mem.hbm_budget_bytes
         if budget > 0 and peak > budget:
@@ -503,7 +530,7 @@ def measure_plan(scorer: PlanScorer, plan: LaunchPlan,
     from repro.train.state import TrainState
     from repro.train.trainer import make_opt_init, make_train_step
     cfg_p = plan.apply(scorer.base_cfg)
-    model = scorer.model_for(plan.remat)
+    model = scorer.model_for(plan.remat, plan.pp_stages)
     capacity = scorer._capacity(plan)
     batch = _concrete_batch(scorer.arch, capacity, scorer.shape.seq_len,
                             cfg_p.dp.augmult)

@@ -246,17 +246,30 @@ def abstract_like(tree):
                         tree)
 
 
-def per_device_peak_bytes(est: dict, shards: int) -> int:
+def per_device_peak_bytes(est: dict, shards: int, stages: int = 1) -> int:
     """Per-device peak from a global ``estimate_train_memory`` dict on a
     ``shards``-wide batch axis: parameters and optimizer state are assumed
     replicated (conservative — ZeRO-1/FSDP only shrink them), everything
     else (batch, activations, per-example channel) shards with the batch.
-    ``shards == 1`` returns the global peak unchanged."""
-    if shards <= 1:
+    ``shards == 1`` returns the global peak unchanged.
+
+    ``stages``: device width of the mesh's pipeline ``stage`` axis.  The
+    scan-stacked block params (and their optimizer moments) shard their
+    leading ``layers`` dim over it (dist/sharding.py), so the
+    block-attributable fraction of the resident state
+    (``est["block_params_fraction"]``, from ``estimate_train_memory``)
+    divides by ``stages``; prelude/embed/head stay replicated.  The
+    *activation* side of pipelining — S·B/M resident rows per tick instead
+    of B — is already in ``est["peak_bytes"]``, because the jaxpr walk
+    traces the actual stage-sliced step."""
+    if shards <= 1 and stages <= 1:
         return int(est["peak_bytes"])
     resident = est.get("params_bytes", 0) + est.get("opt_state_bytes", 0)
     sharded = max(est["peak_bytes"] - resident, 0)
-    return int(resident + -(-sharded // shards))
+    if stages > 1:
+        bf = float(est.get("block_params_fraction", 0.0))
+        resident = resident * (1.0 - bf + bf / stages)
+    return int(resident + -(-sharded // max(1, shards)))
 
 
 def abstract_batch(arch, batch_size: int, seq_len: int,
@@ -353,6 +366,11 @@ def estimate_train_memory(model, train_cfg, batch_abs,
     params_bytes = _tree_bytes(params_abs)
     param_elems = sum(int(np.prod(l.shape))
                       for l in jax.tree.leaves(params_abs))
+    # fraction of param bytes living in the scan-stacked "blocks" subtree —
+    # the part a pipeline stage axis divides across device groups
+    block_bytes = (_tree_bytes(params_abs["blocks"])
+                   if isinstance(params_abs, dict)
+                   and params_abs.get("blocks") is not None else 0)
     B = jax.tree.leaves(batch_abs)[0].shape[0]
     out = est.as_dict()
     out.update({
@@ -362,10 +380,13 @@ def estimate_train_memory(model, train_cfg, batch_abs,
         "grad_bytes": 4 * param_elems,          # f32 gradient tree
         "per_example_grad_bytes": per_example_grad_bytes(
             train_cfg.dp, B, train_cfg.grad_accum, param_elems),
+        "block_params_fraction": block_bytes / max(params_bytes, 1),
         "remat": train_cfg.remat,
         "algo": train_cfg.dp.algo if train_cfg.dp.enabled else "sgd",
         "grad_accum": int(train_cfg.grad_accum),
         "batch_size": int(B),
+        "pp_stages": int(getattr(model, "pp_stages", 1)),
+        "pp_microbatches": int(getattr(model, "pp_microbatches", 0)),
     })
     return out
 

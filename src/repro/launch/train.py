@@ -28,7 +28,8 @@ from repro.configs import (SHAPES, apply_overrides, get_arch, parse_set_args,
                            reduced)
 from repro.configs.base import ShapeConfig, TrainConfig
 from repro.dist import batch_shardings, runtime, state_shardings
-from repro.dist.sharding import batch_axis_width, batch_pspec
+from repro.dist.sharding import (batch_axis_width, batch_pspec,
+                                 stage_axis_width)
 from repro.launch.mesh import make_host_mesh, make_mesh
 from repro.models import build_model_for
 from repro.train import Trainer
@@ -101,7 +102,9 @@ def main() -> None:
         cfg = plan.apply(cfg)
 
     model = build_model_for(arch, param_dtype=cfg.param_dtype,
-                            compute_dtype=cfg.compute_dtype, remat=cfg.remat)
+                            compute_dtype=cfg.compute_dtype, remat=cfg.remat,
+                            pp_stages=cfg.pp_stages,
+                            pp_microbatches=cfg.pp_microbatches)
 
     # the trainer owns the physical per-step row count: == global_batch for
     # fixed sampling; under dp.sampling="poisson" a padded step-invariant
@@ -125,13 +128,23 @@ def main() -> None:
             return jax.tree.map(lambda a, s: jax.device_put(a, s), b, sh)
 
         trainer.shard_batch = shard_batch
-        state = trainer.restore_or_init(jax.random.PRNGKey(cfg.seed))
-        # shard the state onto the mesh (works for fresh init and for
-        # checkpoints restored from a different mesh — elastic restart)
-        sh = state_shardings(mesh, model, jax.eval_shape(lambda: state),
-                             zero1=cfg.zero1)
+        # compute the target state shardings *before* restore so a sharded
+        # checkpoint is assembled straight onto its destination devices
+        # (no single-host funnel) — works for fresh init and for
+        # checkpoints restored from a different mesh (elastic restart)
+        state_abs = trainer.abstract_state()
+        sh = state_shardings(mesh, model, state_abs, zero1=cfg.zero1)
+        fresh = trainer.ckpt.latest_step() is None
+        state = trainer.restore_or_init(jax.random.PRNGKey(cfg.seed),
+                                        shardings=sh)
         state = jax.tree.map(
             lambda x, s: jax.device_put(x, s), state, sh)
+        if fresh:
+            # multi-process init verification: every host fingerprints its
+            # view of the initialized params; mismatch = seed/config drift
+            fp = runtime.verify_init_consistency(state.params)
+            print(f"[train] init fingerprint {fp:#010x} "
+                  f"({jax.process_count()} process(es) agree)")
         # estimated-vs-compiled peak, logged every launch so estimator
         # drift (and the remat policy's effect) is visible in production
         rep = trainer.memory_report(
@@ -147,7 +160,8 @@ def main() -> None:
                  f"(estimate/xla {rep['estimate_vs_xla']:.2f})"
                  if xla else ""))
         from repro.launch.memory import per_device_peak_bytes
-        per_dev = per_device_peak_bytes(rep, batch_axis_width(mesh))
+        per_dev = per_device_peak_bytes(rep, batch_axis_width(mesh),
+                                        stages=stage_axis_width(mesh))
         if cfg.mem.hbm_budget_bytes and per_dev > cfg.mem.hbm_budget_bytes:
             print(f"[train] WARNING estimated per-device peak "
                   f"{per_dev / 1e9:.3f} GB exceeds mem.hbm_budget_bytes="

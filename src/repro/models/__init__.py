@@ -7,11 +7,23 @@ def build_model_for(arch, **kwargs):
     """Family-dispatching model factory: transformer families go through
     ``build_model``; ``family="cnn"`` builds the registry-backed CNN
     (models/cnn.py), ``family="vit"`` the registry-backed ViT
-    (models/vit.py).  Launchers use this so new families need no edits."""
-    if arch.family == "cnn":
-        from repro.models.cnn import build_cnn
-        return build_cnn(arch, **kwargs)
-    if arch.family == "vit":
+    (models/vit.py).  Launchers use this so new families need no edits.
+
+    Pipeline-parallel knobs (``pp_stages``/``pp_microbatches``) only exist
+    on the scan-stacked transformer stack; they are stripped here for the
+    image families when left at their defaults, and rejected loudly when
+    set — image models have no repeated-block axis to slice into stages."""
+    if arch.family in ("cnn", "vit"):
+        pp = int(kwargs.pop("pp_stages", 1) or 1)
+        kwargs.pop("pp_microbatches", None)
+        if pp > 1:
+            raise ValueError(
+                f"pp_stages={pp} is only supported for transformer "
+                f"families (scan-stacked blocks); arch {arch.name!r} is "
+                f"family {arch.family!r}")
+        if arch.family == "cnn":
+            from repro.models.cnn import build_cnn
+            return build_cnn(arch, **kwargs)
         from repro.models.vit import build_vit
         return build_vit(arch, **kwargs)
     return build_model(arch, **kwargs)

@@ -122,6 +122,20 @@ def inner_remat(remat: str) -> bool:
     return remat != "none"
 
 
+def pipeline_shift(buf, inject):
+    """One clock tick of the shifted-buffer pipeline schedule: stage s
+    consumes stage s-1's output from the previous tick, stage 0 consumes
+    the tick's injected microbatch, and the last stage's previous output
+    falls off the end (collected by the caller *before* the shift is
+    overwritten — see transformer._blocks_pipelined).  Works on any pytree
+    of stage-major (S, ...) buffers.  The transpose of this concat/slice
+    pair is what carries per-example cotangents — the DP norm² partials —
+    backward across stage boundaries; under a stage-sharded mesh it lowers
+    to the cross-stage permute collective."""
+    return jax.tree.map(
+        lambda b, i: jnp.concatenate([i[None], b[:-1]], axis=0), buf, inject)
+
+
 # ---------------------------------------------------------------------------
 # Attention
 # ---------------------------------------------------------------------------

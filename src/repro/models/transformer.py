@@ -264,10 +264,27 @@ class Model:
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
     remat: str = "block"           # none | block | sites (validated below)
+    # pipeline parallelism: slice the scanned block stack into pp_stages
+    # contiguous stages run on a microbatch-interleaved schedule
+    # (_blocks_pipelined).  Training/prefill-less paths only; decode and
+    # want_cache forwards always take the sequential scan.
+    pp_stages: int = 1
+    pp_microbatches: int = 0       # 0 = one microbatch per stage
 
     def __post_init__(self):
         from repro.configs.base import validate_remat
         validate_remat(self.arch.family, self.remat)
+        if self.pp_stages > 1:
+            pre, period, reps = group_layers(self.arch)
+            if reps == 0 or reps % self.pp_stages != 0:
+                raise ValueError(
+                    f"pp_stages={self.pp_stages} must divide the scanned "
+                    f"block count (arch {self.arch.name!r} groups as "
+                    f"{reps} x {period}-layer blocks + {pre} prelude); "
+                    f"pick a divisor of {reps}")
+        if self.pp_microbatches < 0:
+            raise ValueError(
+                f"pp_microbatches must be >= 0, got {self.pp_microbatches}")
 
     # -- params ----------------------------------------------------------
     def abstract_params(self):
@@ -305,6 +322,12 @@ class Model:
         blocks_cache = None
         if reps > 0:
             sigs = [layer_sig(arch, pre + j) for j in range(period)]
+            if self.pp_stages > 1 and not want_cache:
+                x, acc, aux_total = self._blocks_pipelined(
+                    params["blocks"], sigs, x, ctx, aux_total, pos)
+                ctx = dc_replace(ctx, acc=acc)
+                return x, ctx, aux_total, {"prelude": pre_caches,
+                                           "blocks": None}
             ctx_template = ctx
 
             def block_fn(carry, bp):
@@ -327,6 +350,100 @@ class Model:
             ctx = dc_replace(ctx, acc=acc)
 
         return x, ctx, aux_total, {"prelude": pre_caches, "blocks": blocks_cache}
+
+    def _blocks_pipelined(self, blocks_params, sigs, x, ctx: DPContext,
+                          aux_total, pos):
+        """Stage-sliced, microbatch-interleaved execution of the scanned
+        block stack (GSPMD shifted-buffer pipelining).
+
+        The (reps, ...) block params are reshaped stage-major to
+        (S, reps/S, ...) — the contiguous layer slices dist/sharding.py
+        places on the ``stage`` mesh axis — and the batch is split into M
+        example-aligned microbatches.  The schedule runs M + S - 1 clock
+        ticks over a stage-major activation buffer: each tick shifts the
+        buffer by one stage (``layers.pipeline_shift``: stage 0 ingests the
+        next microbatch, the last stage's previous output is collected),
+        then runs all S stage bodies in parallel via ``vmap`` over the
+        stage dim.  Warm-up/drain ticks process zero-filled slots whose
+        outputs are discarded (the S-1-tick pipeline bubble).
+
+        DP contract: the per-example norm² accumulator ``ctx.acc`` (and the
+        per-row MoE aux) rides the buffer *with its microbatch*, so in the
+        backward sweep the acc **cotangent** — where every site deposits its
+        norm² partial — flows back through the transpose of the stage
+        shifts, summing each stage's partials into one (B,) total before
+        the clip factor is formed.  Under a stage-sharded mesh that
+        transpose lowers to the cross-stage collective the batch-axis psum
+        layout cannot express.  Every batch-dim op in the stack is
+        per-example (attention, norms, even the MoE router's per-row
+        capacity ranking), so per-example losses and norms² are
+        bit-identical to the sequential scan; summed weight gradients
+        differ only in microbatch summation order (grad_accum-style
+        reassociation, pinned by tests/test_pipeline.py).
+
+        Returns (x, acc, aux_total) — no caches (decode/prefill paths take
+        the sequential scan).
+        """
+        arch = self.arch
+        S = self.pp_stages
+        reps = jax.tree.leaves(blocks_params)[0].shape[0]
+        rows = x.shape[0]
+        n_ex = rows if ctx.acc is None else ctx.acc.shape[0]
+        from repro.core.algo import stage_microbatches
+        M = stage_microbatches(n_ex, S, self.pp_microbatches)
+        mb_rows = rows // M
+
+        sp = jax.tree.map(
+            lambda a: a.reshape((S, reps // S) + a.shape[1:]), blocks_params)
+        ctx_template = ctx
+
+        def stage_fn(bp_stage, xx, acc, aux_t, pp):
+            def block_fn(carry, bp):
+                xx, acc, aux_t = carry
+                c_l = dc_replace(ctx_template, acc=acc)
+                for j in range(len(sigs)):
+                    xx, c_l, aux, _ = apply_layer(sigs[j], bp[j], xx, c_l,
+                                                  arch, pp, want_cache=False,
+                                                  remat=self.remat)
+                    if aux is not None:
+                        aux_t = aux_t + aux
+                return (xx, c_l.acc, aux_t), None
+            fn = L.remat_wrap(block_fn, self.remat)
+            (xx, acc, aux_t), _ = jax.lax.scan(fn, (xx, acc, aux_t), bp_stage)
+            return xx, acc, aux_t
+
+        vstage = jax.vmap(stage_fn, in_axes=(0, 0, 0, 0, 0))
+
+        def chunk(a, n):
+            return a.reshape((M, n) + a.shape[1:])
+
+        mb = (chunk(x, mb_rows),
+              None if ctx.acc is None else chunk(ctx.acc, n_ex // M),
+              chunk(aux_total, mb_rows),
+              chunk(pos, mb_rows))
+        # S-1 zero microbatches drain the pipeline; their outputs are
+        # dropped below, and zero activations are benign through every
+        # layer kind (rmsnorm(0) = 0, attention/SSM/MoE of zeros = zeros)
+        xs = jax.tree.map(
+            lambda a: jnp.concatenate(
+                [a, jnp.zeros((S - 1,) + a.shape[1:], a.dtype)], 0), mb)
+        buf0 = jax.tree.map(
+            lambda a: jnp.zeros((S,) + a.shape[1:], a.dtype), mb)
+
+        def tick(buf, inject):
+            buf = L.pipeline_shift(buf, inject)
+            xb, ab, auxb, pb = buf
+            xb, ab, auxb = vstage(sp, xb, ab, auxb, pb)
+            out = jax.tree.map(lambda b: b[-1], (xb, ab, auxb))
+            return (xb, ab, auxb, pb), out
+
+        _, ys = jax.lax.scan(tick, buf0, xs)
+        # tick t's last-stage output is microbatch t-(S-1): drop the bubble
+        x_out, acc_out, aux_out = jax.tree.map(lambda a: a[S - 1:], ys)
+        x = x_out.reshape((rows,) + x_out.shape[2:])
+        acc = None if acc_out is None else acc_out.reshape((n_ex,))
+        aux_total = aux_out.reshape((rows,))
+        return x, acc, aux_total
 
     def _head(self, params, x, ctx: DPContext):
         x, ctx = L.rmsnorm(x, params["final_norm"], ctx, self.arch.norm_eps)
@@ -531,5 +648,7 @@ def per_example_xent(logits, labels, vocab: int):
 
 
 def build_model(arch: ArchConfig, param_dtype: str = "bfloat16",
-                compute_dtype: str = "bfloat16", remat: str = "block") -> Model:
-    return Model(arch, param_dtype, compute_dtype, remat)
+                compute_dtype: str = "bfloat16", remat: str = "block",
+                pp_stages: int = 1, pp_microbatches: int = 0) -> Model:
+    return Model(arch, param_dtype, compute_dtype, remat,
+                 pp_stages, pp_microbatches)

@@ -1,12 +1,32 @@
 """Checkpointing: sharded-on-disk, atomic, async, keep-last-k, and
 reshard-on-restore (elastic restarts onto a different mesh / device count).
 
-Layout:  <dir>/step_<k>/manifest.json + <leaf index>.npy per tree leaf.
+Layout (``format: "sharded-v1"``)::
+
+    <dir>/step_<k>/manifest.json
+    <dir>/step_<k>/<leaf>.<shard>.npy      one file per unique device shard
+
+Each tree leaf is written as one file **per unique shard of its save
+sharding** (``jax.Array.addressable_shards``, replica 0 only), so a
+398B-parameter state is host-copied and written piecewise — it never
+funnels through a single whole-array ``np.asarray``.  The manifest records
+every shard's global index bounds; ``restore`` reassembles arbitrary
+slices from them, so the on-disk format is mesh-agnostic — the elastic
+piece: a 512-chip run can resume on 256 chips (or a different stage/data
+split) unchanged.  With ``shardings`` given, restore builds each leaf via
+``jax.make_array_from_callback`` so every device reads only the bytes of
+its own shard (files are ``mmap``-ed, not bulk-loaded).
+
 Writes go to <dir>/.tmp_step_<k> and are atomically ``os.replace``d, so a
-preemption mid-save never corrupts the latest checkpoint.  Restore loads
-host arrays and ``jax.device_put``s them with *whatever shardings the new
-mesh dictates* — the on-disk format is mesh-agnostic, which is the elastic
-piece: a 512-chip run can resume on 256 chips unchanged.
+preemption mid-save never corrupts the latest checkpoint; orphaned tmp
+dirs from interrupted saves are swept by the next save's ``_gc``.  Disk
+I/O runs on a background thread; a write failure (ENOSPC, ...) is captured
+and re-raised from the next ``wait()``/``save()`` instead of being lost
+with the daemon thread.
+
+Multi-process: every process writes the shards it owns (replica-0
+addressable shards) into the shared tmp dir; process 0 writes the manifest
+and performs the atomic rename after a cross-process barrier.
 """
 from __future__ import annotations
 
@@ -15,15 +35,99 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Optional
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+FORMAT = "sharded-v1"
 
-def _leaf_paths(tree) -> list:
-    leaves, _ = jax.tree.flatten(tree)
-    return leaves
+
+class CheckpointError(RuntimeError):
+    """A checkpoint write or restore failed (possibly asynchronously)."""
+
+
+def _bounds(index, shape) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Normalize a shard index (tuple of slices) to (starts, stops)."""
+    starts, stops = [], []
+    for sl, dim in zip(index, shape):
+        s, e, step = sl.indices(dim)
+        assert step == 1, f"strided shard index unsupported: {sl}"
+        starts.append(int(s))
+        stops.append(int(e))
+    return tuple(starts), tuple(stops)
+
+
+def _shard_plan(leaf) -> Tuple[Tuple[int, ...], str, List[dict]]:
+    """(global_shape, dtype_str, shard records) for one tree leaf.
+
+    Records cover the *global* array exactly once and are ordered
+    deterministically (sorted by index bounds) so every process of a
+    multi-controller fleet derives the same shard -> file-name table; the
+    host copy (``"data"``) is present only for shards this process owns
+    (replica-0 addressable), and is made synchronously so the caller may
+    mutate the array once ``save`` returns.
+    """
+    if isinstance(leaf, jax.Array):
+        shape = tuple(leaf.shape)
+        owned = {}
+        for s in leaf.addressable_shards:
+            if s.replica_id != 0:
+                continue
+            owned[_bounds(s.index, shape)] = np.asarray(s.data)
+        table = {_bounds(idx, shape): None
+                 for idx in leaf.sharding.devices_indices_map(shape).values()}
+        recs = [{"start": list(k[0]), "stop": list(k[1]),
+                 "data": owned.get(k)} for k in sorted(table)]
+        return shape, str(leaf.dtype), recs
+    h = np.asarray(leaf)
+    return (tuple(h.shape), str(h.dtype),
+            [{"start": [0] * h.ndim, "stop": list(h.shape), "data": h}])
+
+
+class _ShardReader:
+    """Assemble arbitrary slices of one leaf from its on-disk shard files.
+
+    Files are opened ``mmap_mode="r"`` and lazily, so restoring onto a
+    sharded mesh reads only the byte ranges the requesting devices need.
+    """
+
+    def __init__(self, directory: str, rec: dict):
+        self.dir = directory
+        self.rec = rec
+        self._files: dict = {}
+
+    def _data(self, fname: str) -> np.ndarray:
+        if fname not in self._files:
+            path = os.path.join(self.dir, fname)
+            if not os.path.exists(path):
+                raise CheckpointError(
+                    f"checkpoint shard file missing: {path} (incomplete "
+                    f"multi-process save?)")
+            self._files[fname] = np.load(path, mmap_mode="r")
+        return self._files[fname]
+
+    def read(self, index, want_dtype) -> np.ndarray:
+        shape = tuple(self.rec["shape"])
+        req = [sl.indices(dim)[:2] for sl, dim in zip(index, shape)]
+        out = None
+        for sm in self.rec["shards"]:
+            st, sp = sm["start"], sm["stop"]
+            lo = [max(a, s) for (a, _), s in zip(req, st)]
+            hi = [min(b, e) for (_, b), e in zip(req, sp)]
+            if any(l >= h for l, h in zip(lo, hi)):
+                continue
+            data = self._data(sm["file"])
+            if out is None:
+                out = np.empty([e - s for s, e in req], dtype=data.dtype)
+            src = tuple(slice(l - s, h - s) for l, h, s in zip(lo, hi, st))
+            dst = tuple(slice(l - a, h - a)
+                        for l, h, (a, _) in zip(lo, hi, req))
+            out[dst] = data[src]
+        if out is None:   # zero-size request
+            stored = self._data(self.rec["shards"][0]["file"]).dtype
+            out = np.empty([e - s for s, e in req], dtype=stored)
+        return _coerce_dtype(out, want_dtype)
 
 
 class CheckpointManager:
@@ -32,48 +136,87 @@ class CheckpointManager:
         self.keep = keep
         self.use_async = use_async
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[Tuple[int, BaseException]] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save -------------------------------------------------------------
     def save(self, state, step: int, extra: Optional[dict] = None) -> None:
-        self.wait()
-        # materialize on host *synchronously* (cheap copy; the disk I/O is
-        # what we push to the background thread)
+        self.wait()   # serializes writes AND re-raises a pending failure
         leaves, treedef = jax.tree.flatten(state)
-        host_leaves = [np.asarray(l) for l in leaves]
+        payload: List[Tuple[str, np.ndarray]] = []
+        leaf_recs = []
+        for i, leaf in enumerate(leaves):
+            shape, dtype, recs = _shard_plan(leaf)
+            shards = []
+            for k, r in enumerate(recs):
+                fname = f"{i}.{k}.npy"
+                shards.append({"file": fname, "start": r["start"],
+                               "stop": r["stop"]})
+                if r["data"] is not None:
+                    payload.append((fname, r["data"]))
+            leaf_recs.append({"shape": list(shape), "dtype": dtype,
+                              "shards": shards})
+        manifest = {"format": FORMAT, "step": step, "n_leaves": len(leaves),
+                    "time": time.time(), "leaves": leaf_recs, **(extra or {})}
         if self.use_async:
             self._thread = threading.Thread(
-                target=self._write, args=(host_leaves, step, extra or {}),
+                target=self._write_guarded, args=(payload, manifest, step),
                 daemon=True)
             self._thread.start()
         else:
-            self._write(host_leaves, step, extra or {})
+            self._write_guarded(payload, manifest, step)
+            self.wait()
 
-    def _write(self, host_leaves, step: int, extra: dict) -> None:
+    def _write_guarded(self, payload, manifest, step: int) -> None:
+        """_write with the exception captured: a daemon thread's traceback
+        is otherwise lost and ``wait()`` would report success for a
+        checkpoint that never hit the disk (the ENOSPC failure mode)."""
+        try:
+            self._write(payload, manifest, step)
+        except BaseException as e:    # noqa: BLE001 — re-raised from wait()
+            self._error = (step, e)
+
+    def _write(self, payload, manifest, step: int) -> None:
         tmp = os.path.join(self.dir, f".tmp_step_{step}")
         final = os.path.join(self.dir, f"step_{step}")
-        shutil.rmtree(tmp, ignore_errors=True)
-        os.makedirs(tmp)
-        manifest = {"step": step, "n_leaves": len(host_leaves),
-                    "time": time.time(), **extra}
-        for i, leaf in enumerate(host_leaves):
-            np.save(os.path.join(tmp, f"{i}.npy"), leaf)
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        shutil.rmtree(final, ignore_errors=True)
-        os.replace(tmp, final)
-        self._gc()
+        if _pid() == 0:
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+        _sync(f"ckpt_begin_{step}")
+        for fname, arr in payload:
+            np.save(os.path.join(tmp, fname), arr)
+        _sync(f"ckpt_end_{step}")
+        if _pid() == 0:
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.replace(tmp, final)
+            self._gc()
 
     def wait(self) -> None:
+        """Block until the in-flight async write (if any) finishes; raise
+        if it — or a previous one — failed."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            (step, err), self._error = self._error, None
+            raise CheckpointError(
+                f"async checkpoint write for step {step} failed; the "
+                f"checkpoint was NOT saved") from err
 
     def _gc(self) -> None:
         steps = sorted(self.steps())
         for s in steps[:-self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
                           ignore_errors=True)
+        # sweep orphaned tmp dirs: an interrupted save leaves .tmp_step_*
+        # behind forever (it is only rewritten on a re-save of the *same*
+        # step); our own tmp was already renamed, so anything left is dead
+        for name in os.listdir(self.dir):
+            if name.startswith(".tmp_step_"):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # -- restore ----------------------------------------------------------
     def steps(self) -> list:
@@ -92,25 +235,61 @@ class CheckpointManager:
                 shardings=None) -> Any:
         """Restore into the structure of ``like`` (a pytree of arrays or
         ShapeDtypeStructs).  ``shardings``: optional matching tree of
-        shardings for the *current* mesh (reshard-on-restore)."""
+        shardings for the *current* mesh — with it, every leaf is built by
+        ``jax.make_array_from_callback`` so each device reads exactly its
+        shard (reshard-on-restore without a host-RAM copy of the full
+        state); without it, leaves are assembled on host and
+        ``device_put`` to the default device."""
         self.wait()
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
         leaves, treedef = jax.tree.flatten(like)
-        host = [np.load(os.path.join(d, f"{i}.npy"))
-                for i in range(len(leaves))]
-        for h, l in zip(host, leaves):
-            assert tuple(h.shape) == tuple(l.shape), (h.shape, l.shape)
-        host = [_coerce_dtype(h, l.dtype) for h, l in zip(host, leaves)]
-        if shardings is not None:
-            sh_leaves = treedef.flatten_up_to(shardings)
-            dev = [jax.device_put(h, s) for h, s in zip(host, sh_leaves)]
-        else:
-            dev = [jax.device_put(h) for h in host]
-        return jax.tree.unflatten(treedef, dev)
+        n_disk = int(manifest["n_leaves"])
+        if n_disk != len(leaves):
+            raise CheckpointError(
+                f"checkpoint structure drift: {d} holds {n_disk} leaves but "
+                f"the target tree has {len(leaves)} — the train-state "
+                f"structure changed since this checkpoint was written (e.g. "
+                f"an optimizer-state rider was added or removed); restore "
+                f"with the writing config or discard the checkpoint")
+        sh_leaves = (treedef.flatten_up_to(shardings)
+                     if shardings is not None else [None] * len(leaves))
+        out = []
+        for i, (leaf, rec, sh) in enumerate(
+                zip(leaves, manifest["leaves"], sh_leaves)):
+            shape = tuple(rec["shape"])
+            if shape != tuple(leaf.shape):
+                raise CheckpointError(
+                    f"checkpoint leaf {i}: on-disk shape {shape} != target "
+                    f"shape {tuple(leaf.shape)} (dtype on disk: "
+                    f"{rec['dtype']})")
+            reader = _ShardReader(d, rec)
+            if sh is not None:
+                arr = jax.make_array_from_callback(
+                    shape, sh,
+                    lambda idx, r=reader, dt=leaf.dtype: r.read(idx, dt))
+            else:
+                full = (slice(None),) * len(shape)
+                arr = jax.device_put(reader.read(full, leaf.dtype))
+            out.append(arr)
+        return jax.tree.unflatten(treedef, out)
+
+
+def _pid() -> int:
+    return jax.process_index()
+
+
+def _sync(tag: str) -> None:
+    """Cross-process barrier (no-op single-process): all shard files must
+    exist before process 0 writes the manifest and renames."""
+    if jax.process_count() > 1:
+        from jax.experimental import multihost_utils
+        multihost_utils.sync_global_devices(tag)
 
 
 def _coerce_dtype(h: np.ndarray, dtype) -> np.ndarray:

@@ -297,10 +297,22 @@ class Trainer:
         init = make_opt_init(self.cfg, self.opt)
         return TrainState.create(params, init(params))
 
-    def restore_or_init(self, key) -> TrainState:
+    def abstract_state(self) -> TrainState:
+        """ShapeDtypeStruct tree of the TrainState — what launchers feed
+        ``state_shardings`` *before* restore so a sharded checkpoint is
+        assembled directly onto its destination devices."""
+        return jax.eval_shape(
+            lambda: self.init_state(jax.random.PRNGKey(self.cfg.seed)))
+
+    def restore_or_init(self, key, shardings=None) -> TrainState:
+        """``shardings``: optional TrainState-shaped tree of shardings for
+        the *current* mesh.  Threaded through to ``ckpt.restore`` so a
+        multi-device launch reshards directly from disk (each device reads
+        its own shard) instead of restoring the whole state to the default
+        single-device placement first — the OOM path on large states."""
         if self.ckpt.latest_step() is not None:
             like = jax.eval_shape(lambda: self.init_state(key))
-            state = self.ckpt.restore(like)
+            state = self.ckpt.restore(like, shardings=shardings)
             print(f"[trainer] restored step {int(state.step)} "
                   f"from {self.cfg.ckpt_dir}")
             return state

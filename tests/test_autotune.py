@@ -3,8 +3,9 @@ infeasibility reporting, and the Trainer integration.
 
 The heavy fixtures run the solver on a reduced transformer with the
 non-private algo ("sgd"), which collapses the norm-strategy and
-microbatch dimensions — a 9-candidate space (3 grad_accums x 3 remats)
-that keeps the trace count small while exercising every code path.
+microbatch dimensions — an 18-candidate space (3 grad_accums x 3 remats
+x 2 pipeline stage counts) that keeps the trace count small while
+exercising every code path.
 """
 from __future__ import annotations
 
@@ -116,7 +117,7 @@ def test_memoization_counters(ga_reports):
 
 
 def test_ga_matches_exhaustive_optimum(ga_reports, ex_report):
-    # 9-candidate space: the seeded GA must find the global optimum the
+    # 18-candidate space: the seeded GA must find the global optimum the
     # exhaustive sweep proves (deterministic, so this cannot flake)
     r1, _ = ga_reports
     assert r1.plan == ex_report.plan
@@ -124,8 +125,10 @@ def test_ga_matches_exhaustive_optimum(ga_reports, ex_report):
 
 def test_exhaustive_report_shape(ex_report):
     assert ex_report.method == "exhaustive"
-    assert ex_report.space_size == 9     # 3 grad_accums x 3 remats
-    assert ex_report.traces == 9
+    # 3 grad_accums x 3 remats x 2 pipeline stage counts (reps=2 on the
+    # reduced arch, so the pp_stages dimension is [1, 2])
+    assert ex_report.space_size == 18
+    assert ex_report.traces == 18
     assert all(s.feasible for s in ex_report.predicted)
     times = [s.pred_seconds for s in ex_report.predicted]
     assert times == sorted(times)

@@ -1,0 +1,247 @@
+"""Sharded checkpoint format (``sharded-v1``) + the resume-path bugfixes.
+
+Four regression pins from the crash-safe rework, each a real failure mode:
+
+* an async write failure (ENOSPC, ...) must re-raise from the next
+  ``wait()``/``save()`` instead of dying silently with the daemon thread;
+* interrupted saves must not leak ``.tmp_step_*`` dirs forever;
+* restoring into a structurally different tree must fail loudly, naming
+  both leaf counts (the silent zip-truncation corruption path);
+* multi-shard leaves must reassemble exactly, including for slice reads.
+
+Plus the kill-and-resume fault drill: checkpoint mid-run under Poisson
+sampling with adaptive clipping and async saves, restore in a *fresh*
+Trainer, and require the ε trajectory, the (seed, step) batch stream, and
+the final params + adaptive-clip rider state to be bit-identical to an
+uninterrupted run.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (DPConfig, OptimConfig, ShapeConfig,
+                                TrainConfig)
+from repro.core.adaptive_clip import CLIP_STATE_KEY
+from repro.train import Trainer
+from repro.train.checkpoint import (CheckpointError, CheckpointManager,
+                                    _ShardReader)
+
+from helpers import tiny_model
+
+
+def _state(key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (6, 4)),
+            "b": jax.random.normal(k2, (4,)),
+            "step": jnp.int32(3)}
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfixes
+# ---------------------------------------------------------------------------
+
+def test_async_write_failure_reraises(tmp_path, key, monkeypatch):
+    ckpt = CheckpointManager(str(tmp_path), use_async=True)
+    import repro.train.checkpoint as C
+
+    def boom(*a, **kw):
+        raise OSError(28, "No space left on device")
+
+    monkeypatch.setattr(C.np, "save", boom)
+    ckpt.save(_state(key), step=1)
+    with pytest.raises(CheckpointError, match="step 1.*NOT saved"):
+        ckpt.wait()
+    # the failure is raised once, then cleared
+    ckpt.wait()
+
+
+def test_async_write_failure_reraises_from_next_save(tmp_path, key,
+                                                     monkeypatch):
+    ckpt = CheckpointManager(str(tmp_path), use_async=True)
+    import repro.train.checkpoint as C
+    orig = C.np.save
+
+    def boom(*a, **kw):
+        raise OSError(28, "No space left on device")
+
+    monkeypatch.setattr(C.np, "save", boom)
+    ckpt.save(_state(key), step=1)
+    ckpt._thread.join()       # let the failing write land, don't consume it
+    monkeypatch.setattr(C.np, "save", orig)
+    with pytest.raises(CheckpointError, match="step 1"):
+        ckpt.save(_state(key), step=2)
+    # a failed write never produces a visible checkpoint
+    assert ckpt.steps() == []
+
+
+def test_orphaned_tmp_dirs_swept(tmp_path, key):
+    ckpt = CheckpointManager(str(tmp_path), use_async=False)
+    # a crashed save from an *earlier* step leaves its tmp dir behind
+    orphan = tmp_path / ".tmp_step_0"
+    orphan.mkdir()
+    (orphan / "0.0.npy").write_bytes(b"partial")
+    ckpt.save(_state(key), step=5)
+    assert not orphan.exists()
+    assert ckpt.steps() == [5]
+
+
+def test_structure_drift_raises_naming_both_counts(tmp_path, key):
+    ckpt = CheckpointManager(str(tmp_path), use_async=False)
+    state = _state(key)
+    ckpt.save(state, step=1)
+    grown = dict(state, extra_rider=jnp.zeros((2,)))
+    with pytest.raises(CheckpointError, match=r"3 leaves.*has 4"):
+        ckpt.restore(jax.eval_shape(lambda: grown))
+    shrunk = {"w": state["w"]}
+    with pytest.raises(CheckpointError, match=r"3 leaves.*has 1"):
+        ckpt.restore(jax.eval_shape(lambda: shrunk))
+
+
+# ---------------------------------------------------------------------------
+# shard assembly
+# ---------------------------------------------------------------------------
+
+def test_multi_shard_leaf_reassembles(tmp_path):
+    """A leaf stored as 4 shard files (2x2 grid) must reassemble exactly,
+    for the full read and for arbitrary sub-slices (the per-device read
+    path under ``jax.make_array_from_callback``)."""
+    full = np.arange(48, dtype=np.float32).reshape(8, 6)
+    rec = {"shape": [8, 6], "dtype": "float32", "shards": []}
+    for si, (r0, r1) in enumerate([(0, 4), (4, 8)]):
+        for sj, (c0, c1) in enumerate([(0, 3), (3, 6)]):
+            fname = f"0.{si * 2 + sj}.npy"
+            np.save(tmp_path / fname, full[r0:r1, c0:c1])
+            rec["shards"].append({"file": fname, "start": [r0, c0],
+                                  "stop": [r1, c1]})
+    reader = _ShardReader(str(tmp_path), rec)
+    got = reader.read((slice(None), slice(None)), np.float32)
+    np.testing.assert_array_equal(got, full)
+    # a slice crossing both shard boundaries
+    got = reader.read((slice(2, 7), slice(1, 5)), np.float32)
+    np.testing.assert_array_equal(got, full[2:7, 1:5])
+    # a slice inside a single shard reads one file only
+    got = reader.read((slice(0, 2), slice(0, 2)), np.float32)
+    np.testing.assert_array_equal(got, full[0:2, 0:2])
+
+
+def test_manifest_records_shard_bounds(tmp_path, key):
+    ckpt = CheckpointManager(str(tmp_path), use_async=False)
+    state = _state(key)
+    ckpt.save(state, step=2)
+    with open(tmp_path / "step_2" / "manifest.json") as f:
+        man = json.load(f)
+    assert man["format"] == "sharded-v1"
+    assert man["n_leaves"] == 3
+    for rec in man["leaves"]:
+        # single-device save: one shard spanning the whole leaf
+        (s,) = rec["shards"]
+        assert s["start"] == [0] * len(rec["shape"])
+        assert s["stop"] == rec["shape"]
+        assert os.path.exists(tmp_path / "step_2" / s["file"])
+
+
+def test_restore_prefers_device_callback_with_shardings(tmp_path, key):
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    ckpt = CheckpointManager(str(tmp_path), use_async=False)
+    state = _state(key)
+    ckpt.save(state, step=1)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+    out = ckpt.restore(jax.eval_shape(lambda: state), shardings=sh)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(state)):
+        assert a.sharding.is_equivalent_to(
+            NamedSharding(mesh, P()), a.ndim)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# the kill-and-resume fault drill (satellite: full resume-path regression)
+# ---------------------------------------------------------------------------
+
+SHAPE = ShapeConfig("tiny", 16, 8, "train")
+STEPS = 6
+
+
+def _drill_cfg(tmp_path):
+    return TrainConfig(
+        steps=STEPS, log_every=2, ckpt_every=3, ckpt_dir=str(tmp_path),
+        ckpt_async=True,
+        dp=DPConfig(algo="dpsgd_r", clip_norm=1.0, noise_multiplier=0.7,
+                    sampling="poisson", adaptive_clip=True),
+        optim=OptimConfig(name="adamw", lr=2e-3, warmup_steps=2,
+                          total_steps=STEPS))
+
+
+def test_kill_and_resume_drill(tmp_path, key):
+    arch, model = tiny_model("stablelm-3b")
+
+    # uninterrupted reference run
+    cfg_a = _drill_cfg(tmp_path / "uninterrupted")
+    tra = Trainer(model, cfg_a, SHAPE)
+    sta = tra.run(tra.init_state(key), install_signals=False)
+    assert int(sta.step) == STEPS
+
+    # interrupted run: train to the mid-epoch checkpoint, then "crash"
+    cfg_b = _drill_cfg(tmp_path / "interrupted")
+    trb = Trainer(model, cfg_b, SHAPE)
+    trb.run(trb.init_state(key), steps=3, install_signals=False)
+    del trb
+
+    # fresh process: a new Trainer restores and finishes the run
+    trc = Trainer(model, cfg_b, SHAPE)
+    stc = trc.restore_or_init(key)
+    assert int(stc.step) == 3
+
+    # the accountant prices the same ε trajectory at the resume point and
+    # beyond (sampling rate + noise are config-derived, not state)
+    for s in (3, STEPS):
+        np.testing.assert_allclose(trc.accountant.epsilon_at(s),
+                                   tra.accountant.epsilon_at(s),
+                                   rtol=1e-12)
+
+    # the Poisson (seed, step) batch stream continues exactly where the
+    # dead trainer's would have — masks and rows both
+    for s in (3, 4, STEPS - 1):
+        ba = tra.make_batch(s)
+        bc = trc.make_batch(s)
+        for la, lc in zip(jax.tree.leaves(ba), jax.tree.leaves(bc)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lc))
+
+    stc = trc.run(stc, install_signals=False)
+    assert int(stc.step) == STEPS
+
+    # final params bit-identical to the uninterrupted run
+    for a, b in zip(jax.tree.leaves(sta.params),
+                    jax.tree.leaves(stc.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # ... including the adaptive-clip rider state (the resume bug this
+    # drill exists to catch: a restore that drops or re-inits the rider
+    # silently changes the clip-norm trajectory)
+    for a, b in zip(jax.tree.leaves(sta.opt_state[CLIP_STATE_KEY]),
+                    jax.tree.leaves(stc.opt_state[CLIP_STATE_KEY])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_with_shardings_threaded(tmp_path, key):
+    """``Trainer.restore_or_init(shardings=...)`` reaches ``ckpt.restore``
+    (the satellite-2 fix: the kwarg used to be dropped)."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    arch, model = tiny_model("stablelm-3b")
+    cfg = _drill_cfg(tmp_path)
+    tr = Trainer(model, cfg, SHAPE)
+    tr.run(tr.init_state(key), steps=3, install_signals=False)
+
+    tr2 = Trainer(model, cfg, SHAPE)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                      tr2.abstract_state())
+    st = tr2.restore_or_init(key, shardings=sh)
+    assert int(st.step) == 3
+    leaf = jax.tree.leaves(st.params)[0]
+    assert leaf.sharding.is_equivalent_to(NamedSharding(mesh, P()),
+                                          leaf.ndim)

@@ -1,0 +1,251 @@
+"""Pipeline-parallel block stack: pipelined == sequential, exactly.
+
+``Model.pp_stages = S > 1`` reshapes the scan-stacked blocks stage-major
+and runs the shifted-buffer microbatch schedule
+(models/transformer.py ``_blocks_pipelined``).  The DP contract under
+test: per-example losses and the norm² side-channel are **bit-identical**
+to the sequential stack — the ``ctx.acc`` cotangent rides the buffer
+shift transposes, which IS the cross-stage norm² reduction — and summed
+gradients match to the grad-accum reassociation tolerance (the microbatch
+split reorders the float sum, nothing else; same pin as remat-boundary
+changes, rtol=1e-5/atol=2e-6).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, reduced
+from repro.configs.base import DPConfig
+from repro.core import make_noisy_grad_fn
+from repro.core.algo import stage_microbatches
+from repro.dist.sharding import spec_for_param, stage_axis_width
+from repro.models import build_model_for
+from repro.models.layers import pipeline_shift
+
+from helpers import make_batch, side_channel_norms_sq
+
+ARCH = reduced(ARCHS["stablelm-3b"])          # group_layers -> reps = 2
+
+
+def _models(pp_stages=2, pp_microbatches=0, remat="block"):
+    seq = build_model_for(ARCH, param_dtype="float32",
+                          compute_dtype="float32", remat=remat)
+    pipe = build_model_for(ARCH, param_dtype="float32",
+                           compute_dtype="float32", remat=remat,
+                           pp_stages=pp_stages,
+                           pp_microbatches=pp_microbatches)
+    return seq, pipe
+
+
+def _masked_batch(seed, B=8, T=16):
+    batch = make_batch(ARCH, jax.random.PRNGKey(seed), B=B, T=T)
+    rng = np.random.default_rng(seed)
+    mask = rng.random(B) < 0.7
+    if not mask.any():
+        mask[0] = True
+    return dict(batch, mask=jnp.asarray(mask))
+
+
+def _assert_grads_close(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# schedule arithmetic + shift primitive
+# ---------------------------------------------------------------------------
+
+def test_stage_microbatches_clamps_to_divisor():
+    assert stage_microbatches(8, 2) == 2          # default: one per stage
+    assert stage_microbatches(8, 2, requested=4) == 4
+    assert stage_microbatches(8, 2, requested=3) == 2  # largest divisor <= 3
+    assert stage_microbatches(8, 2, requested=100) == 8
+    assert stage_microbatches(1, 4) == 1          # dpsgd vmap degenerate
+    assert stage_microbatches(6, 4) == 3          # 4 does not divide 6
+    assert stage_microbatches(5, 2) == 1
+
+
+def test_pipeline_shift_semantics():
+    buf = jnp.arange(12.0).reshape(3, 4)
+    inject = jnp.full((4,), -1.0)
+    out = pipeline_shift(buf, inject)
+    np.testing.assert_array_equal(np.asarray(out[0]), -np.ones(4))
+    np.testing.assert_array_equal(np.asarray(out[1:]),
+                                  np.asarray(buf[:-1]))
+    # pytree version shifts every leaf in lockstep
+    out2 = pipeline_shift({"a": buf, "b": 2 * buf},
+                          {"a": inject, "b": inject})
+    np.testing.assert_array_equal(np.asarray(out2["b"][1:]),
+                                  2 * np.asarray(buf[:-1]))
+
+
+def test_pipeline_shift_transpose_is_reduction():
+    """The backward of M shifts sums a cotangent across every position it
+    visited — the cross-stage norm² reduction in one primitive."""
+    def roll(inject):
+        buf = jnp.zeros((3, 2))
+        for _ in range(3):
+            buf = pipeline_shift(buf, inject)
+        return jnp.sum(buf[-1] * jnp.arange(1.0, 3.0))
+    g = jax.grad(roll)(jnp.ones((2,)))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# construction + validation
+# ---------------------------------------------------------------------------
+
+def test_pp_stages_must_divide_reps():
+    with pytest.raises(ValueError, match="divisor"):
+        build_model_for(ARCH, param_dtype="float32",
+                        compute_dtype="float32", pp_stages=3)
+
+
+def test_pp_stages_rejected_for_image_families():
+    cnn = reduced(ARCHS["cnn-cifar10"])
+    with pytest.raises(ValueError, match="transformer"):
+        build_model_for(cnn, pp_stages=2)
+    # pp defaults are stripped, not forwarded
+    build_model_for(cnn, param_dtype="float32", compute_dtype="float32",
+                    pp_stages=1, pp_microbatches=0)
+
+
+# ---------------------------------------------------------------------------
+# forward exactness: losses + norm² side-channel bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mb", [0, 4])
+def test_pipelined_losses_bit_identical(mb, key):
+    seq, pipe = _models(pp_microbatches=mb)
+    params = seq.init(key)
+    batch = make_batch(ARCH, key, B=8, T=16)
+    from repro.core.context import DPContext
+    la, _ = seq.loss_fn(params, batch, DPContext.off())
+    lb, _ = pipe.loss_fn(params, batch, DPContext.off())
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.parametrize("strategy", ["materialize", "gram", "fused"])
+def test_pipelined_norm_side_channel_matches(strategy, key):
+    seq, pipe = _models()
+    params = seq.init(key)
+    batch = make_batch(ARCH, key, B=8, T=16)
+    a = side_channel_norms_sq(seq, params, batch, strategy=strategy)
+    b = side_channel_norms_sq(pipe, params, batch, strategy=strategy)
+    np.testing.assert_allclose(b, a, rtol=1e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# update exactness: all four algos under Poisson masks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["sgd", "dpsgd", "dpsgd_r", "dpsgd_r1f"])
+def test_pipelined_updates_match_sequential_under_mask(algo, key):
+    seq, pipe = _models()
+    params = seq.init(key)
+    batch = _masked_batch(3, B=8, T=16)
+    dp = DPConfig(enabled=algo != "sgd", algo=algo, clip_norm=0.05,
+                  noise_multiplier=0.4)
+    k = jax.random.PRNGKey(11)
+    ga, ma = make_noisy_grad_fn(seq.loss_fn, dp)(params, batch, k)
+    gb, mb = make_noisy_grad_fn(pipe.loss_fn, dp)(params, batch, k)
+    assert float(ma["realized_batch"]) == float(mb["realized_batch"])
+    _assert_grads_close(ga, gb)
+
+
+def test_pipelined_updates_match_under_augmult(key):
+    """Microbatches split on *examples*, so the K b-major/k-minor views of
+    one example always cross the stages together."""
+    K, B = 2, 4
+    seq, pipe = _models()
+    params = seq.init(key)
+    batch = make_batch(ARCH, key, B=B * K, T=16)
+    dp = DPConfig(algo="dpsgd_r", clip_norm=0.05, noise_multiplier=0.0,
+                  augmult=K)
+    k = jax.random.PRNGKey(5)
+    ga, _ = make_noisy_grad_fn(seq.loss_fn, dp)(params, batch, k)
+    gb, _ = make_noisy_grad_fn(pipe.loss_fn, dp)(params, batch, k)
+    _assert_grads_close(ga, gb)
+
+
+def test_pipelined_with_grad_accum(key):
+    seq, pipe = _models()
+    params = seq.init(key)
+    batch = make_batch(ARCH, key, B=8, T=16)
+    dp = DPConfig(algo="dpsgd_r", clip_norm=0.05, noise_multiplier=0.3)
+    k = jax.random.PRNGKey(9)
+    ga, _ = make_noisy_grad_fn(seq.loss_fn, dp, 2)(params, batch, k)
+    gb, _ = make_noisy_grad_fn(pipe.loss_fn, dp, 2)(params, batch, k)
+    _assert_grads_close(ga, gb)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules + init fingerprint
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self.devices = np.empty(tuple(sizes.values()))
+
+
+def test_spec_for_param_stage_axis():
+    mesh = _FakeMesh({"stage": 2, "data": 2, "model": 2})
+    # the scan-stacked layer dim shards over "stage", weight dim over model
+    assert spec_for_param(("layers", "embed", "mlp"), (4, 8, 16),
+                          mesh) == P("stage", None, "model")
+    # layers not divisible by the stage width -> replicated there
+    assert spec_for_param(("layers", "embed", "mlp"), (3, 8, 16),
+                          mesh) == P(None, None, "model")
+    # fsdp never puts "data" on the layers dim (only "stage" may own it)
+    assert spec_for_param(("layers", "embed"), (4, 8), mesh,
+                          fsdp=True) == P("stage", "data")
+    assert stage_axis_width(mesh) == 2
+    assert stage_axis_width(_FakeMesh({"data": 4, "model": 2})) == 1
+
+
+def test_init_fingerprint_detects_drift(key):
+    from repro.dist import init_fingerprint, verify_init_consistency
+    seq, _ = _models()
+    p1 = seq.init(key)
+    p2 = seq.init(key)
+    fp1, fp2 = init_fingerprint(p1), init_fingerprint(p2)
+    assert fp1 == fp2                       # same seed -> same fingerprint
+    assert 0 <= fp1 <= 0xFFFFFFFF
+    p3 = seq.init(jax.random.PRNGKey(123))
+    assert init_fingerprint(p3) != fp1      # value drift visible
+    # structural drift (a renamed subtree) is visible without any bytes
+    leaves = jax.tree.leaves(p1)
+    renamed = {"other": leaves[0]}
+    assert init_fingerprint(renamed) != init_fingerprint(
+        {"one": leaves[0]})
+    # single-process verify is just the fingerprint (no collective)
+    assert verify_init_consistency(p1) == fp1
+
+
+def test_pipelined_trainer_step_runs(tmp_path, key):
+    """End to end: a Trainer built on a pipelined model trains and matches
+    the sequential trainer's update to the reassociation tolerance."""
+    from repro.configs.base import OptimConfig, ShapeConfig, TrainConfig
+    from repro.train import Trainer
+    shape = ShapeConfig("tiny", 16, 8, "train")
+    mk = lambda d: TrainConfig(
+        steps=2, ckpt_every=100, ckpt_dir=str(d),
+        dp=DPConfig(algo="dpsgd_r", clip_norm=1.0, noise_multiplier=0.0),
+        optim=OptimConfig(name="adamw", lr=1e-3, warmup_steps=1,
+                          total_steps=2))
+    seq, pipe = _models()
+    tra = Trainer(seq, mk(tmp_path / "a"), shape)
+    trb = Trainer(pipe, mk(tmp_path / "b"), shape)
+    sta = tra.run(tra.init_state(key), install_signals=False)
+    stb = trb.run(trb.init_state(key), install_signals=False)
+    assert int(sta.step) == int(stb.step) == 2
+    for a, b in zip(jax.tree.leaves(sta.params),
+                    jax.tree.leaves(stb.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=2e-6)
